@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: interpret-mode Pallas vs jnp oracle wall-time.
+
+On CPU the interpret path is NOT indicative of TPU speed — the number that
+matters offline is the allclose delta (correctness) and the oracle time (a
+stable reference point across commits). Lowered-TPU timing lands when
+hardware is available.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, iters=3) -> float:
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose=True) -> List[Tuple[str, float, str]]:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    x = jax.random.normal(ks[0], (16, 1 << 16))
+    w = jax.nn.softmax(jax.random.normal(ks[1], (16,)))
+    us_k = _time(ops.fedavg_reduce, x, w)
+    us_r = _time(jax.jit(ref.fedavg_reduce_ref), x, w)
+    rows.append(("kern_fedavg_reduce", us_k, f"oracle_us={us_r:.0f}"))
+
+    q = jax.random.normal(ks[0], (1, 512, 8, 64)) * 0.3
+    k = jax.random.normal(ks[1], (1, 512, 2, 64)) * 0.3
+    v = jax.random.normal(ks[2], (1, 512, 2, 64))
+    us_k = _time(lambda q: ops.flash_attention(q, k, v), q)
+    rows.append(("kern_flash_attention", us_k, "interpret"))
+
+    xs = jax.random.normal(ks[0], (2, 512, 4, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 512, 4)))
+    A = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
+    b = jax.random.normal(ks[3], (2, 512, 32)) * 0.5
+    us_k = _time(lambda x: ops.ssd_scan(x, dt, A, b, b, jnp.ones(4))[0], xs)
+    rows.append(("kern_ssd_scan", us_k, "interpret"))
+
+    xe = jax.random.normal(ks[0], (8, 256, 512)) * 0.1
+    we = jax.random.normal(ks[1], (8, 512, 1024)) * 0.05
+    us_k = _time(ops.gmm, xe, we)
+    us_r = _time(jax.jit(ref.gmm_ref), xe, we)
+    rows.append(("kern_moe_gmm", us_k, f"oracle_us={us_r:.0f}"))
+
+    if verbose:
+        for n, us, d in rows:
+            print(f"  {n:24s} {us:12.0f}us  {d}")
+    return rows

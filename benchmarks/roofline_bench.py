@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+per (arch x shape x mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and per-chip memory.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Optional, Tuple
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(dirname: Optional[str] = None) -> List[dict]:
+    files = sorted(glob.glob(os.path.join(dirname or DRYRUN_DIR, "*.json")))
+    return [json.load(open(f)) for f in files]
+
+
+def format_row(r: dict) -> str:
+    t = r["roofline"]
+    mem = r.get("memory_analysis", {})
+    gb = (mem.get("temp_size_in_bytes", 0)
+          + mem.get("argument_size_in_bytes", 0)) / 1e9
+    ratio = r.get("useful_flops_ratio")
+    return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"comp={t['compute_s']:9.3e}s mem={t['memory_s']:9.3e}s "
+            f"coll={t['collective_s']:9.3e}s dom={t['dominant']:10s} "
+            f"6ND/HLO={ratio if ratio is None else round(ratio, 3)!s:6s} "
+            f"hbm={gb:6.1f}GB")
+
+
+def run(verbose=True) -> List[Tuple[str, float, str]]:
+    rows = []
+    recs = load_records()
+    if not recs:
+        print("  (no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all` first)")
+        return rows
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append((f"roofline_{r['case']}", 0.0, "skipped:" +
+                         r["reason"].split(":")[0]))
+            continue
+        if r["status"] != "ok":
+            rows.append((f"roofline_{r['case']}", 0.0, "ERROR"))
+            continue
+        t = r["roofline"]
+        rows.append((f"roofline_{r['case']}", r.get("compile_s", 0) * 1e6,
+                     f"dom={t['dominant']};comp={t['compute_s']:.3e};"
+                     f"mem={t['memory_s']:.3e};coll={t['collective_s']:.3e}"))
+        if verbose:
+            print("  " + format_row(r))
+    return rows

@@ -1,0 +1,55 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * fig12_*    — Fig. 1/2 analogue: schedule comparison on synthetic
+                 non-IID paper tasks under the Eq. 5 runtime model
+  * table4_*   — Table 4: relative SGD steps + wall-clock speedup
+  * roofline_* — per (arch x shape x mesh) roofline terms from the dry-run
+  * kern_*     — Pallas kernel micro-benchmarks (interpret mode)
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 4 paper tasks, more rounds")
+    ap.add_argument("--only", default=None,
+                    help="substring filter: fig12|table4|roofline|kern")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    verbose = not args.quiet
+
+    from benchmarks import (kernels_bench, roofline_bench, schedules_bench,
+                            table4_bench)
+
+    suites = []
+    if not args.only or "table4" in args.only:
+        suites.append(("table4", lambda: table4_bench.run(verbose=verbose)))
+    if not args.only or "fig12" in args.only:
+        tasks = (("sent140", "femnist", "cifar100", "shakespeare")
+                 if args.full else ("sent140", "femnist"))
+        rounds = 120 if args.full else None
+        suites.append(("fig12", lambda: schedules_bench.run(
+            tasks=tasks, rounds=rounds, verbose=verbose)))
+    if not args.only or "roofline" in args.only:
+        suites.append(("roofline", lambda: roofline_bench.run(verbose=verbose)))
+    if not args.only or "kern" in args.only:
+        suites.append(("kern", lambda: kernels_bench.run(verbose=verbose)))
+
+    rows = []
+    for name, fn in suites:
+        if verbose:
+            print(f"== {name} ==", flush=True)
+        rows.extend(fn())
+
+    print("\nname,us_per_call,derived")
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+
+
+if __name__ == "__main__":
+    main()

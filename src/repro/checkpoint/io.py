@@ -1,0 +1,57 @@
+"""Pytree checkpointing with numpy + json (no orbax offline).
+
+A checkpoint is a directory: ``arrays.npz`` (flattened leaves keyed by path)
+plus ``meta.json`` (server round state: round index, K_r, eta_r, loss-tracker
+window, rng seed...). Atomic via write-to-tmp + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params: PyTree,
+                    meta: Optional[Dict] = None) -> None:
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(os.path.abspath(path)) or ".")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(params))
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta or {}, f, indent=2, default=str)
+        if os.path.isdir(path):
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def load_checkpoint(path: str, like: PyTree) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat_like[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves), meta

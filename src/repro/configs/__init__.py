@@ -1,0 +1,33 @@
+"""Config registry: ``get_arch('<id>')`` resolves an assigned architecture.
+
+Arch ids use the exact assigned names (dots and dashes); module names use
+underscores.
+"""
+from repro.configs.base import (ArchConfig, FedConfig, MoEConfig,
+                                RuntimeModelConfig, ShapeConfig, SSMConfig)
+from repro.configs.shapes import SHAPES, get_shape
+from repro.configs.paper_tasks import PAPER_TASKS, get_paper_task
+
+from repro.configs import (gemma2_27b, llava_next_34b, mamba2_780m,
+                           mixtral_8x22b, nemotron_4_340b, phi3_5_moe_42b,
+                           qwen1_5_0_5b, qwen2_7b, whisper_tiny, zamba2_7b)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (zamba2_7b, qwen1_5_0_5b, mamba2_780m, qwen2_7b, phi3_5_moe_42b,
+              gemma2_27b, whisper_tiny, mixtral_8x22b, nemotron_4_340b,
+              llava_next_34b)
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return ARCHS[name[: -len("-reduced")]].reduced()
+    return ARCHS[name]
+
+
+__all__ = [
+    "ArchConfig", "FedConfig", "MoEConfig", "RuntimeModelConfig",
+    "ShapeConfig", "SSMConfig", "ARCHS", "SHAPES", "PAPER_TASKS",
+    "get_arch", "get_shape", "get_paper_task",
+]

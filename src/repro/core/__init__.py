@@ -1,0 +1,12 @@
+# The paper's primary contribution: FedAvg with decaying local SGD steps.
+from repro.core.fedavg import FedAvgTrainer, History, make_eval_fn, make_round_fn
+from repro.core.loss_tracker import LossTracker, PlateauDetector
+from repro.core.runtime_model import RoundCost, RuntimeModel
+from repro.core.schedules import (DecayController, ETA_SCHEDULES, K_SCHEDULES,
+                                  quantize_k, schedule_preview)
+from repro.core import theory
+
+__all__ = ["FedAvgTrainer", "History", "make_eval_fn", "make_round_fn",
+           "LossTracker", "PlateauDetector", "RoundCost", "RuntimeModel",
+           "DecayController", "ETA_SCHEDULES", "K_SCHEDULES", "quantize_k",
+           "schedule_preview", "theory"]

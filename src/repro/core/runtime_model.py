@@ -1,0 +1,75 @@
+"""The paper's FedAvg runtime model (§3.2, Eq. 3-5) and compute accounting.
+
+Nominal per-round wall-clock for client c:
+    W_r^c = |x|/D^c + K_r * beta^c + |x|/U^c          (Eq. 3)
+The server waits for the straggler:
+    W_r = max_c W_r^c                                  (Eq. 4)
+Homogeneous-client total over R rounds:
+    W = R(|x|/D + |x|/U) + beta * sum_r K_r            (Eq. 5)
+
+We implement both the homogeneous model the paper evaluates with and an
+optional heterogeneous straggler model (lognormal client speed spread) for
+sensitivity studies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import RuntimeModelConfig
+
+
+@dataclass
+class RoundCost:
+    wall_clock_s: float
+    sgd_steps: int
+    uplink_mbit: float
+    downlink_mbit: float
+
+
+class RuntimeModel:
+    def __init__(self, model_size_mbit: float, cfg: RuntimeModelConfig,
+                 clients_per_round: int = 1, heterogeneity: float = 0.0,
+                 seed: int = 0):
+        """heterogeneity: sigma of lognormal multipliers on beta/U/D per
+        sampled client; 0 reproduces the paper's homogeneous Eq. 5."""
+        self.size = model_size_mbit
+        self.cfg = cfg
+        self.n = clients_per_round
+        self.het = heterogeneity
+        self._rng = np.random.default_rng(seed)
+
+    def comm_time(self) -> float:
+        return self.size / self.cfg.download_mbps + self.size / self.cfg.upload_mbps
+
+    def round_cost(self, k: int) -> RoundCost:
+        """Eq. 3/4: straggler max over the round's client draws."""
+        base = (self.size / self.cfg.download_mbps
+                + k * self.cfg.beta_seconds
+                + self.size / self.cfg.upload_mbps)
+        if self.het > 0:
+            mult = self._rng.lognormal(0.0, self.het, size=self.n)
+            per_client = (self.size / self.cfg.download_mbps
+                          + k * self.cfg.beta_seconds * mult
+                          + self.size / self.cfg.upload_mbps)
+            wall = float(np.max(per_client))
+        else:
+            wall = base
+        return RoundCost(wall_clock_s=wall,
+                         sgd_steps=k * self.n,
+                         uplink_mbit=self.size * self.n,
+                         downlink_mbit=self.size * self.n)
+
+    def total_time(self, ks: Sequence[int]) -> float:
+        """Eq. 5 (homogeneous)."""
+        r = len(ks)
+        return r * self.comm_time() + self.cfg.beta_seconds * float(np.sum(ks))
+
+    def total_sgd_steps(self, ks: Sequence[int]) -> int:
+        return int(np.sum(ks)) * self.n
+
+    def relative_sgd_steps(self, ks: Sequence[int], k0: int) -> float:
+        """Table 4: schedule compute relative to K-eta-fixed."""
+        return float(np.sum(ks)) / (k0 * len(ks))

@@ -1,0 +1,5 @@
+from repro.data import partition, pipeline, synthetic
+from repro.data.synthetic import FederatedData, make_lm_clients, make_paper_task
+
+__all__ = ["partition", "pipeline", "synthetic", "FederatedData",
+           "make_paper_task", "make_lm_clients"]

@@ -1,0 +1,56 @@
+"""Federated batching: turn per-client datasets into fixed-shape round
+tensors consumable by a jitted FedAvg round.
+
+One FedAvg round with N clients and K local steps needs, per client, K
+minibatches of size b. We materialise these as stacked arrays of shape
+``(N, K, b, *feature)`` — fixed shapes so XLA compiles one round function per
+distinct K (K-decay schedules change K across rounds; see the K-quantization
+note in DESIGN.md §5).
+
+Sampling is with replacement within a client's local dataset (clients own few
+samples; the paper's K0*b frequently exceeds n_c too).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import FederatedData
+
+
+def sample_clients(rng: np.random.Generator, data: FederatedData,
+                   n: int) -> np.ndarray:
+    """Uniform client sampling without replacement (Algorithm 1, line 3)."""
+    return rng.choice(data.num_clients, size=min(n, data.num_clients),
+                      replace=False)
+
+
+def round_batches(rng: np.random.Generator, data: FederatedData,
+                  client_ids: Sequence[int], k: int,
+                  batch_size: int) -> Dict[str, np.ndarray]:
+    """Build the (N, K, b, ...) tensors for one round."""
+    xs, ys = [], []
+    for c in client_ids:
+        n_c = len(data.client_y[c])
+        idx = rng.integers(0, n_c, size=(k, batch_size))
+        xs.append(data.client_x[c][idx])
+        ys.append(data.client_y[c][idx])
+    return {"x": np.stack(xs), "y": np.stack(ys)}
+
+
+def client_weights(data: FederatedData, client_ids: Sequence[int]) -> np.ndarray:
+    """Per-round aggregation weights p_c, renormalised over the round's
+    participants (FedAvg, Algorithm 1 line 11 uses the uniform 1/|C_r|;
+    weighting by n_c is the Eq. 1-faithful generalisation)."""
+    w = np.array([len(data.client_y[c]) for c in client_ids], dtype=np.float64)
+    return (w / w.sum()).astype(np.float32)
+
+
+def val_batches(data: FederatedData, batch_size: int) -> List[Dict[str, np.ndarray]]:
+    n = len(data.val_y)
+    out = []
+    for i in range(0, n - batch_size + 1, batch_size):
+        out.append({"x": data.val_x[i:i + batch_size],
+                    "y": data.val_y[i:i + batch_size]})
+    return out or [{"x": data.val_x, "y": data.val_y}]

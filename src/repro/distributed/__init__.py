@@ -1,0 +1,3 @@
+from repro.distributed import sharding, strategies
+
+__all__ = ["sharding", "strategies"]

@@ -1,0 +1,261 @@
+"""Sharding rules: params / batches / decode caches -> PartitionSpec trees.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod (repro.launch.mesh). Rules are path-based over the param pytrees
+produced by ``repro.models`` and divisibility-aware: a dim is only sharded if
+the mesh axis divides it evenly, so every assigned architecture lowers on the
+fixed 16x16 mesh even when (e.g.) num_heads=28 or kv=8 don't divide 16 —
+GSPMD then picks the collectives, which the roofline analysis reads back.
+
+Two parameter layouts:
+* ``1d`` (tensor-parallel): matmul weights sharded over ``model`` only —
+  column-parallel for up-projections (wq/wk/wv/gate/up/lm_head/in_proj),
+  row-parallel for down-projections (wo/down/out_proj). Params fit per-chip
+  for archs up to ~40B at bf16 on a 256-chip pod.
+* ``2d`` (tensor-parallel + FSDP): additionally shard the other matmul dim
+  over ``data`` (ZeRO-3-style all-gather at use). Used for mixtral-8x22b and
+  nemotron-4-340b.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+# parent names whose kernels are column-parallel (shard output dim) vs
+# row-parallel (shard input/contracting dim)
+COL_PARALLEL = {"wq", "wk", "wv", "gate", "up", "lm_head", "in_proj",
+                "fc", "fc1", "fc2", "out"}
+ROW_PARALLEL = {"wo", "down", "out_proj"}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= _axis_size(mesh, a)
+    return size > 1 and dim % size == 0
+
+
+def use_2d_params(cfg: ArchConfig, mesh: Mesh,
+                  bytes_per_param: int = 2,
+                  per_chip_budget_gb: float = 6.0) -> bool:
+    """2d layout when 1d model-axis sharding would blow the per-chip budget."""
+    from repro.models import registry
+    model = _axis_size(mesh, "model")
+    gb = registry.param_count(cfg) * bytes_per_param / model / 1e9
+    return gb > per_chip_budget_gb
+
+
+def _param_rule(path_keys: Tuple[str, ...], shape: Tuple[int, ...],
+                cfg: ArchConfig, mesh: Mesh, two_d: bool,
+                fsdp_axes: Tuple[str, ...] = ("data",)) -> P:
+    """PartitionSpec for one param leaf; leading stack dims get None."""
+    keys = [str(k) for k in path_keys]
+    last = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    n_lead = len(shape) - _rule_ndim(last, parent, shape)
+    lead = (None,) * max(n_lead, 0)
+
+    def spec(*tail):
+        return P(*(lead + tail))
+
+    data_ax = (fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]) \
+        if two_d else None
+
+    if last == "embedding":                      # (V, d)
+        v_ax = "model" if _div(shape[-2], mesh, "model") else None
+        d_ax = data_ax if (two_d and _div(shape[-1], mesh, data_ax)) else None
+        return spec(v_ax, d_ax)
+    if last == "kernel":
+        if parent in COL_PARALLEL:               # (in, out): col-parallel
+            out_ax = "model" if _div(shape[-1], mesh, "model") else None
+            in_ax = data_ax if (two_d and _div(shape[-2], mesh, data_ax)) else None
+            return spec(in_ax, out_ax)
+        if parent in ROW_PARALLEL:               # (in, out): row-parallel
+            in_ax = "model" if _div(shape[-2], mesh, "model") else None
+            out_ax = data_ax if (two_d and _div(shape[-1], mesh, data_ax)) else None
+            return spec(in_ax, out_ax)
+        if parent == "router":                   # small: replicated
+            return spec(*(None,) * 2)
+        if len(shape) >= 4:                      # conv kernels (cnn): replicate
+            return spec(*(None,) * 4)
+        return spec(*(None,) * min(len(shape), 2))
+    if last == "bias":
+        if parent in COL_PARALLEL and _div(shape[-1], mesh, "model"):
+            return spec("model")
+        return spec(None)
+    if last in ("gate", "up", "down") and len(shape) >= 3:
+        # MoE expert banks: (E, d, f) / (E, f, d). Expert-parallel over
+        # 'model' when E divides it; otherwise shard the wide FFN dim.
+        E = shape[-3]
+        if _div(E, mesh, "model"):
+            d_ax = data_ax if (two_d and _div(shape[-2], mesh, data_ax)) else None
+            return spec("model", d_ax, None)
+        wide = -1 if last in ("gate", "up") else -2
+        axes = [None, None, None]
+        if _div(shape[wide], mesh, "model"):
+            axes[wide] = "model"
+        other = -2 if wide == -1 else -1
+        if two_d and _div(shape[other], mesh, data_ax):
+            axes[other] = data_ax
+        return spec(*axes)
+    if last in ("conv_w", "conv_b", "A_log", "D", "dt_bias", "scale"):
+        return spec(*(None,) * _rule_ndim(last, parent, shape))
+    # default: replicate
+    return P(*(None,) * len(shape))
+
+
+def _rule_ndim(last: str, parent: str, shape) -> int:
+    """Trailing dims the rule applies to (rest are stacked leading dims)."""
+    if last == "embedding" or last == "kernel":
+        if len(shape) >= 4 and last == "kernel" and parent not in COL_PARALLEL \
+                and parent not in ROW_PARALLEL and parent != "router":
+            return 4                              # cnn conv kernel
+        return 2
+    if last in ("gate", "up", "down") and len(shape) >= 3:
+        return 3
+    if last in ("bias", "conv_b", "A_log", "D", "dt_bias", "scale"):
+        return 1
+    if last == "conv_w":
+        return 2
+    return len(shape)
+
+
+def param_pspecs(cfg: ArchConfig, shapes: PyTree, mesh: Mesh,
+                 two_d: bool = False,
+                 fsdp_axes: Tuple[str, ...] = ("data",)) -> PyTree:
+    """PartitionSpec tree matching a params (shape) pytree.
+
+    ``fsdp_axes``: mesh axes the FSDP (2d) dim shards over — ("data",) on a
+    single pod; ("data", "pod") to additionally shard params across pods
+    (needed for nemotron-4-340b, whose f32 round state exceeds one pod's
+    HBM)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        specs.append(_param_rule(keys, tuple(leaf.shape), cfg, mesh, two_d,
+                                 fsdp_axes))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def client_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes the FL client dimension shards over (strategy A)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fed_batch_pspecs(batch_shapes: PyTree, mesh: Mesh,
+                     strategy: str) -> PyTree:
+    """Round batches (N, K, b, ...).
+
+    Strategy A (parallel): N sharded over pod+data.
+    Strategy B (sequential): N is a scan axis; batch dim b shards over data,
+    and the client axis shards over 'pod' when present (hierarchical FL).
+    """
+    ca = client_axes(mesh)
+
+    def rule(leaf):
+        nd = len(leaf.shape)
+        if strategy == "parallel":
+            return P(ca, *(None,) * (nd - 1))
+        # sequential: (N, K, b, ...): b over data if divisible
+        axes = [None] * nd
+        if "pod" in mesh.axis_names and leaf.shape[0] % _axis_size(mesh, "pod") == 0:
+            axes[0] = "pod"
+        if nd >= 3 and leaf.shape[2] % _axis_size(mesh, "data") == 0:
+            axes[2] = "data"
+        return P(*axes)
+
+    return jax.tree.map(rule, batch_shapes)
+
+
+def serve_batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def serve_input_pspecs(batch: int, mesh: Mesh) -> P:
+    """Token batch (B,) for decode; (B, S) for prefill handled by caller."""
+    ba = serve_batch_axes(mesh)
+    size = 1
+    for a in ba:
+        size *= _axis_size(mesh, a)
+    return P(ba) if batch % size == 0 else P(None)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shapes: PyTree, mesh: Mesh) -> PyTree:
+    """Decode-cache PartitionSpecs.
+
+    KV caches (..., B, S, KV, hd): prefer batch over data; heads over model
+    when divisible, else shard S over model (and over data too when B=1,
+    e.g. long_500k single-stream decode).
+    SSM states (..., B, H, N, P): batch over data, heads over model.
+    """
+    ba = serve_batch_axes(mesh)
+    dsize = 1
+    for a in ba:
+        dsize *= _axis_size(mesh, a)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        last = keys[-1]
+        shape = leaf.shape
+        if last in ("ks", "vs"):
+            # int8-cache scales (..., B, L, KV, 1): batch over data only
+            lead = (None,) * (len(shape) - 4)
+            b_ax2: Any = ba if shape[-4] % dsize == 0 else None
+            specs.append(P(*lead, b_ax2, None, None, None))
+        elif last in ("k", "v", "xk", "xv"):
+            B, S, KV, hd = shape[-4:]
+            lead = (None,) * (len(shape) - 4)
+            b_ax: Any = ba if B % dsize == 0 else None
+            msize = _axis_size(mesh, "model")
+            if KV % msize == 0:
+                specs.append(P(*lead, b_ax, None, "model", None))
+            elif hd % msize == 0:
+                # kv heads don't divide the model axis: shard head_dim —
+                # unlike seq-sharding this keeps the decode cache update
+                # (dynamic slice at a traced position) gather-free
+                specs.append(P(*lead, b_ax, None, None, "model"))
+            elif b_ax is None and S % (dsize * msize) == 0:
+                specs.append(P(*lead, None, ba + ("model",), None, None))
+            elif S % msize == 0:
+                specs.append(P(*lead, b_ax, "model", None, None))
+            else:
+                specs.append(P(*lead, b_ax, None, None, None))
+        elif last == "ssm":
+            B, H, N, Pd = shape[-4:]
+            lead = (None,) * (len(shape) - 4)
+            b_ax = ba if B % dsize == 0 else None
+            h_ax = "model" if H % _axis_size(mesh, "model") == 0 else None
+            specs.append(P(*lead, b_ax, h_ax, None, None))
+        elif last == "conv":
+            B, t, C = shape[-3:]
+            lead = (None,) * (len(shape) - 3)
+            b_ax = ba if B % dsize == 0 else None
+            c_ax = "model" if C % _axis_size(mesh, "model") == 0 else None
+            specs.append(P(*lead, b_ax, None, c_ax))
+        else:
+            specs.append(P(*(None,) * len(shape)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

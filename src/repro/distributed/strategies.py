@@ -1,0 +1,216 @@
+"""Mesh-level FedAvg train steps and serving steps for the assigned archs.
+
+Strategy A — ``parallel`` (cross-device FL): the round's N clients live on
+the mesh ``data`` (x ``pod``) axes via ``vmap``; each lane runs K local SGD
+steps (``lax.scan``); the weighted model average contracts the client axis —
+GSPMD turns that into the aggregation all-reduce. Params stay 1d
+(tensor-parallel over ``model``).
+
+Strategy B — ``sequential`` (cross-silo FL, 100B+ archs): one fully-sharded
+(2d: model x data FSDP) parameter set; clients are processed by a
+``lax.scan``; each client's K steps use the whole mesh; weighted deltas
+accumulate in f32. With a ``pod`` axis, client groups split across pods
+(hierarchical FL) and the final average all-reduces over ``pod``.
+
+Serving: ``serve_step`` = one decoded token against a KV/SSM cache;
+``prefill_step`` = full-sequence forward returning last-token logits + the
+decode states.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import registry
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# federated train steps
+# ---------------------------------------------------------------------------
+
+def _local_sgd(loss_fn, params, client_batches, eta):
+    """K steps of SGD from the round-start params. Leaves of
+    ``client_batches`` have leading K axis."""
+    def step(p, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+        p = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype), p, grads)
+        return p, loss
+
+    final, losses = jax.lax.scan(step, params, client_batches)
+    return final, losses[0]
+
+
+def make_fed_train_step(cfg: ArchConfig, *, strategy: str = "parallel",
+                        remat: bool = True, moe_path: str = "dispatch",
+                        use_kernel: bool = False, use_kernel_avg: bool = False,
+                        act_spec=None, client_spmd_axes=None,
+                        param_specs=None, acc_dtype=jnp.bfloat16,
+                        attn_kv_spec=None, moe_shards=1, moe_spmd_axes=None):
+    """Returns train_step(params, batches, weights, eta) ->
+    (new_params, mean_first_step_loss).
+
+    ``client_spmd_axes``: mesh axes the client vmap dim is sharded over —
+    required when ``act_spec`` constrains activations inside the vmap
+    (otherwise GSPMD replicates the client dim at the constraint)."""
+    loss_fn = registry.loss_fn(cfg, remat=remat, moe_path=moe_path,
+                               use_kernel=use_kernel, act_spec=act_spec,
+                               attn_kv_spec=attn_kv_spec,
+                               moe_shards=moe_shards,
+                               moe_spmd_axes=moe_spmd_axes)
+
+    if strategy == "parallel":
+        def train_step(params, batches, weights, eta):
+            # batches leaves: (N, K, b, ...); weights: (N,)
+            client_params, first_losses = jax.vmap(
+                lambda b: _local_sgd(loss_fn, params, b, eta),
+                spmd_axis_name=client_spmd_axes)(batches)
+            if use_kernel_avg:
+                from repro.kernels import ops as kops
+                new_params = kops.fedavg_reduce_tree(client_params, weights)
+            else:
+                w32 = weights.astype(jnp.float32)
+                new_params = jax.tree.map(
+                    lambda cp: jnp.einsum("c,c...->...", w32,
+                                          cp.astype(jnp.float32)).astype(cp.dtype),
+                    client_params)
+            return new_params, jnp.mean(first_losses)
+
+        return train_step
+
+    if strategy == "sequential":
+        def constrain(tree):
+            # keep the f32 delta accumulator on the params' 2d sharding —
+            # without this GSPMD replicates full f32 weights inside the
+            # client scan (measured +8 GB/chip on nemotron-340b)
+            if param_specs is None:
+                return tree
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                tree, param_specs)
+
+        def train_step(params, batches, weights, eta):
+            # batches leaves: (G, Ng, K, b, ...); weights: (G, Ng)
+            def per_group(group_batches, group_w):
+                def client(acc, inp):
+                    cb, w = inp
+                    cp, first = _local_sgd(loss_fn, params, cb, eta)
+                    cp = constrain(cp)
+                    # delta accumulation: bf16 by default (f32 doubles the
+                    # carry and XLA:CPU double-buffers scan carries; the
+                    # f32 ablation is recorded in EXPERIMENTS §Perf)
+                    acc = constrain(jax.tree.map(
+                        lambda a, c: (a + w.astype(acc_dtype)
+                                      * c.astype(acc_dtype)).astype(acc_dtype),
+                        acc, cp))
+                    return acc, first
+
+                zeros = constrain(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dtype), params))
+                acc, firsts = jax.lax.scan(client, zeros,
+                                           (group_batches, group_w))
+                return acc, firsts
+
+            accs, firsts = jax.vmap(per_group,
+                                    spmd_axis_name=client_spmd_axes)(batches,
+                                                                     weights)
+            new_params = jax.tree.map(
+                lambda p, a: jnp.sum(a, axis=0).astype(p.dtype), params, accs)
+            return new_params, jnp.mean(firsts)
+
+        return train_step
+
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def fed_batch_specs(cfg: ArchConfig, shape: ShapeConfig, *, n_clients: int,
+                    k_local: int, groups: Optional[int] = None,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one federated round's batches.
+
+    parallel (groups=None): leaves (N, K, b, ...);
+    sequential (groups>=1):  leaves (G, N/G, K, b, ...).
+    N * b == shape.global_batch (the assigned input shape is the total
+    per-local-step batch across the round's clients).
+    """
+    assert shape.global_batch % n_clients == 0, (shape, n_clients)
+    b = shape.global_batch // n_clients
+    S = shape.seq_len
+    if groups is not None:
+        assert n_clients % groups == 0
+        lead: Tuple[int, ...] = (groups, n_clients // groups, k_local, b)
+    else:
+        lead = (n_clients, k_local, b)
+    i32 = jnp.int32
+    if cfg.arch_type == "audio":
+        return {"tokens": jax.ShapeDtypeStruct(lead + (S,), i32),
+                "audio_embeds": jax.ShapeDtypeStruct(
+                    lead + (cfg.encoder_seq, cfg.d_model), dtype)}
+    specs = {"tokens": jax.ShapeDtypeStruct(
+        lead + (S - (cfg.num_patch_tokens if cfg.arch_type == "vlm" else 0),),
+        i32)}
+    if cfg.arch_type == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            lead + (cfg.num_patch_tokens, cfg.d_model), dtype)
+    return specs
+
+
+def fed_weight_specs(n_clients: int,
+                     groups: Optional[int] = None) -> jax.ShapeDtypeStruct:
+    if groups is not None:
+        return jax.ShapeDtypeStruct((groups, n_clients // groups), jnp.float32)
+    return jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig, *, long_mode: bool = False,
+                    moe_path: str = "dispatch", ring: bool = False):
+    decode = registry.decode_fn(cfg, long_mode=long_mode, moe_path=moe_path,
+                                ring=ring)
+
+    def serve_step(params, cache, token, pos):
+        return decode(params, cache, token, pos)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, long_mode: bool = False,
+                      moe_path: str = "dispatch", use_kernel: bool = False,
+                      act_spec=None, attn_kv_spec=None, moe_shards=1,
+                      moe_spmd_axes=None):
+    """Full-sequence prefill: returns (last-token logits, decode states).
+
+    The readout is applied to the LAST position only — materialising the
+    full (B, S, V) logits just to slice one row cost 100+ GB/chip on the
+    256k-vocab archs (measured in the first dry-run sweep).
+    """
+    if registry.is_encdec(cfg):
+        def prefill_step(params, batch):
+            from repro.models import encdec
+            logits, _ = encdec.forward_encdec(params, cfg, batch["tokens"],
+                                              batch["audio_embeds"])
+            return logits[:, -1]
+        return prefill_step
+
+    from repro.models import transformer
+    fwd_kw = dict(moe_path=moe_path, use_kernel=use_kernel, act_spec=act_spec,
+                  attn_kv_spec=attn_kv_spec, moe_shards=moe_shards,
+                  moe_spmd_axes=moe_spmd_axes,
+                  global_window=(registry.LONG_GLOBAL_WINDOW if long_mode else None))
+
+    def prefill_step(params, batch):
+        feats, aux, states = transformer.forward_lm(
+            params, cfg, batch["tokens"], batch.get("patch_embeds"),
+            return_states=True, return_features=True, **fwd_kw)
+        logits = transformer._readout(params, cfg, feats[:, -1:])
+        return logits[:, 0], states
+
+    return prefill_step

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+<name>.py  — pl.pallas_call + BlockSpec VMEM tiling
+ops.py     — public jit'd wrappers + model-layout adapters
+ref.py     — pure-jnp oracles (ground truth for the kernel tests)
+
+Validated in interpret=True mode on CPU; the identical pallas_call lowers
+to Mosaic on TPU (the deployment target).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

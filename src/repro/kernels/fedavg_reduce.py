@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: FedAvg server aggregation  x_bar = sum_c p_c * x_c.
+
+The paper's server op (Algorithm 1, line 11) is a memory-bound weighted
+reduction over the client axis. On TPU we tile the (flattened) parameter
+vector into VMEM-resident (N x BM) blocks, broadcast the (N,) weight vector
+from a VMEM column, and fuse multiply + reduce + cast in one pass — one HBM
+read of the client stack, one HBM write of the average, no intermediate
+(N, M) f32 tensor.
+
+Block layout:
+  x:   (N, M)  -> blocks (N, BM), grid = (M // BM,)
+  w:   (N, 1)  -> whole, broadcast within block
+  out: (1, M)  -> blocks (1, BM)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _kernel(w_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (N, BM)
+    w = w_ref[...].astype(jnp.float32)          # (N, 1)
+    o_ref[...] = jnp.sum(x * w, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fedavg_reduce(client_stack: jnp.ndarray, weights: jnp.ndarray, *,
+                  block: int = DEFAULT_BLOCK,
+                  interpret: bool = False) -> jnp.ndarray:
+    """client_stack: (N, M); weights: (N,) -> (M,)."""
+    n, m = client_stack.shape
+    pad = (-m) % block
+    if pad:
+        client_stack = jnp.pad(client_stack, ((0, 0), (0, pad)))
+    mp = m + pad
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // block,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),      # weights column
+            pl.BlockSpec((n, block), lambda i: (0, i)),  # client block
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, mp), client_stack.dtype),
+        interpret=interpret,
+    )(weights[:, None], client_stack)
+    return out[0, :m]

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: grouped matmul for MoE expert FFNs.
+
+After capacity dispatch (repro.models.moe), expert inputs sit in a dense
+(E, C, d) tensor; each expert applies its own (d, f) weight. The kernel is a
+blocked matmul with the expert index as the outermost grid dim, MXU-aligned
+(BC x BD) @ (BD x BF) tiles, and an f32 VMEM accumulator across the d-loop.
+
+Grid: (E, C/BC, f/BF, d/BD) — d innermost/sequential for the accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BC = 128
+DEFAULT_BF = 256
+DEFAULT_BD = 512
+
+
+def _fit(dim: int, blk: int) -> int:
+    """Largest divisor of dim that is <= blk (halving first, then linear)."""
+    blk = min(blk, dim)
+    while blk > 1 and dim % blk:
+        blk //= 2
+    while dim % blk:
+        blk -= 1
+    return max(blk, 1)
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_scr, *, nd: int):
+    idd = pl.program_id(3)
+
+    @pl.when(idd == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0]                                  # (BC, BD)
+    w = w_ref[0]                                  # (BD, BF)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(idd == nd - 1)
+    def _finish():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def gmm(x, w, *, bc: int = DEFAULT_BC, bf: int = DEFAULT_BF,
+        bd: int = DEFAULT_BD, interpret: bool = False):
+    """x: (E, C, d) @ w: (E, d, f) -> (E, C, f)."""
+    E, C, d = x.shape
+    f = w.shape[-1]
+    bc = _fit(C, bc)
+    bf = _fit(f, bf)
+    bd = _fit(d, bd)
+    kernel = functools.partial(_kernel, nd=d // bd)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // bc, f // bf, d // bd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ic, jf, kd: (e, ic, kd)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, kd: (e, kd, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ic, jf, kd: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

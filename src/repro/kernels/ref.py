@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: each kernel test sweeps shapes and
+dtypes and asserts allclose against these functions (kernels run in
+interpret=True mode on CPU; on TPU the same pallas_call lowers to Mosaic).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_reduce_ref(client_params: jnp.ndarray,
+                      weights: jnp.ndarray) -> jnp.ndarray:
+    """x: (N, M), w: (N,) -> (M,) = sum_c w_c * x_c (f32 accumulate)."""
+    return jnp.einsum("c,cm->m", weights.astype(jnp.float32),
+                      client_params.astype(jnp.float32)
+                      ).astype(client_params.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd), H = KV * G. -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd)
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if window is not None:
+        mask = mask & (kj > qi - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, b, c, d, *, chunk: int):
+    """Mamba2 SSD oracle (delegates to the model's chunked contraction).
+
+    x: (B,S,H,P), dt: (B,S,H), a: (H,) negative rates, b/c: (B,S,N), d: (H,).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x.astype(jnp.float32), dt.astype(jnp.float32),
+                       a.astype(jnp.float32), b.astype(jnp.float32),
+                       c.astype(jnp.float32), d.astype(jnp.float32), chunk)
+
+
+def gmm_ref(x, w) -> jnp.ndarray:
+    """Grouped matmul oracle: x (E, C, d) @ w (E, d, f) -> (E, C, f)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_ffn_ref(x, gate, up, down, *, mlp_type: str = "swiglu") -> jnp.ndarray:
+    """Full gated expert FFN oracle: x (E, C, d) -> (E, C, d)."""
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(gmm_ref(x, gate).astype(jnp.float32))
+        h = h * gmm_ref(x, up).astype(jnp.float32)
+    else:
+        h = jax.nn.gelu(gmm_ref(x, up).astype(jnp.float32), approximate=True)
+    return gmm_ref(h.astype(x.dtype), down)

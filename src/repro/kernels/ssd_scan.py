@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (state-space duality).
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): the sequence is
+split into Q-length chunks; within a chunk the recurrence is evaluated as
+two MXU-friendly matmuls (C B^T masked by the decay kernel L, then applied
+to X), and a (N x P) recurrent state carries across chunks in VMEM scratch
+— the inter-chunk part is sequential but O(S/Q) steps of tiny matmuls.
+
+Grid: (B*H, S/Q) — chunk axis innermost/sequential, state persists across
+it and resets at chunk 0.
+
+Inputs are pre-arranged by the wrapper to per-(batch,head) layout:
+  x:  (BH, NC, Q, P)   head inputs
+  dt: (BH, NC, Q, 1)   softplus'd step sizes
+  a:  (BH, NC, Q, 1)   per-step log-decay = dt * A_h  (precomputed)
+  b:  (BH, NC, Q, N)   input projections (group-broadcast)
+  c:  (BH, NC, Q, N)   output projections
+Outputs: y (BH, NC, Q, P), final state (BH, N, P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fs_ref, state_scr, *,
+            q: int, nc: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)         # (Q, 1)
+    a = a_ref[0, 0].astype(jnp.float32)           # (Q, 1)  (= dt*A <= 0)
+    b = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+
+    cs = jnp.cumsum(a, axis=0)                    # (Q, 1)
+
+    # intra-chunk: (C B^T) o L, L[i,j] = exp(cs_i - cs_j) for i >= j
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.exp(cs - cs.T)                    # (Q, Q) via broadcast
+    gate = jnp.where(ii >= jj, decay, 0.0) * cb   # (Q, Q)
+    xdt = x * dt                                  # (Q, P)
+    y = jax.lax.dot_general(gate, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # inter-chunk: y += exp(cs_i) * C_i . S_prev
+    state = state_scr[...]                        # (N, P)
+    y = y + jnp.exp(cs) * jax.lax.dot_general(
+        c, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: S = exp(cs_last) * S_prev + sum_j exp(cs_last - cs_j) dt_j B_j x_j^T
+    last = cs[q - 1:q, :]                         # (1, 1)
+    sdec = jnp.exp(last - cs)                     # (Q, 1)
+    bw = b * (sdec * dt)                          # (Q, N)
+    new_state = state * jnp.exp(last) + jax.lax.dot_general(
+        bw, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    state_scr[...] = new_state
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        fs_ref[0] = new_state.astype(fs_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(x, dt, a, b, c, *, interpret: bool = False):
+    """x: (BH, NC, Q, P); dt/a: (BH, NC, Q, 1); b/c: (BH, NC, Q, N).
+
+    Returns (y (BH, NC, Q, P), final_state (BH, N, P)). The D-skip term and
+    head/group broadcasting live in the ops.py wrapper.
+    """
+    BH, NC, Q, P = x.shape
+    N = b.shape[-1]
+    kernel = functools.partial(_kernel, q=Q, nc=NC)
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=(BH, NC),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda bh, ic: (bh, ic, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, NC, Q, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, fs

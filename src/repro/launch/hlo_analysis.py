@@ -1,0 +1,128 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``compiled.cost_analysis()`` provides HLO FLOPs and bytes accessed.
+Collective bytes are NOT in cost_analysis: we parse the post-SPMD optimized
+HLO (``compiled.as_text()``) and sum the result-shape bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment-given).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# e.g.:  %ar = bf16[16,1024]{1,0} all-reduce(%x), replica_groups=...
+# result may also be a tuple: (bf16[8]{0}, bf16[8]{0}) all-reduce(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective in optimized HLO.
+
+    ``-start``/``-done`` async pairs are counted once (on ``-start``; the
+    matching ``-done`` carries no payload of its own in our accounting).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + b
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {"flops": self.flops, "bytes_accessed": self.bytes_accessed,
+                "collective_bytes": self.collective_bytes,
+                "n_chips": self.n_chips, "compute_s": self.compute_s,
+                "memory_s": self.memory_s, "collective_s": self.collective_s,
+                "dominant": self.dominant}
+
+
+def roofline(flops: float, bytes_accessed: float, collective_bytes: float,
+             n_chips: int, links_per_chip: int = 4) -> RooflineTerms:
+    """Three roofline terms in seconds (assignment formulas).
+
+    cost_analysis() reports the whole (already SPMD-partitioned) module, i.e.
+    per-chip work; we therefore divide the aggregate peak rates accordingly:
+    compute_s = per_chip_flops / peak; memory_s = per_chip_bytes / hbm_bw;
+    collective_s = per_chip_collective_bytes / (links * link_bw).
+    """
+    return RooflineTerms(
+        flops=flops, bytes_accessed=bytes_accessed,
+        collective_bytes=collective_bytes, n_chips=n_chips,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=collective_bytes / (links_per_chip * ICI_BW),
+    )
+
+
+def model_flops(param_count: int, tokens: int, active_param_count:
+                Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE)."""
+    n = active_param_count if active_param_count is not None else param_count
+    return 6.0 * n * tokens

@@ -1,0 +1,243 @@
+"""Loop-aware accounting over optimized (post-SPMD) HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, ignoring
+trip counts — useless for a train step that scans over K local steps and L/c
+layer cycles (verified: K=1 and K=4 report identical FLOPs). This module
+re-derives loop-aware totals directly from the HLO text:
+
+1. split the module into computations;
+2. find every ``while`` op, its body/condition computations, and the trip
+   count (the ``s32[] constant(T)`` compared against the induction variable
+   in the condition computation; LT -> T, LE -> T+1);
+3. propagate multipliers from ENTRY through the while-nesting (and plain
+   ``calls=``/``to_apply=`` edges with multiplier 1);
+4. per computation, account:
+   - dot FLOPs: 2 * prod(result dims) * prod(contracting dims),
+   - collective result bytes (all-reduce / all-gather / reduce-scatter /
+     all-to-all / collective-permute; ``-start``/``-done`` pairs once),
+   - fusion-boundary traffic: result + operand bytes of top-level ops
+     (parameters/constants/GTE/bitcast/tuple excluded) — an HBM-traffic
+     estimate at the granularity roofline analysis needs.
+
+All shapes in the optimized module are per-chip (post-partitioning), so
+totals are per-chip; multiply by chip count for global numbers.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# header line: `%name (params...) -> type {` or `ENTRY %name (...) -> ... {`
+# (params may contain nested parens for tuple types, so match loosely)
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$")
+_OP_LINE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE = re.compile(r"while\(.*?\), condition=%([\w.\-]+), body=%([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
+_TRIP = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_NO_TRAFFIC = ("parameter(", "constant(", "get-tuple-element(", "bitcast(",
+               "tuple(", "after-all(", "partition-id(", "replica-id(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    # name -> result type string (for operand lookup)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = Computation(m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        cur.lines.append(line)
+    return comps
+
+
+def _result_type(rhs: str) -> str:
+    """Everything before the op name, e.g. 'f32[16,4]{1,0} ' or tuple types."""
+    # op name is the last bare word before '('
+    m = re.search(r"([\w\-]+)\(", rhs)
+    return rhs[: m.start()] if m else rhs
+
+
+@dataclass
+class LoopAwareStats:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    trip_counts: Dict[str, int] = field(default_factory=dict)
+    unparsed_trips: int = 0
+
+
+def _condition_trip(comp: Computation) -> Optional[int]:
+    text = "\n".join(comp.lines)
+    consts = _TRIP.findall(text)
+    if not consts:
+        return None
+    trip = int(consts[-1])
+    if "direction=LE" in text:
+        trip += 1
+    return trip
+
+
+def analyze(hlo: str) -> LoopAwareStats:
+    comps = split_computations(hlo)
+    entry = comps.get("__entry__")
+    stats = LoopAwareStats()
+    if entry is None:
+        return stats
+
+    # per-computation edges: (child_name, multiplier)
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    for comp in comps.values():
+        if comp.name == "__entry__":
+            continue
+        e: List[Tuple[str, int]] = []
+        for line in comp.lines:
+            wm = _WHILE.search(line)
+            if wm:
+                cond_name, body_name = wm.group(1), wm.group(2)
+                trip = None
+                if cond_name in comps:
+                    trip = _condition_trip(comps[cond_name])
+                if trip is None:
+                    trip = 1
+                    stats.unparsed_trips += 1
+                stats.trip_counts[body_name] = trip
+                e.append((body_name, trip))
+                continue
+            for cal in _CALLS.findall(line):
+                if cal in comps:
+                    e.append((cal, 1))
+        edges[comp.name] = e
+
+    # propagate multipliers from entry (graph is a DAG of computations)
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        mult[name] = mult.get(name, 0) + m
+        for child, k in edges.get(name, []):
+            visit(child, m * k)
+
+    visit(entry.name, 1)
+
+    # account per computation
+    for comp in comps.values():
+        if comp.name == "__entry__":
+            continue
+        m = mult.get(comp.name, 0)
+        if m == 0:
+            continue
+        pending_ops: Dict[str, str] = {}  # name -> result type (for operands)
+        for line in comp.lines:
+            om = _OP_LINE.match(line)
+            if not om:
+                continue
+            rhs = om.group(2)
+            pending_ops[om.group(1)] = _result_type(rhs)
+            if any(sk in rhs for sk in _NO_TRAFFIC):
+                continue
+            rtype = _result_type(rhs)
+            rbytes = _shape_bytes(rtype)
+
+            # collectives (count -start once, skip -done)
+            cm = re.search(r"\b(all-reduce|all-gather|reduce-scatter|"
+                           r"all-to-all|collective-permute)(-start|-done)?\(",
+                           rhs)
+            if cm:
+                if cm.group(2) == "-done":
+                    continue
+                op = cm.group(1)
+                stats.collective_counts[op] = stats.collective_counts.get(op, 0) + m
+                stats.collective_bytes_by_op[op] = \
+                    stats.collective_bytes_by_op.get(op, 0.0) + rbytes * m
+                stats.collective_bytes += rbytes * m
+                stats.traffic_bytes += rbytes * m
+                continue
+
+            if re.search(r"\bdot\(", rhs):
+                flops = _dot_flops(rhs, pending_ops)
+                stats.dot_flops += flops * m
+
+            if " while(" in rhs or rhs.startswith("while("):
+                continue  # body accounted separately
+            # traffic: result + named operands
+            t = rbytes
+            args = re.search(r"\(([^)]*)\)", rhs[rhs.find("("):])
+            if args:
+                for a in re.findall(r"%([\w.\-]+)", args.group(1)):
+                    if a in pending_ops:
+                        t += _shape_bytes(pending_ops[a])
+            stats.traffic_bytes += t * m
+    return stats
+
+
+def _dot_flops(rhs: str, shapes: Dict[str, str]) -> float:
+    """2 * prod(result dims) * prod(lhs contracting dim sizes)."""
+    rd = _shape_dims(_result_type(rhs))
+    if rd is None:
+        return 0.0
+    _, rdims = rd
+    out = 1
+    for d in rdims:
+        out *= d
+    lhs_m = re.search(r"dot\(%([\w.\-]+),", rhs)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    if not lhs_m or not cm or lhs_m.group(1) not in shapes:
+        return 2.0 * out  # contracted size unknown; lower bound
+    ld = _shape_dims(shapes[lhs_m.group(1)])
+    if ld is None:
+        return 2.0 * out
+    _, ldims = ld
+    contract = 1
+    for idx in cm.group(1).split(","):
+        if idx and int(idx) < len(ldims):
+            contract *= ldims[int(idx)]
+    return 2.0 * out * contract

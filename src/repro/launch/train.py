@@ -1,0 +1,94 @@
+"""Production federated-training launcher.
+
+Composes: an assigned architecture config (optionally reduced for CPU), the
+synthetic federated data pipeline, the FedAvg engine with the paper's decay
+schedules, the Eq. 3-5 runtime model, and checkpointing.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \\
+        --rounds 50 --k-schedule rounds --checkpoint /tmp/ckpt
+
+On a real TPU pod the same step functions are jit'd with the shardings from
+repro.distributed (see dryrun.py for the exact in/out sharding assembly);
+on CPU this trains the reduced config end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCHS, get_arch
+from repro.configs.base import FedConfig, RuntimeModelConfig
+from repro.core import FedAvgTrainer, RuntimeModel
+from repro.data import make_lm_clients
+from repro.models import registry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--clients", type=int, default=24)
+    ap.add_argument("--clients-per-round", type=int, default=6)
+    ap.add_argument("--k0", type=int, default=8)
+    ap.add_argument("--eta0", type=float, default=0.05)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--k-schedule", default="rounds",
+                    choices=("fixed", "rounds", "error", "step", "cosine", "dsgd"))
+    ap.add_argument("--eta-schedule", default="fixed",
+                    choices=("fixed", "rounds", "error", "step"))
+    ap.add_argument("--k-quantize", action="store_true")
+    ap.add_argument("--server-optimizer", default="avg",
+                    choices=("avg", "fedadam"))
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n_params = registry.param_count(cfg)
+    print(f"[train] {cfg.name}: {n_params:,} params, "
+          f"K-schedule={args.k_schedule}, eta-schedule={args.eta_schedule}")
+
+    data = make_lm_clients(np.random.default_rng(args.seed),
+                           num_clients=args.clients, vocab=cfg.vocab_size,
+                           seq_len=args.seq)
+    model_loss = registry.loss_fn(cfg, moe_path="dense")
+    loss_fn = lambda p, b: model_loss(p, {"tokens": b["x"]})
+
+    fed = FedConfig(total_clients=args.clients,
+                    clients_per_round=args.clients_per_round,
+                    rounds=args.rounds, k0=args.k0, eta0=args.eta0,
+                    batch_size=args.batch_size,
+                    loss_window=max(args.rounds // 8, 3),
+                    k_schedule=args.k_schedule, eta_schedule=args.eta_schedule,
+                    k_quantize=args.k_quantize,
+                    server_optimizer=args.server_optimizer, seed=args.seed)
+    rt = RuntimeModel(n_params * 32 / 1e6, RuntimeModelConfig(beta_seconds=0.05),
+                      fed.clients_per_round)
+    params = registry.init(jax.random.PRNGKey(args.seed), cfg)
+    trainer = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    h = trainer.run(args.rounds, verbose=False)
+    step = max(args.rounds // 10, 1)
+    for i in range(0, args.rounds, step):
+        print(f"[train] round {h.rounds[i]:4d} K={h.k[i]:3d} "
+              f"eta={h.eta[i]:.4f} loss={h.train_loss[i]:.4f} "
+              f"simW={h.wall_clock_s[i]:.0f}s steps={h.sgd_steps[i]}")
+    print(f"[train] final loss {h.train_loss[-1]:.4f} "
+          f"(start {h.train_loss[0]:.4f}); total steps {h.sgd_steps[-1]}, "
+          f"simulated wall-clock {h.wall_clock_s[-1]:.0f}s")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, trainer.params,
+                        meta={"arch": cfg.name, "rounds": args.rounds,
+                              "k_schedule": args.k_schedule,
+                              "final_loss": h.train_loss[-1]})
+        print(f"[train] checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models import (attention, encdec, layers, moe, registry, small,
+                          ssm, transformer)
+
+__all__ = ["attention", "encdec", "layers", "moe", "registry", "small",
+           "ssm", "transformer"]

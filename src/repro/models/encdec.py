@@ -1,0 +1,181 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The mel + conv frontend is stubbed per the assignment: the encoder consumes
+precomputed frame embeddings of shape (batch, encoder_seq, d_model). We
+implement the full transformer backbone: bidirectional encoder self-attention,
+causal decoder self-attention, decoder->encoder cross-attention, LayerNorm +
+GELU, sinusoidal positions (Whisper uses sinusoidal encoder / learned decoder
+positions; we use sinusoidal for both — parameter-free, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, layers
+
+PyTree = Any
+
+
+def _enc_block_init(rng, cfg: ArchConfig, dtype):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "ln1": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+        "attn": attention.attn_init(r1, cfg, dtype),
+        "ln2": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+        "mlp": layers.mlp_init(r2, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+    }
+
+
+def _dec_block_init(rng, cfg: ArchConfig, dtype):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "ln1": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+        "self_attn": attention.attn_init(r1, cfg, dtype),
+        "ln_x": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+        "cross_attn": attention.cross_attention_init(r2, cfg, dtype),
+        "ln2": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+        "mlp": layers.mlp_init(r3, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+    }
+
+
+def init_encdec(rng, cfg: ArchConfig, dtype=jnp.float32) -> PyTree:
+    r_emb, r_enc, r_dec = jax.random.split(rng, 3)
+    enc_rngs = jax.random.split(r_enc, cfg.encoder_layers)
+    dec_rngs = jax.random.split(r_dec, cfg.num_layers)
+    return {
+        "embed": layers.embedding_init(r_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_stack": jax.vmap(lambda r: _enc_block_init(r, cfg, dtype))(enc_rngs),
+        "enc_norm": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+        "dec_stack": jax.vmap(lambda r: _dec_block_init(r, cfg, dtype))(dec_rngs),
+        "final_norm": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+    }
+
+
+def encode(params, cfg: ArchConfig, audio_embeds):
+    """audio_embeds: (B, S_enc, d) stub frontend output -> encoder states."""
+    B, S, _ = audio_embeds.shape
+    pos = layers.sinusoidal_positions(S, cfg.d_model).astype(audio_embeds.dtype)
+    x = audio_embeds + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    # Encoder attention is bidirectional (attention() is causal) — inline it.
+    @jax.checkpoint
+    def enc_block(x, bp):
+        xn = layers.norm_apply(cfg.norm_type, bp["ln1"], x)
+        q, k, v = attention._project_qkv(bp["attn"], cfg, xn, positions, rope=False)
+        scores = attention._gqa_scores(q, k, None)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = attention._gqa_combine(probs, v)
+        out = layers.dense_apply(bp["attn"]["wo"], out.reshape(B, S, -1))
+        x = x + out
+        xn = layers.norm_apply(cfg.norm_type, bp["ln2"], x)
+        return x + layers.mlp_apply(bp["mlp"], xn, cfg.mlp_type), None
+
+    x, _ = jax.lax.scan(enc_block, x, params["enc_stack"])
+    return layers.norm_apply(cfg.norm_type, params["enc_norm"], x)
+
+
+def forward_encdec(params, cfg: ArchConfig, tokens, audio_embeds, *,
+                   remat: bool = False, return_features: bool = False):
+    """Training/prefill forward. Returns (logits|features, aux=0)."""
+    enc_out = encode(params, cfg, audio_embeds)
+    B, S = tokens.shape
+    pos = layers.sinusoidal_positions(S, cfg.d_model)
+    x = layers.embedding_apply(params["embed"], tokens) + pos[None].astype(
+        params["embed"]["embedding"].dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, bp):
+        h, _ = attention.attention(
+            bp["self_attn"], cfg, layers.norm_apply(cfg.norm_type, bp["ln1"], x),
+            positions, rope=False)
+        x = x + h
+        enc_kv = attention.cross_attention_kv(bp["cross_attn"], cfg, enc_out)
+        x = x + attention.cross_attention(
+            bp["cross_attn"], cfg, layers.norm_apply(cfg.norm_type, bp["ln_x"], x),
+            enc_kv)
+        xn = layers.norm_apply(cfg.norm_type, bp["ln2"], x)
+        return x + layers.mlp_apply(bp["mlp"], xn, cfg.mlp_type), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_stack"])
+    if return_features:
+        return x, jnp.zeros((), jnp.float32)
+    x = layers.norm_apply(cfg.norm_type, params["final_norm"], x)
+    logits = layers.embedding_attend(params["embed"], x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_encdec(params, cfg: ArchConfig, batch, *, remat: bool = False):
+    # chunked readout+xent (repro.models.transformer._chunked_xent works on
+    # this param layout too: tied 'embed' + 'final_norm') — the full f32
+    # (B, S, 51865) logits block cost ~45 GB/chip in the first dry-run sweep
+    from repro.models import transformer as tr
+    feats, aux = forward_encdec(params, cfg, batch["tokens"],
+                                batch["audio_embeds"], remat=remat,
+                                return_features=True)
+    tokens = batch["tokens"]
+    mask = batch.get("mask")
+    B, S = tokens.shape
+    if B * S * cfg.vocab_size >= tr.LOSS_CHUNK_MIN_ELEMENTS and S > tr.LOSS_CHUNK:
+        loss = tr._chunked_xent(params, cfg, feats[:, :-1], tokens[:, 1:],
+                                mask[:, 1:].astype(jnp.float32)
+                                if mask is not None else None)
+    else:
+        logits = tr._readout(params, cfg, feats)
+        loss = tr.xent_loss(logits[:, :-1], tokens[:, 1:], mask)
+    return loss, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache_encdec(params, cfg: ArchConfig, audio_embeds, max_seq: int,
+                      dtype=jnp.float32):
+    """Run the encoder once; precompute per-layer cross K/V; allocate self cache."""
+    enc_out = encode(params, cfg, audio_embeds)
+    B = enc_out.shape[0]
+
+    def per_layer(bp):
+        k, v = attention.cross_attention_kv(bp["cross_attn"], cfg, enc_out)
+        return {"xk": k, "xv": v}
+
+    cross = jax.vmap(per_layer)(params["dec_stack"])
+    shape = (cfg.num_layers, B, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"cross": cross,
+            "k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step_encdec(params, cfg: ArchConfig, cache, token, pos):
+    """One decoder token. token: (B,); returns (logits (B,V), new cache)."""
+    B = token.shape[0]
+    pos_emb = layers.sinusoidal_positions(1, cfg.d_model)  # approx: pos 0 basis
+    x = layers.embedding_apply(params["embed"], token[:, None])
+    # use true position phase
+    full = layers.sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(full, pos, 1, axis=0)[None].astype(x.dtype)
+
+    def body(x, scan_in):
+        bp, ck, cv, cross = scan_in
+        h, nk, nv = attention.attention_decode(
+            bp["self_attn"], cfg, layers.norm_apply(cfg.norm_type, bp["ln1"], x),
+            ck, cv, pos, rope=False)
+        x = x + h
+        x = x + attention.cross_attention(
+            bp["cross_attn"], cfg, layers.norm_apply(cfg.norm_type, bp["ln_x"], x),
+            (cross["xk"], cross["xv"]))
+        xn = layers.norm_apply(cfg.norm_type, bp["ln2"], x)
+        return x + layers.mlp_apply(bp["mlp"], xn, cfg.mlp_type), (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["dec_stack"], cache["k"],
+                                         cache["v"], cache["cross"]))
+    x = layers.norm_apply(cfg.norm_type, params["final_norm"], x)
+    logits = layers.embedding_attend(params["embed"], x)
+    new_cache = {"cross": cache["cross"], "k": nk, "v": nv}
+    return logits[:, 0], new_cache

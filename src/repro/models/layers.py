@@ -1,0 +1,166 @@
+"""Core layer primitives (pure-functional JAX; no flax offline).
+
+Every layer is a pair of functions: ``<name>_init(rng, ...) -> params`` and
+``<name>_apply(params, x, ...) -> y``. Params are nested dicts of jnp arrays
+so sharding rules can pattern-match on path names.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(rng, shape, stddev, dtype):
+    return (stddev * jax.random.normal(rng, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def lecun_init(rng, shape, fan_in, dtype):
+    return normal_init(rng, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim, out_dim, *, bias=False, dtype=jnp.float32):
+    krng, _ = jax.random.split(rng)
+    p = {"kernel": lecun_init(krng, (in_dim, out_dim), in_dim, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["kernel"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm_init(kind, dim, dtype=jnp.float32):
+    return layernorm_init(dim, dtype) if kind == "layernorm" else rmsnorm_init(dim, dtype)
+
+
+def norm_apply(kind, p, x):
+    return layernorm_apply(p, x) if kind == "layernorm" else rmsnorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_init(rng, vocab, dim, dtype=jnp.float32):
+    return {"embedding": normal_init(rng, (vocab, dim), dim ** -0.5, dtype)}
+
+
+def embedding_apply(p, ids):
+    return jnp.take(p["embedding"], ids, axis=0)
+
+
+def embedding_attend(p, x):
+    """Tied-readout logits: x @ E^T."""
+    return x @ p["embedding"].T
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    half = dim // 2
+    div = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d_model, d_ff, mlp_type, dtype=jnp.float32):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "gate": dense_init(r1, d_model, d_ff, dtype=dtype),
+            "up": dense_init(r2, d_model, d_ff, dtype=dtype),
+            "down": dense_init(r3, d_ff, d_model, dtype=dtype),
+        }
+    # gelu / relu2: plain two-matrix MLP
+    return {
+        "up": dense_init(r1, d_model, d_ff, dtype=dtype),
+        "down": dense_init(r2, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, mlp_type):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense_apply(p["gate"], x)) * dense_apply(p["up"], x)
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(dense_apply(p["gate"], x), approximate=True) * dense_apply(p["up"], x)
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(dense_apply(p["up"], x), approximate=True)
+    elif mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(dense_apply(p["up"], x)))
+    else:
+        raise ValueError(f"unknown mlp_type {mlp_type}")
+    return dense_apply(p["down"], h)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

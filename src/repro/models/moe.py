@@ -1,0 +1,153 @@
+"""Mixture-of-Experts layer: top-k router + expert FFN bank.
+
+Two execution paths:
+
+* ``dense``   — every expert computes every token, masked-combined. Exact,
+  simple, used as the correctness oracle and for reduced smoke configs.
+* ``dispatch``— capacity-based sorted dispatch (argsort by expert id ->
+  fixed-capacity slots -> grouped expert matmul -> weighted combine).
+  FLOP-honest (only top-k experts' compute appears in HLO) and shardable:
+  tokens over ``data``, expert bank over ``model`` (expert parallelism).
+  This is the production path; ``kernels/moe_gmm`` implements its grouped
+  matmul with explicit VMEM tiling.
+
+Aux load-balance loss follows Switch/Mixtral: E * sum_e f_e * P_e.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+
+def moe_init(rng, cfg: ArchConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, m.num_experts
+    r = jax.random.split(rng, 4)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": {"kernel": layers.normal_init(r[0], (d, E), scale, dtype)},
+        "gate": layers.normal_init(r[1], (E, d, f), scale, dtype),
+        "up": layers.normal_init(r[2], (E, d, f), scale, dtype),
+        "down": layers.normal_init(r[3], (E, f, d), 1.0 / math.sqrt(f), dtype),
+    }
+    return p
+
+
+def _route(p, cfg: ArchConfig, xf):
+    """xf: (T,d) -> (weights (T,k), ids (T,k), aux_loss)."""
+    m = cfg.moe
+    logits = (xf @ p["router"]["kernel"]).astype(jnp.float32)   # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)                      # (T,k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # load-balance aux: E * sum_e (fraction routed to e) * (mean prob of e)
+    E = m.num_experts
+    one_hot = jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32)   # top-1 fraction
+    f_e = jnp.mean(one_hot, axis=0)
+    P_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * P_e)
+    return w.astype(xf.dtype), ids, aux
+
+
+def _expert_ffn(p, cfg: ArchConfig, xe):
+    """xe: (E, C, d) -> (E, C, d) through each expert's gated FFN."""
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, p["up"])
+    else:  # gelu fallback
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["up"]), approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, p["down"])
+
+
+def moe_apply_dense(p, cfg: ArchConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle path: all experts on all tokens. x: (B,S,d)."""
+    B, S, d = x.shape
+    m = cfg.moe
+    xf = x.reshape(-1, d)
+    w, ids, aux = _route(p, cfg, xf)
+    outs = _expert_ffn(p, cfg, jnp.broadcast_to(xf, (m.num_experts,) + xf.shape))
+    # outs: (E,T,d); combine weighted by routing
+    comb = jnp.zeros((xf.shape[0], m.num_experts), x.dtype)
+    comb = comb.at[jnp.arange(xf.shape[0])[:, None], ids].add(w)
+    y = jnp.einsum("te,etd->td", comb, outs)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_dispatch(p, cfg: ArchConfig, x, *, use_kernel: bool = False):
+    """Production path: capacity-based sorted dispatch. x: (B,S,d)."""
+    B, S, d = x.shape
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    w, ids, aux = _route(p, cfg, xf)
+
+    capacity = int(math.ceil(T * k / E * m.capacity_factor))
+    capacity = max(8, -(-capacity // 8) * 8)                    # pad to 8
+
+    flat_ids = ids.reshape(-1)                                  # (T*k,)
+    flat_src = jnp.repeat(jnp.arange(T), k)                     # token index
+    flat_w = w.reshape(-1)
+
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    # rank within expert = position - start offset of that expert
+    counts = jnp.bincount(sorted_ids, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k) - starts[sorted_ids]
+    keep = rank < capacity
+    slot = jnp.where(keep, sorted_ids * capacity + rank, E * capacity)
+
+    # dispatch (extra dummy slot absorbs dropped tokens)
+    disp = jnp.zeros((E * capacity + 1, d), x.dtype)
+    disp = disp.at[slot].add(xf[flat_src[order]])
+    xe = disp[:-1].reshape(E, capacity, d)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        ye = kops.moe_gmm(xe, p["gate"], p["up"], p["down"], mlp_type=cfg.mlp_type)
+    else:
+        ye = _expert_ffn(p, cfg, xe)
+
+    yf = ye.reshape(E * capacity, d)
+    yf = jnp.concatenate([yf, jnp.zeros((1, d), x.dtype)], axis=0)
+    contrib = yf[slot] * (flat_w[order] * keep)[:, None]        # (T*k, d)
+    y = jnp.zeros((T, d), x.dtype).at[flat_src[order]].add(contrib)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_dispatch_sharded(p, cfg: ArchConfig, x, *, shards: int,
+                               spmd_axes=None, use_kernel: bool = False):
+    """Shard-local dispatch: tokens are split along the sequence into
+    ``shards`` groups (one per mesh shard of the token-sharded axis, bound
+    via ``spmd_axes``); each group runs capacity dispatch locally, so the
+    argsort/scatter buffers stay sharded. GSPMD inserts the expert-weight
+    resharding collectives (the expert-parallel all-to-all pattern emerges
+    from the einsum against the model-sharded expert banks).
+    """
+    B, S, d = x.shape
+    assert S % shards == 0, (S, shards)
+    xs = jnp.moveaxis(x.reshape(B, shards, S // shards, d), 1, 0)
+
+    def local(xl):
+        return moe_apply_dispatch(p, cfg, xl, use_kernel=use_kernel)
+
+    ys, auxs = jax.vmap(local, spmd_axis_name=spmd_axes)(xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, d), jnp.mean(auxs)
+
+
+def moe_apply(p, cfg: ArchConfig, x, *, path: str = "dispatch",
+              use_kernel: bool = False, shards: int = 1, spmd_axes=None):
+    if path == "dense":
+        return moe_apply_dense(p, cfg, x)
+    if path == "dispatch_sharded" and shards > 1:
+        return moe_apply_dispatch_sharded(p, cfg, x, shards=shards,
+                                          spmd_axes=spmd_axes,
+                                          use_kernel=use_kernel)
+    return moe_apply_dispatch(p, cfg, x, use_kernel=use_kernel)

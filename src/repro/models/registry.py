@@ -1,0 +1,175 @@
+"""Unified model API over all architecture families.
+
+The FedAvg engine, launcher and dry-run all talk to models through:
+
+    init(rng, cfg, dtype)                 -> params
+    loss_fn(cfg)(params, batch, **kw)     -> (scalar, metrics)
+    init_cache(params, cfg, batch, seq)   -> decode cache
+    decode_fn(cfg)(params, cache, token, pos) -> (logits, cache)
+    input_specs(cfg, shape, ...)          -> ShapeDtypeStruct stand-ins
+    param_count(cfg)                      -> int (no allocation)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, small, transformer
+
+PyTree = Any
+
+# long-context mode: cap on "global" layers' attention span (DESIGN.md §2.5)
+LONG_GLOBAL_WINDOW = 32768
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.arch_type == "audio"
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> PyTree:
+    if is_encdec(cfg):
+        return encdec.init_encdec(rng, cfg, dtype)
+    return transformer.init_lm(rng, cfg, dtype)
+
+
+def loss_fn(cfg: ArchConfig, *, remat: bool = False, moe_path: str = "dispatch",
+            use_kernel: bool = False, act_spec=None, attn_kv_spec=None,
+            moe_shards=1, moe_spmd_axes=None):
+    if is_encdec(cfg):
+        def enc_fn(params, batch):
+            return encdec.loss_encdec(params, cfg, batch, remat=remat)
+        return enc_fn
+
+    def fn(params, batch):
+        return transformer.loss_lm(params, cfg, batch, remat=remat,
+                                   moe_path=moe_path, use_kernel=use_kernel,
+                                   act_spec=act_spec, attn_kv_spec=attn_kv_spec,
+                                   moe_shards=moe_shards,
+                                   moe_spmd_axes=moe_spmd_axes)
+    return fn
+
+
+def forward_fn(cfg: ArchConfig, *, long_mode: bool = False,
+               moe_path: str = "dispatch", use_kernel: bool = False):
+    gw = LONG_GLOBAL_WINDOW if long_mode else None
+    if is_encdec(cfg):
+        def fn(params, batch):
+            return encdec.forward_encdec(params, cfg, batch["tokens"],
+                                         batch["audio_embeds"])
+        return fn
+
+    def fn(params, batch):
+        return transformer.forward_lm(params, cfg, batch["tokens"],
+                                      batch.get("patch_embeds"),
+                                      global_window=gw, moe_path=moe_path,
+                                      use_kernel=use_kernel)
+    return fn
+
+
+def init_cache(params, cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.float32, audio_embeds=None, *, ring: bool = False,
+               long_mode: bool = False, quant: bool = False):
+    if is_encdec(cfg):
+        return encdec.init_cache_encdec(params, cfg, audio_embeds, max_seq, dtype)
+    gw = LONG_GLOBAL_WINDOW if long_mode else None
+    return transformer.init_cache_lm(cfg, batch, max_seq, dtype, ring=ring,
+                                     global_window=gw, quant=quant)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                enc_batch: Optional[int] = None, *, ring: bool = False,
+                long_mode: bool = False, quant: bool = False):
+    """ShapeDtypeStruct tree for a decode cache (dry-run, no allocation)."""
+    if is_encdec(cfg):
+        def fake():
+            params = init(jax.random.PRNGKey(0), cfg, dtype)
+            audio = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), dtype)
+            return encdec.init_cache_encdec(params, cfg, audio, max_seq, dtype)
+        return jax.eval_shape(fake)
+    gw = LONG_GLOBAL_WINDOW if long_mode else None
+    return jax.eval_shape(
+        lambda: transformer.init_cache_lm(cfg, batch, max_seq, dtype,
+                                          ring=ring, global_window=gw,
+                                          quant=quant))
+
+
+def decode_fn(cfg: ArchConfig, *, long_mode: bool = False,
+              moe_path: str = "dispatch", ring: bool = False):
+    gw = LONG_GLOBAL_WINDOW if long_mode else None
+    if is_encdec(cfg):
+        def fn(params, cache, token, pos):
+            return encdec.decode_step_encdec(params, cfg, cache, token, pos)
+        return fn
+
+    def fn(params, cache, token, pos):
+        return transformer.decode_step_lm(params, cfg, cache, token, pos,
+                                          global_window=gw, moe_path=moe_path,
+                                          ring=ring)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — never allocates)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step of the given kind.
+
+    train/prefill: the full (global_batch, seq) token batch (+ modality stubs).
+    decode: one token per sequence (+ position scalar); the KV cache is a
+    separate argument supplied by ``cache_specs``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.arch_type == "audio":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "audio_embeds": jax.ShapeDtypeStruct((B, cfg.encoder_seq,
+                                                      cfg.d_model), dtype),
+            }
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S - (cfg.num_patch_tokens
+                                                 if cfg.arch_type == "vlm" else 0)),
+                                                i32)}
+        if cfg.arch_type == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patch_tokens, cfg.d_model), dtype)
+        return specs
+    # decode: one new token
+    return {"token": jax.ShapeDtypeStruct((B,), i32)}
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (runtime model needs |x|)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _param_count_cached(cfg: ArchConfig) -> int:
+    shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+    leaves = jax.tree.leaves(shapes)
+    total = 0
+    for leaf in leaves:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return int(total)
+
+
+def param_count(cfg: ArchConfig) -> int:
+    return _param_count_cached(cfg)
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """MoE: params touched per token (top-k of E experts)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    expert_params = 3 * cfg.d_model * cfg.d_ff * E * cfg.num_layers
+    return total - expert_params + expert_params * k // E

@@ -1,0 +1,191 @@
+"""The paper's four benchmark models (Table 1), pure JAX.
+
+* Sent140:     binary linear classifier on 5k bag-of-words (convex).
+* FEMNIST:     200-200 ReLU fully-connected DNN, 62-way softmax.
+* CIFAR100:    2x [3x3 conv + 2x2 maxpool] + 512 FC + softmax.
+* Shakespeare: 79->8 embedding, 2x stacked GRU(128), softmax.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# linear (Sent140)
+# ---------------------------------------------------------------------------
+
+def linear_init(rng, input_dim: int, num_classes: int, dtype=jnp.float32):
+    return {"out": layers.dense_init(rng, input_dim, num_classes, bias=True,
+                                     dtype=dtype)}
+
+
+def linear_apply(params, x):
+    return layers.dense_apply(params["out"], x)
+
+
+# ---------------------------------------------------------------------------
+# DNN (FEMNIST): 784 -> 200 -> 200 -> 62
+# ---------------------------------------------------------------------------
+
+def dnn_init(rng, input_dim: int, num_classes: int, hidden: int = 200,
+             dtype=jnp.float32):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "fc1": layers.dense_init(r1, input_dim, hidden, bias=True, dtype=dtype),
+        "fc2": layers.dense_init(r2, hidden, hidden, bias=True, dtype=dtype),
+        "out": layers.dense_init(r3, hidden, num_classes, bias=True, dtype=dtype),
+    }
+
+
+def dnn_apply(params, x):
+    h = jax.nn.relu(layers.dense_apply(params["fc1"], x))
+    h = jax.nn.relu(layers.dense_apply(params["fc2"], h))
+    return layers.dense_apply(params["out"], h)
+
+
+# ---------------------------------------------------------------------------
+# CNN (CIFAR100)
+# ---------------------------------------------------------------------------
+
+def _conv_init(rng, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    return {"kernel": layers.lecun_init(rng, (kh, kw, cin, cout), fan_in, dtype),
+            "bias": jnp.zeros((cout,), dtype)}
+
+
+def _conv_apply(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["kernel"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["bias"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def cnn_init(rng, input_shape: Tuple[int, int, int], num_classes: int,
+             channels: Tuple[int, int] = (32, 64), hidden: int = 512,
+             dtype=jnp.float32):
+    h, w, c = input_shape
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    flat = (h // 4) * (w // 4) * channels[1]
+    return {
+        "conv1": _conv_init(r1, 3, 3, c, channels[0], dtype),
+        "conv2": _conv_init(r2, 3, 3, channels[0], channels[1], dtype),
+        "fc": layers.dense_init(r3, flat, hidden, bias=True, dtype=dtype),
+        "out": layers.dense_init(r4, hidden, num_classes, bias=True, dtype=dtype),
+    }
+
+
+def cnn_apply(params, x):
+    """x: (B, H, W, C)."""
+    h = _maxpool2(jax.nn.relu(_conv_apply(params["conv1"], x)))
+    h = _maxpool2(jax.nn.relu(_conv_apply(params["conv2"], h)))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(layers.dense_apply(params["fc"], h))
+    return layers.dense_apply(params["out"], h)
+
+
+# ---------------------------------------------------------------------------
+# GRU (Shakespeare): emb 8, 2x GRU(128), per-step softmax
+# ---------------------------------------------------------------------------
+
+def _gru_cell_init(rng, in_dim, hidden, dtype):
+    r1, r2 = jax.random.split(rng)
+    scale_x = 1.0 / math.sqrt(in_dim)
+    scale_h = 1.0 / math.sqrt(hidden)
+    return {
+        "wx": layers.normal_init(r1, (in_dim, 3 * hidden), scale_x, dtype),
+        "wh": layers.normal_init(r2, (hidden, 3 * hidden), scale_h, dtype),
+        "b": jnp.zeros((3 * hidden,), dtype),
+    }
+
+
+def _gru_cell(p, h, x):
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    r, z, n_x = jnp.split(gates, 3, axis=-1)
+    # split recurrent contribution for candidate gate per GRU definition
+    xg = x @ p["wx"][:, -n_x.shape[-1]:]
+    hg = h @ p["wh"][:, -n_x.shape[-1]:]
+    r = jax.nn.sigmoid(r)
+    z = jax.nn.sigmoid(z)
+    n = jnp.tanh(xg + r * hg + p["b"][-n_x.shape[-1]:])
+    return (1 - z) * n + z * h
+
+
+def gru_init(rng, vocab: int, num_classes: int, emb: int = 8,
+             hidden: int = 128, dtype=jnp.float32):
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    return {
+        "embed": layers.embedding_init(r1, vocab, emb, dtype),
+        "gru1": _gru_cell_init(r2, emb, hidden, dtype),
+        "gru2": _gru_cell_init(r3, hidden, hidden, dtype),
+        "out": layers.dense_init(r4, hidden, num_classes, bias=True, dtype=dtype),
+    }
+
+
+def gru_apply(params, tokens):
+    """tokens: (B, S) int32 -> logits (B, S, classes) (next-char prediction)."""
+    x = layers.embedding_apply(params["embed"], tokens)   # (B,S,E)
+    B, S, E = x.shape
+    hidden = params["gru1"]["wh"].shape[0]
+
+    def step(carry, xt):
+        h1, h2 = carry
+        h1 = _gru_cell(params["gru1"], h1, xt)
+        h2 = _gru_cell(params["gru2"], h2, h1)
+        return (h1, h2), h2
+
+    h0 = (jnp.zeros((B, hidden), x.dtype), jnp.zeros((B, hidden), x.dtype))
+    _, hs = jax.lax.scan(step, h0, jnp.moveaxis(x, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)                           # (B,S,H)
+    return layers.dense_apply(params["out"], hs)
+
+
+# ---------------------------------------------------------------------------
+# unified task-model API (used by the FedAvg engine)
+# ---------------------------------------------------------------------------
+
+def init_task_model(rng, task_cfg, dtype=jnp.float32) -> PyTree:
+    m = task_cfg.model
+    if m == "linear":
+        return linear_init(rng, task_cfg.input_shape[0], task_cfg.num_classes, dtype)
+    if m == "dnn":
+        return dnn_init(rng, task_cfg.input_shape[0], task_cfg.num_classes, dtype=dtype)
+    if m == "cnn":
+        return cnn_init(rng, task_cfg.input_shape, task_cfg.num_classes, dtype=dtype)
+    if m == "gru":
+        return gru_init(rng, task_cfg.num_classes, task_cfg.num_classes, dtype=dtype)
+    raise ValueError(m)
+
+
+def task_loss(params, task_cfg, batch) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {'x': features or tokens, 'y': labels}. Mean cross-entropy."""
+    m = task_cfg.model
+    x, y = batch["x"], batch["y"]
+    if m == "linear":
+        logits = linear_apply(params, x)
+    elif m == "dnn":
+        logits = dnn_apply(params, x)
+    elif m == "cnn":
+        logits = cnn_apply(params, x)
+    elif m == "gru":
+        logits = gru_apply(params, x)           # (B,S,C); y: (B,S)
+    else:
+        raise ValueError(m)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), y[..., None],
+                               axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, {"acc": acc}

@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX reference.
+
+Faithful to arXiv:2405.21060: input projection -> short depthwise conv on
+(x, B, C) -> per-head scalar-decay SSM evaluated with the chunked SSD
+algorithm (intra-chunk quadratic attention-like matmuls + inter-chunk
+recurrent state passing) -> gated RMSNorm -> output projection.
+
+The chunked formulation is the TPU adaptation: intra-chunk terms are
+MXU-friendly (Q x Q) matmuls; the inter-chunk recurrence is a short
+``lax.scan`` over S/Q states. The Pallas ``ssd_scan`` kernel implements the
+same contraction with explicit VMEM blocking; this module is its oracle.
+
+n_groups is fixed at 1 (as in the released Mamba2 configs <= 2.7B).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    n_heads = s.n_heads(cfg.d_model)
+    conv_dim = d_inner + 2 * s.d_state
+    return s, d_inner, n_heads, conv_dim
+
+
+def ssm_init(rng, cfg: ArchConfig, dtype=jnp.float32):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    r = jax.random.split(rng, 6)
+    in_dim = 2 * d_inner + 2 * s.d_state + n_heads   # z, x, B, C, dt
+    p = {
+        "in_proj": layers.dense_init(r[0], cfg.d_model, in_dim, dtype=dtype),
+        "conv_w": layers.normal_init(r[1], (s.d_conv, conv_dim), 0.1, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        # A in (-exp range); init A in [1, 16] as in the paper's code
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01))).astype(dtype),
+        "norm": layers.rmsnorm_init(d_inner, dtype),
+        "out_proj": layers.dense_init(r[2], d_inner, cfg.d_model, dtype=dtype),
+    }
+    return p
+
+
+def _split_proj(p, cfg: ArchConfig, u):
+    """u: (B,S,d_model) -> z, xBC, dt_raw."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    zxbcdt = layers.dense_apply(p["in_proj"], u)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim:]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(p, xBC, cfg: ArchConfig):
+    """Depthwise causal conv over seq. xBC: (B,S,conv_dim)."""
+    s = cfg.ssm
+    w = p["conv_w"]                       # (d_conv, conv_dim)
+    pad = s.d_conv - 1
+    xp = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(s.d_conv):             # d_conv is tiny (4): unrolled taps
+        out = out + xp[:, i:i + xBC.shape[1], :] * w[i]
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def ssd_chunked(x, dt, A, B_, C_, D, chunk: int):
+    """Chunked SSD contraction (the oracle for kernels/ssd_scan).
+
+    x:  (B, S, H, P)  per-head inputs
+    dt: (B, S, H)     softplus'd step sizes
+    A:  (H,)          negative per-head decay rates
+    B_: (B, S, N)     input projections (group-broadcast to heads)
+    C_: (B, S, N)     output projections
+    D:  (H,)          skip
+    Returns y: (B, S, H, P), final_state: (B, H, N, P)
+    """
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    NC = Sp // chunk
+    xc = x.reshape(Bsz, NC, chunk, H, P)
+    dtc = dt.reshape(Bsz, NC, chunk, H)
+    Bc = B_.reshape(Bsz, NC, chunk, N)
+    Cc = C_.reshape(Bsz, NC, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                    # (B,NC,Q,H) <= 0
+    cs = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+
+    # intra-chunk: Y[i] = sum_{j<=i} C_i.B_j * exp(cs_i - cs_j) * dt_j * x_j
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # (B,NC,Q,Q)
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,NC,Qi,Qj,H)
+    idx = jnp.arange(chunk)
+    mask = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    gate = jnp.where(mask, decay, 0.0) * CB[..., None]   # (B,NC,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", gate, dtc, xc)
+
+    # chunk states: S_c = sum_j exp(cs_last - cs_j) * dt_j * B_j (x) x_j
+    last = cs[:, :, -1:, :]                              # (B,NC,1,H)
+    sdec = jnp.exp(last - cs)                            # (B,NC,Q,H)
+    states = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchnp", sdec, dtc, Bc, xc)
+
+    # inter-chunk recurrence over NC
+    chunk_decay = jnp.exp(last[:, :, 0, :])              # (B,NC,H)
+
+    def step(carry, inp):
+        st_prev = carry                                  # (B,H,N,P)
+        st_c, dec_c = inp                                # (B,H,N,P), (B,H)
+        st_new = st_prev * dec_c[..., None, None] + st_c
+        return st_new, st_prev
+
+    init = jnp.zeros((Bsz, H, N, P), x.dtype)
+    states_t = jnp.moveaxis(states, 1, 0)                # (NC,B,H,N,P)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)            # (NC,B,H)
+    final_state, prev_states = jax.lax.scan(step, init, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (B,NC,H,N,P)
+
+    # inter-chunk output: C_i . (exp(cs_i) * S_prev)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cs), prev_states)
+
+    y = y_intra + y_inter + xc * D[None, None, None, :, None]
+    y = y.reshape(Bsz, Sp, H, P)[:, :S]
+    return y, final_state
+
+
+def ssm_forward(p, cfg: ArchConfig, u) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence forward. u: (B,S,d_model). Returns (out, final ssm/conv state)."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    Bsz, S, _ = u.shape
+    z, xBC_raw, dt_raw = _split_proj(p, cfg, u)
+    xBC = _causal_conv(p, xBC_raw, cfg)
+    x = xBC[..., :d_inner].reshape(Bsz, S, n_heads, s.head_dim)
+    B_ = xBC[..., d_inner:d_inner + s.d_state]
+    C_ = xBC[..., d_inner + s.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final_state = ssd_chunked(x.astype(jnp.float32), dt, A,
+                                 B_.astype(jnp.float32), C_.astype(jnp.float32),
+                                 p["D"].astype(jnp.float32), s.chunk_size)
+    y = y.reshape(Bsz, S, d_inner).astype(u.dtype)
+    y = layers.rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = layers.dense_apply(p["out_proj"], y)
+    # decode-ready states: last (d_conv-1) raw conv inputs + ssm state
+    conv_state = xBC_raw[:, -(s.d_conv - 1):, :]
+    state = {"ssm": final_state.astype(u.dtype), "conv": conv_state}
+    return out, state
+
+
+def ssm_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, s.d_state, s.head_dim), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(p, cfg: ArchConfig, u, state):
+    """One-token recurrent step. u: (B,1,d_model). Returns (out, new_state)."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    Bsz = u.shape[0]
+    z, xBC_raw, dt_raw = _split_proj(p, cfg, u)       # (B,1,*)
+    window = jnp.concatenate([state["conv"], xBC_raw], axis=1)  # (B,d_conv,conv_dim)
+    xBC = jnp.einsum("btc,tc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(xBC)                            # (B,conv_dim)
+    x = xBC[:, :d_inner].reshape(Bsz, n_heads, s.head_dim)
+    B_ = xBC[:, d_inner:d_inner + s.d_state]
+    C_ = xBC[:, d_inner + s.d_state:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))      # (H,)
+    decay = jnp.exp(dt * A)                           # (B,H)
+    st = state["ssm"].astype(jnp.float32)
+    st = st * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, B_.astype(jnp.float32), x.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", C_.astype(jnp.float32), st)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(u.dtype)
+    y = layers.rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = layers.dense_apply(p["out_proj"], y)
+    new_state = {"ssm": st.astype(state["ssm"].dtype), "conv": window[:, 1:, :]}
+    return out, new_state

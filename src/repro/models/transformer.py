@@ -1,0 +1,465 @@
+"""Decoder-only LM assembler for the assigned architectures.
+
+Handles arch types: dense, moe, ssm, hybrid, vlm. (audio/enc-dec lives in
+``encdec.py``.)
+
+Layers are grouped into *cycles* — one repetition of ``cfg.layer_pattern``
+(e.g. (local, global) for gemma2, (5x mamba + shared attn) for zamba2). All
+cycles are homogeneous, so their params are stacked on a leading axis and the
+forward pass is a ``lax.scan`` over cycles. This keeps HLO size and compile
+time flat in depth (96-layer nemotron compiles as one scanned cycle), and is
+also what makes per-cycle rematerialisation a one-line policy.
+
+Zamba2's shared attention block (weights shared across all its invocations)
+lives outside the stack in ``params['shared']``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, layers, moe as moe_lib, ssm as ssm_lib
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+def cycle_spec(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.layer_pattern is None:
+        return ("mamba",) if cfg.arch_type == "ssm" else ("attn",)
+    return tuple(cfg.layer_pattern)
+
+
+def cycle_counts(cfg: ArchConfig) -> Tuple[int, int]:
+    """(num full cycles, number of tail layers)."""
+    n = len(cycle_spec(cfg))
+    return cfg.num_layers // n, cfg.num_layers % n
+
+
+def _is_shared(cfg: ArchConfig, ltype: str) -> bool:
+    return cfg.arch_type == "hybrid" and ltype == "attn"
+
+
+def _layer_window(cfg: ArchConfig, ltype: str,
+                  global_window: Optional[int]) -> Optional[int]:
+    if ltype == "local":
+        return cfg.sliding_window
+    if ltype == "global":
+        return global_window           # None normally; capped in long mode
+    # plain "attn": honour arch-level SWA (mixtral); full-attention layers
+    # (e.g. zamba2's shared block) get the long-mode cap too (DESIGN §2.5)
+    if cfg.sliding_window is None:
+        return global_window
+    return cfg.sliding_window
+
+
+# ---------------------------------------------------------------------------
+# single block init/apply
+# ---------------------------------------------------------------------------
+
+def _block_init(rng, cfg: ArchConfig, ltype: str, dtype):
+    if ltype == "mamba":
+        r1, _ = jax.random.split(rng)
+        return {"ln": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+                "ssm": ssm_lib.ssm_init(r1, cfg, dtype)}
+    r1, r2 = jax.random.split(rng)
+    p = {"ln1": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+         "attn": attention.attn_init(r1, cfg, dtype),
+         "ln2": layers.norm_init(cfg.norm_type, cfg.d_model, dtype)}
+    if cfg.moe is not None and not _is_shared(cfg, ltype):
+        p["moe"] = moe_lib.moe_init(r2, cfg, dtype)
+    else:
+        d_ff = cfg.d_ff if cfg.d_ff else 4 * cfg.d_model
+        p["mlp"] = layers.mlp_init(r2, cfg.d_model, d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def _block_apply(bp, cfg: ArchConfig, ltype: str, x, positions, *,
+                 global_window=None, moe_path="dispatch", use_kernel=False,
+                 attn_kv_spec=None, moe_shards=1, moe_spmd_axes=None):
+    """Full-sequence block. Returns (x, decode_state_for_this_block)."""
+    if ltype == "mamba":
+        # NOTE: per-layer jax.checkpoint around the SSD was measured at
+        # -2% memory / +12% compute on zamba2 train (EXPERIMENTS §Perf Z1,
+        # refuted) — the binding buffers are within a single layer's
+        # vectorised-over-chunks backward, which the Pallas ssd_scan kernel
+        # (sequential chunk grid, VMEM state) addresses on real TPU.
+        h, state = ssm_lib.ssm_forward(bp["ssm"], cfg,
+                                       layers.norm_apply(cfg.norm_type, bp["ln"], x))
+        return x + h, state
+    window = _layer_window(cfg, ltype, global_window)
+    h, (k, v) = attention.attention(bp["attn"], cfg,
+                                    layers.norm_apply(cfg.norm_type, bp["ln1"], x),
+                                    positions, window=window, use_kernel=use_kernel,
+                                    kv_spec=attn_kv_spec)
+    x = x + h
+    hn = layers.norm_apply(cfg.norm_type, bp["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in bp:
+        h, aux = moe_lib.moe_apply(bp["moe"], cfg, hn, path=moe_path,
+                                   use_kernel=use_kernel, shards=moe_shards,
+                                   spmd_axes=moe_spmd_axes)
+    else:
+        h = layers.mlp_apply(bp["mlp"], hn, cfg.mlp_type)
+    return x + h, {"k": k, "v": v, "aux": aux}
+
+
+def _block_decode(bp, cfg: ArchConfig, ltype: str, x, state, pos, *,
+                  global_window=None, moe_path="dense", ring=False):
+    if ltype == "mamba":
+        h, new_state = ssm_lib.ssm_decode_step(
+            bp["ssm"], cfg, layers.norm_apply(cfg.norm_type, bp["ln"], x), state)
+        return x + h, new_state
+    window = _layer_window(cfg, ltype, global_window)
+    use_ring = ring and window is not None
+    xn = layers.norm_apply(cfg.norm_type, bp["ln1"], x)
+    if "ks" in state:        # int8-quantised cache (beyond-paper Q-KV)
+        h, new_state = attention.attention_decode_quant(
+            bp["attn"], cfg, xn, state, pos, window=window, ring=use_ring)
+    else:
+        h, ck, cv = attention.attention_decode(
+            bp["attn"], cfg, xn, state["k"], state["v"], pos, window=window,
+            ring=use_ring)
+        new_state = {"k": ck, "v": cv}
+    x = x + h
+    hn = layers.norm_apply(cfg.norm_type, bp["ln2"], x)
+    if "moe" in bp:
+        h, _ = moe_lib.moe_apply(bp["moe"], cfg, hn, path=moe_path)
+    else:
+        h = layers.mlp_apply(bp["mlp"], hn, cfg.mlp_type)
+    return x + h, new_state
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_lm(rng, cfg: ArchConfig, dtype=jnp.float32) -> PyTree:
+    spec = cycle_spec(cfg)
+    n_cycles, n_tail = cycle_counts(cfg)
+    r_embed, r_shared, r_stack, r_tail, r_head = jax.random.split(rng, 5)
+
+    params: Dict[str, Any] = {
+        "embed": layers.embedding_init(r_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": layers.norm_init(cfg.norm_type, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(r_head, cfg.d_model, cfg.vocab_size,
+                                              dtype=dtype)
+    if cfg.arch_type == "hybrid":
+        params["shared"] = _block_init(r_shared, cfg, "shared_attn_block", dtype)
+
+    def one_cycle(rng):
+        ps = {}
+        rs = jax.random.split(rng, len(spec))
+        for i, lt in enumerate(spec):
+            if _is_shared(cfg, lt):
+                continue  # weights live in params['shared']
+            ps[f"b{i}"] = _block_init(rs[i], cfg, lt, dtype)
+        return ps
+
+    if n_cycles > 0:
+        params["stack"] = jax.vmap(one_cycle)(jax.random.split(r_stack, n_cycles))
+    tail = {}
+    rs_tail = jax.random.split(r_tail, max(n_tail, 1))
+    for i in range(n_tail):
+        lt = spec[i]
+        if _is_shared(cfg, lt):
+            continue
+        tail[f"b{i}"] = _block_init(rs_tail[i], cfg, lt, dtype)
+    if n_tail:
+        params["tail"] = tail
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _cycle_apply(cparams, shared, cfg, x, positions, **kw):
+    spec = cycle_spec(cfg)
+    states, aux_total = {}, jnp.zeros((), jnp.float32)
+    for i, lt in enumerate(spec):
+        bp = shared if _is_shared(cfg, lt) else cparams[f"b{i}"]
+        x, st = _block_apply(bp, cfg, lt, x, positions, **kw)
+        if isinstance(st, dict) and "aux" in st:
+            aux_total = aux_total + st.pop("aux")
+        states[f"b{i}"] = st
+    return x, states, aux_total
+
+
+def embed_inputs(params, cfg: ArchConfig, tokens, patch_embeds=None):
+    """Token (+ optional patch) embedding. Returns (x, positions, n_prefix)."""
+    x = layers.embedding_apply(params["embed"], tokens)
+    n_prefix = 0
+    if cfg.arch_type == "vlm" and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+        n_prefix = patch_embeds.shape[1]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions, n_prefix
+
+
+def forward_lm(params, cfg: ArchConfig, tokens, patch_embeds=None, *,
+               global_window: Optional[int] = None, remat: bool = False,
+               moe_path: str = "dispatch", use_kernel: bool = False,
+               return_states: bool = False, return_features: bool = False,
+               act_spec=None, attn_kv_spec=None, moe_shards=1,
+               moe_spmd_axes=None):
+    """Full-sequence forward. Returns (logits|features, aux[, decode states]).
+
+    ``act_spec``: optional PartitionSpec constraining the residual stream
+    between cycles (shrinks remat-saved boundaries on big-d archs).
+    ``attn_kv_spec``: optional PartitionSpec for attention k/v (see
+    repro.models.attention.attention).
+    """
+    x, positions, _ = embed_inputs(params, cfg, tokens, patch_embeds)
+    kw = dict(global_window=global_window, moe_path=moe_path,
+              use_kernel=use_kernel, attn_kv_spec=attn_kv_spec,
+              moe_shards=moe_shards, moe_spmd_axes=moe_spmd_axes)
+    shared = params.get("shared")
+
+    def constrain(y):
+        if act_spec is not None:
+            return jax.lax.with_sharding_constraint(y, act_spec)
+        return y
+
+    x = constrain(x)
+
+    def body(x, cparams):
+        y, states, aux = _cycle_apply(cparams, shared, cfg, x, positions, **kw)
+        y = constrain(y)
+        return y, (states, aux) if return_states else (None, aux)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    stack_states = None
+    aux_total = jnp.zeros((), jnp.float32)
+    if "stack" in params:
+        x, (stack_states, auxs) = jax.lax.scan(body, x, params["stack"])
+        aux_total = aux_total + jnp.sum(auxs)
+    tail_states = {}
+    if "tail" in params:
+        spec = cycle_spec(cfg)
+        for i in range(cfg.num_layers % len(spec)):
+            lt = spec[i]
+            bp = shared if _is_shared(cfg, lt) else params["tail"][f"b{i}"]
+            x, st = _block_apply(bp, cfg, lt, x, positions, **kw)
+            if isinstance(st, dict) and "aux" in st:
+                aux_total = aux_total + st.pop("aux")
+            tail_states[f"b{i}"] = st
+
+    if return_features:
+        if return_states:
+            return x, aux_total, {"stack": stack_states, "tail": tail_states}
+        return x, aux_total
+    logits = _readout(params, cfg, x)
+    if return_states:
+        return logits, aux_total, {"stack": stack_states, "tail": tail_states}
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits, targets, mask=None):
+    """Token cross-entropy. logits: (B,S,V); targets: (B,S) int.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    ``take_along_axis``: when the vocab dim is sharded over the ``model``
+    mesh axis, a gather over the sharded dim makes GSPMD all-gather the
+    full logits (19.9 GB for qwen1.5 train_4k — observed in the first
+    dry-run); the contraction instead reduces with a tiny psum.
+    """
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("...v,...v->...", logits32, onehot)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# Chunk the readout+cross-entropy over sequence positions when the full
+# (B, S, V) logits tensor would be large: logits are (re)computed per chunk
+# under jax.checkpoint, so neither forward nor backward ever materialises
+# them (the f32 logits + one-hot + softmax-bwd block was ~10 GB/chip for
+# qwen1.5 train_4k — measured in the dry-run bisection).
+LOSS_CHUNK = 512
+LOSS_CHUNK_MIN_ELEMENTS = 1 << 28      # B*S*V above this triggers chunking
+
+
+def _readout(params, cfg: ArchConfig, x):
+    x = layers.norm_apply(cfg.norm_type, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.embedding_attend(params["embed"], x)
+    else:
+        logits = layers.dense_apply(params["lm_head"], x)
+    return layers.softcap(logits, cfg.final_logit_softcap)
+
+
+def _chunked_xent(params, cfg: ArchConfig, feats, targets, mask=None):
+    """feats: (B, S, d) pre-readout features; targets: (B, S)."""
+    B, S, d = feats.shape
+    chunk = LOSS_CHUNK
+    pad = (-S) % chunk
+    if pad:
+        feats = jnp.pad(feats, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        m0 = mask if mask is not None else jnp.ones((B, S), jnp.float32)
+        mask = jnp.pad(m0, ((0, 0), (0, pad)))
+        S += pad
+    nc = S // chunk
+    fc = jnp.moveaxis(feats.reshape(B, nc, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, nc, chunk), 1, 0)
+    mc = (jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0) if mask is not None
+          else jnp.ones((nc, B, chunk), jnp.float32))
+
+    @jax.checkpoint
+    def one(carry, xs):
+        f, t, m = xs
+        logits = _readout(params, cfg, f)
+        logits32 = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits32, axis=-1)
+        onehot = jax.nn.one_hot(t, logits.shape[-1], dtype=jnp.float32)
+        gold = jnp.einsum("...v,...v->...", logits32, onehot)
+        nll_sum, m_sum = carry
+        return (nll_sum + jnp.sum((logz - gold) * m), m_sum + jnp.sum(m)), None
+
+    (nll, msum), _ = jax.lax.scan(one, (jnp.zeros(()), jnp.zeros(())),
+                                  (fc, tc, mc))
+    return nll / jnp.maximum(msum, 1.0)
+
+
+def loss_lm(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray], *,
+            remat: bool = False, moe_path: str = "dispatch",
+            use_kernel: bool = False, act_spec=None, attn_kv_spec=None,
+            moe_shards=1, moe_spmd_axes=None):
+    """Next-token LM loss. batch: {tokens, [patch_embeds], [mask]}."""
+    tokens = batch["tokens"]
+    patch = batch.get("patch_embeds")
+    feats, aux = forward_lm(params, cfg, tokens, patch, remat=remat,
+                            moe_path=moe_path, use_kernel=use_kernel,
+                            act_spec=act_spec, attn_kv_spec=attn_kv_spec,
+                            moe_shards=moe_shards, moe_spmd_axes=moe_spmd_axes,
+                            return_features=True)
+    n_prefix = patch.shape[1] if (patch is not None and cfg.arch_type == "vlm") else 0
+    # predict tokens[t+1] from sequence position (n_prefix + t)
+    pred_feats = feats[:, n_prefix:-1] if n_prefix else feats[:, :-1]
+    targets = tokens[:, 1:]
+    mask = batch.get("mask")
+    mask = mask[:, 1:].astype(jnp.float32) if mask is not None else None
+    B, Sm1 = targets.shape
+    if B * Sm1 * cfg.vocab_size >= LOSS_CHUNK_MIN_ELEMENTS and Sm1 > LOSS_CHUNK:
+        loss = _chunked_xent(params, cfg, pred_feats, targets, mask)
+    else:
+        logits = _readout(params, cfg, pred_feats)
+        loss = xent_loss(logits, targets, mask)
+    aux_coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return loss + aux_coef * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve)
+# ---------------------------------------------------------------------------
+
+def _layer_decode_window(cfg: ArchConfig, ltype: str,
+                         global_window=None) -> Optional[int]:
+    return _layer_window(cfg, ltype, global_window)
+
+
+def _block_cache(cfg: ArchConfig, ltype: str, batch: int, max_seq: int, dtype,
+                 ring: bool = False, global_window=None, quant: bool = False):
+    if ltype == "mamba":
+        return ssm_lib.ssm_init_state(cfg, batch, dtype)
+    # ring=True (beyond-paper, EXPERIMENTS §Perf R1): windowed layers only
+    # allocate a window-length ring buffer instead of the full sequence.
+    eff = max_seq
+    if ring:
+        w = _layer_decode_window(cfg, ltype, global_window)
+        if w is not None:
+            eff = min(max_seq, w)
+    shape = (batch, eff, cfg.num_kv_heads, cfg.head_dim)
+    if quant:  # int8 values + per-(token, head) f32 scales (§Perf Q-KV)
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.ones(sshape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "vs": jnp.ones(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cache_lm(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.float32,
+                  *, ring: bool = False, global_window=None,
+                  quant: bool = False):
+    spec = cycle_spec(cfg)
+    n_cycles, n_tail = cycle_counts(cfg)
+
+    def one_cycle(_):
+        return {f"b{i}": _block_cache(cfg, lt, batch, max_seq, dtype,
+                                      ring=ring, global_window=global_window,
+                                      quant=quant)
+                for i, lt in enumerate(spec)}
+
+    cache: Dict[str, Any] = {}
+    if n_cycles:
+        cache["stack"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_cycles,) + x.shape).copy()
+            if hasattr(x, "shape") else x, one_cycle(0))
+    if n_tail:
+        cache["tail"] = {f"b{i}": _block_cache(cfg, spec[i], batch, max_seq,
+                                               dtype, ring=ring,
+                                               global_window=global_window,
+                                               quant=quant)
+                         for i in range(n_tail)}
+    return cache
+
+
+def decode_step_lm(params, cfg: ArchConfig, cache, token, pos, *,
+                   global_window: Optional[int] = None,
+                   moe_path: str = "dispatch", ring: bool = False):
+    """One decode step. token: (B,) int32; pos: scalar int32 position.
+
+    Returns (logits (B,V), new_cache).
+    """
+    x = layers.embedding_apply(params["embed"], token[:, None])   # (B,1,d)
+    spec = cycle_spec(cfg)
+    shared = params.get("shared")
+
+    def body(x, scan_in):
+        cparams, ccache = scan_in
+        new_states = {}
+        for i, lt in enumerate(spec):
+            bp = shared if _is_shared(cfg, lt) else cparams[f"b{i}"]
+            x, st = _block_decode(bp, cfg, lt, x, ccache[f"b{i}"], pos,
+                                  global_window=global_window,
+                                  moe_path=moe_path, ring=ring)
+            new_states[f"b{i}"] = st
+        return x, new_states
+
+    new_cache: Dict[str, Any] = {}
+    if "stack" in params:
+        x, new_cache["stack"] = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
+    if "tail" in params:
+        new_tail = {}
+        for i in range(cfg.num_layers % len(spec)):
+            lt = spec[i]
+            bp = shared if _is_shared(cfg, lt) else params["tail"][f"b{i}"]
+            x, st = _block_decode(bp, cfg, lt, x, cache["tail"][f"b{i}"], pos,
+                                  global_window=global_window,
+                                  moe_path=moe_path, ring=ring)
+            new_tail[f"b{i}"] = st
+        new_cache["tail"] = new_tail
+
+    logits = _readout(params, cfg, x)
+    return logits[:, 0], new_cache

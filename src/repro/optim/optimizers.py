@@ -1,0 +1,91 @@
+"""Hand-rolled optimizers (optax is not available offline).
+
+Each optimizer is an ``(init_fn, update_fn)`` pair operating on pytrees:
+``state = init(params)``; ``updates, state = update(grads, state, params, lr)``.
+Updates follow the optax convention (add them to params).
+
+Clients use plain SGD per the paper (no state). The server update is
+averaging (FedAvg) or, beyond-paper, FedAdam (Reddi et al., 2021) applied to
+the averaged client delta.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# pytree arithmetic
+# ---------------------------------------------------------------------------
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# SGD (stateless) — the client optimizer in FedAvg
+# ---------------------------------------------------------------------------
+
+def sgd():
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        return tree_scale(grads, -lr), state
+
+    return init, update
+
+
+def momentum(beta: float = 0.9):
+    def init(params):
+        return tree_zeros_like(params)
+
+    def update(grads, m, params, lr):
+        m = jax.tree.map(lambda mi, g: beta * mi + g, m, grads)
+        return tree_scale(m, -lr), m
+
+    return init, update
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init(params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda mi, vi: -lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps), m, v)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return init, update
+
+
+def fedadam_server(b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3):
+    """Server-side Adam on the averaged client delta (beyond-paper)."""
+    return adam(b1=b1, b2=b2, eps=eps)

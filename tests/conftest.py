@@ -1,0 +1,36 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS before any jax import; never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def np_rng():
+    return np.random.default_rng(0)
+
+
+class FakeMesh:
+    """Duck-typed mesh for sharding-rule unit tests (no real devices)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+    def __contains__(self, name):
+        return name in self.shape
+
+
+@pytest.fixture
+def mesh16x16():
+    return FakeMesh({"data": 16, "model": 16})

@@ -1,0 +1,79 @@
+"""Data pipeline + checkpoint tests."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data import make_lm_clients, make_paper_task, pipeline
+from repro.data.partition import dirichlet_label_skew
+
+
+def test_dirichlet_alpha_extremes(np_rng):
+    skew = dirichlet_label_skew(np_rng, 50, 10, alpha=0.05)
+    iid = dirichlet_label_skew(np_rng, 50, 10, alpha=1000.0)
+    np.testing.assert_allclose(skew.sum(1), 1.0, rtol=1e-9)
+    # low alpha concentrates mass; high alpha is near-uniform
+    assert skew.max(axis=1).mean() > 0.6
+    assert abs(iid.max(axis=1).mean() - 0.1) < 0.05
+
+
+@pytest.mark.parametrize("name", ["sent140", "femnist", "cifar100",
+                                  "shakespeare"])
+def test_paper_task_generators(name, np_rng):
+    data = make_paper_task(name, np_rng, num_clients=12, samples_per_client=20)
+    assert data.num_clients == 12
+    np.testing.assert_allclose(data.weights.sum(), 1.0, rtol=1e-6)
+    assert len(data.val_y) > 0
+    x0 = data.client_x[0]
+    assert x0.shape[0] == 20
+    if name == "shakespeare":
+        assert data.client_y[0].shape == x0.shape      # next-token labels
+        assert x0.max() < 79
+
+
+def test_round_batches_shapes(np_rng):
+    data = make_paper_task("femnist", np_rng, num_clients=10,
+                           samples_per_client=30)
+    ids = pipeline.sample_clients(np_rng, data, 4)
+    assert len(set(ids)) == 4
+    b = pipeline.round_batches(np_rng, data, ids, k=5, batch_size=8)
+    assert b["x"].shape == (4, 5, 8, 784)
+    assert b["y"].shape == (4, 5, 8)
+    w = pipeline.client_weights(data, ids)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+
+
+def test_lm_clients(np_rng):
+    data = make_lm_clients(np_rng, num_clients=6, vocab=100, seq_len=16)
+    assert data.client_x[0].shape == (64, 16)
+    assert data.client_x[0].dtype == np.int32
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    from repro.configs import get_arch
+    from repro.models import registry
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    params = registry.init(rng, cfg)
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params, meta={"round": 42, "k": 7})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    restored, meta = load_checkpoint(path, like)
+    assert meta["round"] == 42 and meta["k"] == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path, rng):
+    from repro.configs import get_arch
+    from repro.models import registry
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    params = registry.init(rng, cfg)
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params)
+    wrong = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((x.shape[0] + 1,) + x.shape[1:], x.dtype),
+        params)
+    with pytest.raises(ValueError):
+        load_checkpoint(path, wrong)

@@ -1,0 +1,97 @@
+"""FedAvg engine integration tests (CPU, small synthetic tasks)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_paper_task
+from repro.configs.base import FedConfig, RuntimeModelConfig
+from repro.core import FedAvgTrainer, RuntimeModel, make_eval_fn, make_round_fn
+from repro.data import make_paper_task
+from repro.models import small
+
+
+@pytest.fixture(scope="module")
+def femnist_setup():
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=20, samples_per_client=40)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    return task, data, loss_fn, params
+
+
+def run(femnist_setup, rounds=15, **fed_kw):
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=20, clients_per_round=6, rounds=rounds,
+                    k0=6, eta0=0.3, batch_size=8, loss_window=5, **fed_kw)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt,
+                       eval_fn=make_eval_fn(loss_fn, data))
+    return tr.run(rounds, eval_every=5)
+
+
+def test_loss_decreases(femnist_setup):
+    h = run(femnist_setup)
+    assert h.min_train_loss[-1] < h.train_loss[0]
+    assert not np.isnan(h.train_loss).any()
+
+
+def test_k_decay_uses_fewer_steps(femnist_setup):
+    h_fixed = run(femnist_setup, k_schedule="fixed")
+    h_rounds = run(femnist_setup, k_schedule="rounds")
+    assert h_rounds.sgd_steps[-1] < h_fixed.sgd_steps[-1]
+    assert h_rounds.wall_clock_s[-1] < h_fixed.wall_clock_s[-1]
+    assert h_rounds.k[0] == 6 and h_rounds.k[-1] < 6
+
+
+def test_dsgd_is_k1(femnist_setup):
+    h = run(femnist_setup, k_schedule="dsgd", rounds=5)
+    assert all(k == 1 for k in h.k)
+
+
+def test_fedadam_server_runs(femnist_setup):
+    h = run(femnist_setup, rounds=8, server_optimizer="fedadam",
+            server_lr=0.01)
+    assert np.isfinite(h.train_loss).all()
+
+
+def test_round_fn_weighted_average_identity():
+    """With K=1, eta=0, the round must return the input params exactly."""
+    task = get_paper_task("femnist")
+    params = small.init_task_model(jax.random.PRNGKey(1), task)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    round_fn, _ = make_round_fn(loss_fn)
+    batches = {"x": jnp.ones((4, 1, 2, 784)), "y": jnp.zeros((4, 1, 2), jnp.int32)}
+    w = jnp.full((4,), 0.25)
+    new, first, last, _ = round_fn(params, batches, w, jnp.float32(0.0), ())
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_kernel_aggregation_matches_einsum():
+    task = get_paper_task("femnist")
+    params = small.init_task_model(jax.random.PRNGKey(1), task)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    fn_ref, _ = make_round_fn(loss_fn, use_kernel_avg=False)
+    fn_ker, _ = make_round_fn(loss_fn, use_kernel_avg=True)
+    rng = jax.random.PRNGKey(2)
+    batches = {"x": jax.random.normal(rng, (4, 2, 2, 784)),
+               "y": jax.random.randint(rng, (4, 2, 2), 0, 62)}
+    w = jnp.array([0.1, 0.2, 0.3, 0.4], jnp.float32)
+    eta = jnp.float32(0.1)
+    a, fa, _, _ = fn_ref(params, batches, w, eta, ())
+    b, fb, _, _ = fn_ker(params, batches, w, eta, ())
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fa), np.asarray(fb), rtol=1e-6)
+
+
+def test_error_schedule_reacts_to_loss(femnist_setup):
+    h = run(femnist_setup, rounds=20, k_schedule="error")
+    # after the window warms, K should not exceed K0 and should shrink
+    assert max(h.k) == 6
+    assert h.k[-1] <= h.k[0]

@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fedavg_reduce as fr
+from repro.kernels import flash_attention as fa
+from repro.kernels import moe_gmm as mg
+from repro.kernels import ops, ref, ssd_scan as ss
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# fedavg_reduce
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(4, 512), (16, 4096), (7, 1000), (50, 8193)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_reduce_sweep(n, m, dtype):
+    rng = jax.random.PRNGKey(n * m)
+    x = jax.random.normal(rng, (n, m), dtype)
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (n,)))
+    out = fr.fedavg_reduce(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref.fedavg_reduce_ref(x, w), np.float32),
+                               **TOL[dtype])
+
+
+def test_fedavg_reduce_convex_combination():
+    x = jnp.stack([jnp.zeros(300), jnp.ones(300)])
+    w = jnp.array([0.25, 0.75])
+    np.testing.assert_allclose(np.asarray(fr.fedavg_reduce(x, w, interpret=True)),
+                               0.75, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (1, 2, 2, 128, 128),      # MHA
+    (2, 4, 2, 256, 64),       # GQA + padded head_dim
+    (1, 8, 1, 384, 128),      # MQA-ish, odd-length grid
+])
+@pytest.mark.parametrize("variant", ["causal", "window", "softcap", "full"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, S, hd, variant, dtype):
+    rng = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = (jax.random.normal(rng[0], (B, H, S, hd)) * 0.3).astype(dtype)
+    k = (jax.random.normal(rng[1], (B, KV, S, hd)) * 0.3).astype(dtype)
+    v = jax.random.normal(rng[2], (B, KV, S, hd)).astype(dtype)
+    kw = {"causal": dict(causal=True),
+          "window": dict(causal=True, window=64),
+          "softcap": dict(causal=True, softcap=20.0),
+          "full": dict(causal=False)}[variant]
+    out = fa.flash_attention(q, k, v, interpret=True, **kw)
+    want = ref.flash_attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_model_layout_and_grad():
+    rng = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(rng[0], (2, 256, 4, 64)) * 0.3
+    k = jax.random.normal(rng[1], (2, 256, 2, 64)) * 0.3
+    v = jax.random.normal(rng[2], (2, 256, 2, 64))
+
+    def f_kernel(q):
+        return jnp.sum(ops.flash_attention(q, k, v, causal=True) ** 2)
+
+    def f_ref(q):
+        qt, kt, vt = (jnp.moveaxis(t, 1, 2) for t in (q, k, v))
+        o = ref.flash_attention_ref(qt, kt, vt, causal=True)
+        return jnp.sum(jnp.moveaxis(o, 2, 1) ** 2)
+
+    np.testing.assert_allclose(float(f_kernel(q)), float(f_ref(q)), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(jax.grad(f_kernel)(q)),
+                               np.asarray(jax.grad(f_ref)(q)),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 32, 16, 16),
+    (2, 96, 3, 64, 32, 32),
+    (1, 256, 1, 64, 128, 64),   # mamba2-780m-like ratios
+])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    c = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    d = jnp.linspace(0.5, 1.5, H)
+    y, st = ops.ssd_scan(x, dt, A, b, c, d, chunk=chunk)
+    yr, sr = ref.ssd_scan_ref(x, dt, A, b, c, d, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_scan_state_equals_stepwise_recurrence():
+    """Chunked SSD must equal the naive per-step recurrence."""
+    B, S, H, P, N = 1, 40, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    c = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    d = jnp.zeros((H,))
+    y, _ = ops.ssd_scan(x, dt, A, b, c, d, chunk=8)
+
+    st = np.zeros((B, H, N, P))
+    ys = []
+    for t in range(S):
+        decay = np.exp(np.asarray(dt[:, t]) * np.asarray(A))     # (B,H)
+        st = st * decay[..., None, None] + np.einsum(
+            "bh,bn,bhp->bhnp", np.asarray(dt[:, t]), np.asarray(b[:, t]),
+            np.asarray(x[:, t]))
+        ys.append(np.einsum("bn,bhnp->bhp", np.asarray(c[:, t]), st))
+    y_naive = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), y_naive, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe_gmm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,d,f", [(4, 128, 256, 512), (8, 100, 512, 384),
+                                     (2, 257, 320, 640)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_sweep(E, C, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(E + C), 2)
+    x = (jax.random.normal(ks[0], (E, C, d)) * 0.1).astype(dtype)
+    w = (jax.random.normal(ks[1], (E, d, f)) * 0.05).astype(dtype)
+    np.testing.assert_allclose(np.asarray(ops.gmm(x, w), np.float32),
+                               np.asarray(ref.gmm_ref(x, w), np.float32),
+                               **TOL[dtype])
+
+
+def test_moe_ffn_kernel_matches_oracle():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (4, 64, 128)) * 0.3
+    gate = jax.random.normal(ks[1], (4, 128, 256)) * 0.05
+    up = jax.random.normal(ks[2], (4, 128, 256)) * 0.05
+    down = jax.random.normal(ks[0], (4, 256, 128)) * 0.05
+    np.testing.assert_allclose(
+        np.asarray(ops.moe_gmm(x, gate, up, down)),
+        np.asarray(ref.moe_ffn_ref(x, gate, up, down)),
+        rtol=1e-3, atol=1e-3)

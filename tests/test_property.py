@@ -1,0 +1,90 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import math
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.base import FedConfig, RuntimeModelConfig
+from repro.core import DecayController, RuntimeModel, quantize_k, theory
+from repro.core.schedules import schedule_preview
+from repro.kernels import fedavg_reduce as fr
+from repro.models.transformer import xent_loss
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(k0=st.integers(1, 200), rounds=st.integers(1, 300),
+       sched=st.sampled_from(["rounds", "cosine", "fixed", "dsgd"]))
+@settings(**SET)
+def test_k_schedule_invariants(k0, rounds, sched):
+    ks = schedule_preview(FedConfig(k0=k0, rounds=rounds, k_schedule=sched),
+                          rounds)
+    assert len(ks) == rounds
+    assert all(1 <= k <= k0 for k in ks)
+    assert all(a >= b for a, b in zip(ks, ks[1:]))      # monotone decay
+
+
+@given(k=st.integers(1, 500), k0=st.integers(1, 500))
+@settings(**SET)
+def test_quantize_k_bounds(k, k0):
+    kq = quantize_k(min(k, k0), k0)
+    assert 1 <= kq <= k0
+
+
+@given(ks=st.lists(st.integers(1, 100), min_size=1, max_size=50),
+       size=st.floats(0.1, 100), beta=st.floats(1e-4, 2.0))
+@settings(**SET)
+def test_runtime_model_total_equals_sum_of_rounds(ks, size, beta):
+    rt = RuntimeModel(size, RuntimeModelConfig(beta_seconds=beta), 10)
+    total = rt.total_time(ks)
+    per_round = sum(rt.round_cost(k).wall_clock_s for k in ks)
+    assert math.isclose(total, per_round, rel_tol=1e-9)
+    # dsgd (K=1) is always the cheapest-compute schedule
+    assert rt.total_sgd_steps([1] * len(ks)) <= rt.total_sgd_steps(ks)
+
+
+@given(n=st.integers(2, 12), m=st.integers(1, 300), seed=st.integers(0, 99))
+@settings(**SET)
+def test_fedavg_reduce_is_convex_combination(n, m, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    w = jnp.asarray(rng.dirichlet(np.ones(n)).astype(np.float32))
+    out = np.asarray(fr.fedavg_reduce(x, w, interpret=True))
+    lo = np.asarray(x).min(axis=0) - 1e-5
+    hi = np.asarray(x).max(axis=0) + 1e-5
+    assert (out >= lo).all() and (out <= hi).all()
+    # permutation invariance
+    perm = rng.permutation(n)
+    out_p = np.asarray(fr.fedavg_reduce(x[perm], w[perm], interpret=True))
+    np.testing.assert_allclose(out, out_p, rtol=1e-5, atol=1e-6)
+
+
+@given(b=st.integers(1, 4), s=st.integers(2, 16), v=st.integers(2, 50),
+       seed=st.integers(0, 99))
+@settings(**SET)
+def test_xent_loss_matches_manual(b, s, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, s, v)).astype(np.float32))
+    targets = jnp.asarray(rng.integers(0, v, size=(b, s)).astype(np.int32))
+    got = float(xent_loss(logits, targets))
+    lp = np.asarray(jax.nn.log_softmax(logits, axis=-1))
+    want = -np.mean([lp[i, j, targets[i, j]] for i in range(b)
+                     for j in range(s)])
+    assert math.isclose(got, float(want), rel_tol=1e-4)
+    assert got >= 0.0
+
+
+@given(eta=st.floats(1e-4, 0.0625), n=st.integers(1, 64),
+       f0=st.floats(0.1, 100.0))
+@settings(**SET)
+def test_theorem2_monotonicity(eta, n, f0):
+    pc = theory.ProblemConstants(L=4.0, mu=1.0, sigma_sq=0.1, gamma=0.1,
+                                 g_sq=1.0, f0=f0, f_star=0.0, n_clients=n)
+    k1 = theory.optimal_k(pc, eta, f0, comm_time_s=1.0, horizon_s=10.0)
+    k2 = theory.optimal_k(pc, eta, f0 / 2, comm_time_s=1.0, horizon_s=10.0)
+    assert k2 <= k1 + 1e-9          # lower loss => smaller optimal K (Eq. 9)
+    k3 = theory.optimal_k(pc, eta, f0, comm_time_s=2.0, horizon_s=10.0)
+    assert k3 >= k1 - 1e-9          # pricier comms => larger optimal K

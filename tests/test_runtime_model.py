@@ -1,0 +1,55 @@
+"""Eq. 3-5 runtime model + Table 4 compute accounting."""
+import numpy as np
+import pytest
+
+from repro.configs import get_paper_task
+from repro.configs.base import RuntimeModelConfig
+from repro.core import RuntimeModel
+
+
+def test_eq3_round_cost_homogeneous():
+    rt = RuntimeModel(model_size_mbit=40.0,
+                      cfg=RuntimeModelConfig(download_mbps=20, upload_mbps=5,
+                                             beta_seconds=0.31),
+                      clients_per_round=25)
+    c = rt.round_cost(k=50)
+    # |x|/D + K*beta + |x|/U = 2 + 15.5 + 8
+    assert c.wall_clock_s == pytest.approx(2 + 50 * 0.31 + 8)
+    assert c.sgd_steps == 50 * 25
+    assert c.uplink_mbit == pytest.approx(40.0 * 25)
+
+
+def test_eq5_total_time_additivity():
+    rt = RuntimeModel(6.71, RuntimeModelConfig(beta_seconds=0.017), 60)
+    ks = [80, 40, 20, 10]
+    total = rt.total_time(ks)
+    assert total == pytest.approx(sum(rt.round_cost(k).wall_clock_s for k in ks))
+
+
+def test_straggler_model_is_slower():
+    cfg = RuntimeModelConfig(beta_seconds=1.0)
+    hom = RuntimeModel(5.0, cfg, clients_per_round=20, heterogeneity=0.0)
+    het = RuntimeModel(5.0, cfg, clients_per_round=20, heterogeneity=0.5,
+                       seed=1)
+    hs = [het.round_cost(10).wall_clock_s for _ in range(50)]
+    assert np.mean(hs) > hom.round_cost(10).wall_clock_s  # max over lognormals
+
+
+def test_table4_relative_sgd_steps():
+    rt = RuntimeModel(1.0, RuntimeModelConfig(), 10)
+    k0 = 80
+    ks_fixed = [k0] * 100
+    ks_decay = [max(1, int(np.ceil(k0 / (r + 1) ** (1 / 3)))) for r in range(100)]
+    rel = rt.relative_sgd_steps(ks_decay, k0)
+    assert 0.05 < rel < 0.6            # K_r-rounds is aggressive (paper: 0.09-0.74)
+    assert rt.relative_sgd_steps(ks_fixed, k0) == pytest.approx(1.0)
+
+
+def test_paper_task_constants_table1_table2():
+    t = get_paper_task("shakespeare")
+    assert t.fed.k0 == 80 and t.fed.eta0 == 0.1
+    assert t.runtime.beta_seconds == 1.5
+    assert t.model_size_mb == 5.21
+    assert get_paper_task("sent140").fed.total_clients == 21876
+    assert get_paper_task("cifar100").runtime.beta_seconds == 0.31
+    assert get_paper_task("femnist").fed.clients_per_round == 60

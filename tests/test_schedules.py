@@ -1,0 +1,89 @@
+"""Unit tests for the paper's K_r / eta_r decay schedules (Table 3)."""
+import math
+
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import DecayController, quantize_k, schedule_preview
+
+
+def make(k_schedule="fixed", eta_schedule="fixed", **kw):
+    return FedConfig(k0=80, eta0=0.3, k_schedule=k_schedule,
+                     eta_schedule=eta_schedule, loss_window=5,
+                     plateau_patience=3, **kw)
+
+
+def test_fixed_and_dsgd():
+    assert schedule_preview(make("fixed"), 5) == [80] * 5
+    assert schedule_preview(make("dsgd"), 5) == [1] * 5
+
+
+def test_rounds_schedule_matches_eq10():
+    fed = make("rounds")
+    ks = schedule_preview(fed, 1000)
+    for r in (1, 2, 10, 100, 1000):
+        assert ks[r - 1] == math.ceil(80 / r ** (1 / 3))
+    assert ks[0] == 80
+    # monotone non-increasing
+    assert all(a >= b for a, b in zip(ks, ks[1:]))
+
+
+def test_eta_rounds_matches_eq12():
+    ctrl = DecayController(make(eta_schedule="rounds"))
+    for r in (1, 4, 100):
+        assert ctrl.eta_for_round(r) == pytest.approx(0.3 / math.sqrt(r))
+
+
+def test_error_schedule_uses_rolling_window():
+    ctrl = DecayController(make("error"))
+    # cold: K stays at K0 until the window (5) fills — paper §3.5
+    for r in range(1, 5):
+        assert ctrl.k_for_round(r) == 80
+        ctrl.observe_round_losses(1.0)
+    assert ctrl.k_for_round(5) == 80          # ratio 1.0
+    # loss drops to 1/8 => cbrt(1/8) = 1/2 => K = 40
+    for _ in range(20):
+        ctrl.observe_round_losses(0.125)
+    assert ctrl.k_for_round(6) == 40
+
+
+def test_error_eta_schedule():
+    ctrl = DecayController(make(eta_schedule="error"))
+    for _ in range(10):
+        ctrl.observe_round_losses(0.25)
+    ctrl._f0 = 1.0
+    assert ctrl.eta_for_round(7) == pytest.approx(0.3 * 0.5)
+
+
+def test_step_schedule_decays_on_plateau():
+    ctrl = DecayController(make("step"))
+    assert ctrl.k_for_round(1) == 80
+    ctrl.observe_validation(0.5)
+    for _ in range(5):
+        ctrl.observe_validation(0.5)          # no improvement
+    assert ctrl.plateau.plateaued
+    assert ctrl.k_for_round(10) == 8          # K0/10
+
+
+def test_cosine_beyond_paper():
+    fed = make("cosine", rounds=100)
+    ks = schedule_preview(fed, 100)
+    assert ks[0] == 80 and ks[-1] <= 2
+    assert all(a >= b for a, b in zip(ks, ks[1:]))
+
+
+def test_quantize_k_bounds_distinct_values():
+    fed = FedConfig(k0=80, k_schedule="rounds", k_quantize=True)
+    ks = schedule_preview(fed, 5000)
+    raw = schedule_preview(FedConfig(k0=80, k_schedule="rounds"), 5000)
+    assert len(set(ks)) < len(set(raw))
+    assert len(set(ks)) <= 16                  # geometric grid is small
+    # quantization never increases K above the unquantized K0
+    assert max(ks) <= 80 and min(ks) >= 1
+
+
+def test_invalid_schedule_raises():
+    with pytest.raises(ValueError):
+        DecayController(FedConfig(k_schedule="bogus"))
+    with pytest.raises(ValueError):
+        DecayController(FedConfig(eta_schedule="bogus"))

@@ -1,0 +1,97 @@
+"""Sharding-rule unit tests (FakeMesh — no devices needed)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.distributed import sharding
+from repro.models import registry
+
+
+def specs_for(arch, mesh, two_d=False, fsdp_axes=("data",)):
+    cfg = get_arch(arch)
+    shapes = jax.eval_shape(
+        lambda: registry.init(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+    return cfg, shapes, sharding.param_pspecs(cfg, shapes, mesh, two_d=two_d,
+                                              fsdp_axes=fsdp_axes)
+
+
+def _axis_total(mesh, entry):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def assert_divisible(shapes, specs, mesh):
+    flat_s = jax.tree.leaves(shapes)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_s, flat_p):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            n = _axis_total(mesh, entry)
+            assert dim % n == 0, (leaf.shape, tuple(spec))
+
+
+def test_every_arch_param_specs_divisible(mesh16x16):
+    for arch in ("qwen2-7b", "gemma2-27b", "mamba2-780m", "zamba2-7b",
+                 "phi3.5-moe-42b-a6.6b", "whisper-tiny", "llava-next-34b"):
+        cfg, shapes, specs = specs_for(arch, mesh16x16)
+        assert_divisible(shapes, specs, mesh16x16)
+
+
+def test_2d_specs_divisible(mesh16x16):
+    for arch in ("mixtral-8x22b", "nemotron-4-340b"):
+        cfg, shapes, specs = specs_for(arch, mesh16x16, two_d=True)
+        assert_divisible(shapes, specs, mesh16x16)
+
+
+def test_col_row_parallel_orientation(mesh16x16):
+    cfg, shapes, specs = specs_for("qwen2-7b", mesh16x16)
+    stack = specs["stack"]["b0"]
+    # col-parallel: wq kernel (lead, in, out) -> out sharded
+    assert tuple(stack["attn"]["wq"]["kernel"])[-1] == "model"
+    # row-parallel: wo kernel -> in sharded
+    assert tuple(stack["attn"]["wo"]["kernel"])[-2] == "model"
+    assert tuple(stack["mlp"]["down"]["kernel"])[-2] == "model"
+    # embedding: vocab sharded
+    assert tuple(specs["embed"]["embedding"])[0] == "model"
+
+
+def test_expert_parallel_when_divisible(mesh16x16):
+    cfg, shapes, specs = specs_for("phi3.5-moe-42b-a6.6b", mesh16x16)
+    # 16 experts over 16-way model axis -> expert parallelism
+    assert tuple(specs["stack"]["b0"]["moe"]["gate"])[-3] == "model"
+    cfg2, shapes2, specs2 = specs_for("mixtral-8x22b", mesh16x16, two_d=True)
+    # 8 experts don't divide 16 -> wide FFN dim sharded instead
+    g = tuple(specs2["stack"]["b0"]["moe"]["gate"])
+    assert g[-3] is None and g[-1] == "model"
+
+
+def test_cache_rules(mesh16x16):
+    cfg = get_arch("qwen2-7b")   # kv=4: not divisible by 16 -> head_dim shard
+    cache = registry.cache_specs(cfg, batch=128, max_seq=1024)
+    specs = sharding.cache_pspecs(cfg, cache, mesh16x16)
+    k_spec = tuple(jax.tree.leaves(specs,
+                                   is_leaf=lambda x: isinstance(x, P))[0])
+    assert "model" in k_spec            # something IS model-sharded
+    cfg2 = get_arch("gemma2-27b")       # kv=16 -> head shard
+    cache2 = registry.cache_specs(cfg2, batch=128, max_seq=1024)
+    specs2 = sharding.cache_pspecs(cfg2, cache2, mesh16x16)
+    leaf = jax.tree.leaves(specs2, is_leaf=lambda x: isinstance(x, P))[0]
+    assert tuple(leaf)[-2] == "model"   # kv-head axis
+
+
+def test_ssm_state_rules(mesh16x16):
+    cfg = get_arch("mamba2-780m")       # 48 ssm heads / 16 OK
+    cache = registry.cache_specs(cfg, batch=128, max_seq=64)
+    specs = sharding.cache_pspecs(cfg, cache, mesh16x16)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for path, spec in flat:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if keys[-1] == "ssm":
+            assert tuple(spec)[-3] == "model"     # heads sharded

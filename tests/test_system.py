@@ -1,0 +1,71 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claim (Table 4 / Figs 1-2): K-decay schedules reach comparable
+or better training error in LESS simulated wall-clock and LESS total compute
+than fixed-K FedAvg, on non-IID federated data.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_paper_task
+from repro.configs.base import FedConfig
+from repro.core import FedAvgTrainer, RuntimeModel, make_eval_fn
+from repro.data import make_paper_task
+from repro.models import small
+
+
+@pytest.fixture(scope="module")
+def sent140():
+    """The paper's convex task (fast on CPU)."""
+    task = get_paper_task("sent140")
+    data = make_paper_task("sent140", np.random.default_rng(0),
+                           num_clients=40, samples_per_client=15)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    return task, data, loss_fn
+
+
+def run_schedule(sent140, k_schedule, eta_schedule="fixed", rounds=25):
+    task, data, loss_fn = sent140
+    fed = FedConfig(total_clients=40, clients_per_round=10, rounds=rounds,
+                    k0=12, eta0=1.0, batch_size=8, loss_window=5,
+                    k_schedule=k_schedule, eta_schedule=eta_schedule, seed=3)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 10)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt,
+                       eval_fn=make_eval_fn(loss_fn, data))
+    return tr.run(rounds, eval_every=5)
+
+
+def test_paper_headline_claim(sent140):
+    """K-decay: comparable error, strictly less compute and wall-clock."""
+    fixed = run_schedule(sent140, "fixed")
+    decay = run_schedule(sent140, "rounds")
+    # strictly fewer SGD steps and less wall-clock (Table 4 mechanism)
+    assert decay.sgd_steps[-1] < 0.7 * fixed.sgd_steps[-1]
+    assert decay.wall_clock_s[-1] < fixed.wall_clock_s[-1]
+    # Fig. 1 is error-vs-TIME: compare at equal simulated wall-clock —
+    # the best fixed-K loss achieved within decay's total time budget
+    t_budget = decay.wall_clock_s[-1]
+    fixed_at_t = min(l for l, t in zip(fixed.min_train_loss,
+                                       fixed.wall_clock_s) if t <= t_budget)
+    assert decay.min_train_loss[-1] <= fixed_at_t * 1.15
+    # both learn
+    assert fixed.min_train_loss[-1] < fixed.train_loss[0]
+    assert decay.min_train_loss[-1] < decay.train_loss[0]
+
+
+def test_eta_decay_comparison_runs(sent140):
+    h = run_schedule(sent140, "fixed", eta_schedule="rounds", rounds=10)
+    assert h.eta[0] == 1.0 and h.eta[-1] == pytest.approx(1.0 / np.sqrt(10))
+    # eta-decay performs the SAME compute as fixed (paper Table 4 note)
+    fixed = run_schedule(sent140, "fixed", rounds=10)
+    assert h.sgd_steps[-1] == fixed.sgd_steps[-1]
+
+
+def test_history_integrity(sent140):
+    h = run_schedule(sent140, "rounds", rounds=8)
+    assert len(h.rounds) == 8
+    assert all(a <= b for a, b in zip(h.wall_clock_s, h.wall_clock_s[1:]))
+    assert all(a <= b for a, b in zip(h.sgd_steps, h.sgd_steps[1:]))
+    assert all(np.isfinite(h.train_loss))

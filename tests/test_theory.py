@@ -1,0 +1,93 @@
+"""The paper's theory, executed: Theorems 1-2, Corollary 2.1."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.theory import (ProblemConstants, optimal_eta, optimal_eta_rounds,
+                               optimal_k, optimal_k_rounds, theorem1_bound)
+
+PC = ProblemConstants(L=4.0, mu=1.0, sigma_sq=0.5, gamma=0.2, g_sq=2.0,
+                      f0=10.0, f_star=0.0, n_clients=10)
+
+
+def test_theorem2_k_decays_as_cube_root_of_time():
+    ks = [optimal_k(PC, eta=0.05, f_current=10.0, comm_time_s=2.0,
+                    horizon_s=w) for w in (1, 8, 64)]
+    # K* ~ W^{-1/3}: doubling horizon 8x halves K*
+    assert ks[0] / ks[1] == pytest.approx(2.0, rel=1e-6)
+    assert ks[1] / ks[2] == pytest.approx(2.0, rel=1e-6)
+
+
+def test_corollary21_eta_decays_as_sqrt_of_time():
+    es = [optimal_eta(PC, k=8, f_current=10.0, comm_time_s=2.0, beta_s=0.1,
+                      horizon_s=w) for w in (1, 4, 16)]
+    assert es[0] / es[1] == pytest.approx(2.0, rel=1e-6)
+    assert es[1] / es[2] == pytest.approx(2.0, rel=1e-6)
+
+
+def test_k_rounds_form_independent_of_beta():
+    # Eq. 10 depends only on R (communication-dominated regime)
+    a = optimal_k_rounds(PC, eta=0.05, rounds=100)
+    assert a == pytest.approx(optimal_k_rounds(PC, eta=0.05, rounds=100))
+    assert optimal_k_rounds(PC, eta=0.05, rounds=800) == pytest.approx(a / 2)
+
+
+def test_theorem1_bound_structure():
+    # first term ~ 1/T, second constant in T: bound decreases to a floor
+    b1 = theorem1_bound(PC, eta=0.01, ks=[8] * 10)
+    b2 = theorem1_bound(PC, eta=0.01, ks=[8] * 1000)
+    assert b2 < b1
+    # larger K inflates the drift term (sum K^3 / sum K ~ K^2)
+    small_k = theorem1_bound(PC, eta=0.01, ks=[2] * 1000)
+    big_k = theorem1_bound(PC, eta=0.01, ks=[32] * 1000)
+    assert big_k > small_k
+    # decaying K sits between the fixed extremes
+    dec = theorem1_bound(PC, eta=0.01,
+                         ks=[max(2, int(32 / (r + 1) ** (1 / 3)))
+                             for r in range(1000)])
+    assert small_k <= dec <= big_k
+
+
+def test_theorem1_bound_holds_on_quadratic_fedavg():
+    """Simulate FedAvg on a strongly-convex quadratic and check the measured
+    min gradient norm is below the Theorem 1 bound."""
+    rng = np.random.default_rng(0)
+    dim, n_clients = 4, 10
+    # client objectives f_c(x) = 0.5 (x - b_c)^T A (x - b_c), A = diag in [mu, L]
+    diag = np.linspace(1.0, 4.0, dim)
+    bs = rng.normal(size=(n_clients, dim)) * 0.5
+    b_bar = bs.mean(axis=0)
+
+    def grad(x, c):
+        return diag * (x - bs[c])
+
+    def global_grad(x):
+        return diag * (x - b_bar)
+
+    def F(x):
+        return 0.5 * np.mean([np.sum(diag * (x - b)**2) for b in bs])
+
+    x0 = np.full(dim, 3.0)
+    f_star = F(b_bar)
+    g_sq = (4.0 ** 2) * float(np.sum((x0 - b_bar) ** 2))
+    pc = ProblemConstants(L=4.0, mu=1.0, sigma_sq=0.0,
+                          gamma=F(b_bar) - 0.0, g_sq=g_sq, f0=F(x0),
+                          f_star=f_star, n_clients=n_clients)
+
+    eta = 1 / (4 * pc.L)
+    ks = [max(1, int(8 / (r + 1) ** (1 / 3))) for r in range(50)]
+    x = x0.copy()
+    min_gn = np.inf
+    for k in ks:
+        clients = []
+        for c in range(n_clients):
+            xc = x.copy()
+            for _ in range(k):
+                xc -= eta * grad(xc, c)
+            clients.append(xc)
+        x = np.mean(clients, axis=0)
+        min_gn = min(min_gn, float(np.sum(global_grad(x) ** 2)))
+
+    bound = theorem1_bound(pc, eta=eta, ks=ks)
+    assert min_gn <= bound
