@@ -4,6 +4,10 @@ Runs every schedule of Table 3 on synthetic non-IID versions of the paper's
 tasks under the paper's runtime model (Eq. 5, Table 1/2 constants), and
 reports: min training loss within the time budget (Fig. 1), best validation
 accuracy (Fig. 2), and SGD steps relative to K-eta-fixed (Table 4).
+
+Also benchmarks the K-bucketed round engine against the seed per-round loop
+(``engine_*`` rows): real rounds/sec speedup and compile count vs. the
+K-quantization grid bound (DESIGN.md §6.4).
 """
 from __future__ import annotations
 
@@ -15,7 +19,8 @@ import numpy as np
 
 from repro.configs import get_paper_task
 from repro.configs.base import FedConfig
-from repro.core import FedAvgTrainer, RuntimeModel, make_eval_fn
+from repro.core import (FedAvgTrainer, RuntimeModel, make_eval_fn,
+                        quantize_k, run_reference_rounds)
 from repro.data import make_paper_task
 from repro.models import small
 
@@ -74,6 +79,105 @@ def run_task(task_name: str, rounds: int, *, seed: int = 0,
     return results
 
 
+def run_engine_speedup(rounds: int = 200, *, task_name: str = "sent140",
+                       clients_per_round: int = 4, batch_size: int = 4,
+                       prefetch: bool = False, seed: int = 0,
+                       verbose: bool = False) -> Dict:
+    """K-bucketed engine vs. seed loop on the ``rounds`` K-decay schedule.
+
+    The default config is the dispatch-bound regime the bucketing targets:
+    small per-round payloads over a long horizon — where per-round python,
+    dispatch and the seed loop's blocking per-round loss sync dominate.
+    (The background prefetch thread targets the opposite, compute-bound
+    regime — see ``run_prefetch_overlap`` — so it is off here.)
+
+    Both loops run twice and the second (warm-executable) pass is timed, so
+    the numbers are steady-state rounds/sec — the regime long federated runs
+    live in — not XLA compile time.  Also reports the engine's compile count
+    against its bound, the K-quantization grid size (DESIGN.md §6.4)."""
+    task = get_paper_task(task_name)
+    data = make_paper_task(task_name, np.random.default_rng(seed),
+                           num_clients=QUICK["clients"],
+                           samples_per_client=QUICK["samples"])
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    fed = FedConfig(total_clients=data.num_clients,
+                    clients_per_round=clients_per_round, rounds=rounds,
+                    k0=QUICK["k0"], eta0=task.fed.eta0,
+                    batch_size=batch_size, k_schedule="rounds",
+                    k_quantize=True, prefetch=prefetch, seed=seed)
+    grid = len({quantize_k(k, fed.k0) for k in range(1, fed.k0 + 1)})
+    params0 = small.init_task_model(jax.random.PRNGKey(seed), task)
+
+    ref = run_reference_rounds(loss_fn, params0, data, fed, rounds)  # warm-up
+    seed_compiles = len(set(ref.ks))
+    t0 = time.time()
+    run_reference_rounds(loss_fn, params0, data, fed, rounds,
+                         round_fn=ref.round_fn)
+    seed_s = time.time() - t0
+
+    rt = RuntimeModel(task.model_size_mb, task.runtime, fed.clients_per_round)
+    tr = FedAvgTrainer(loss_fn, params0, data, fed, rt)
+    tr.run(rounds)                                                  # warm-up
+    t0 = time.time()
+    tr.run(rounds)     # loss-free schedule: identical K trajectory, warm jit
+    engine_s = time.time() - t0
+
+    out = {"rounds": rounds, "seed_s": seed_s, "engine_s": engine_s,
+           "speedup": seed_s / engine_s,
+           "seed_rps": rounds / seed_s, "engine_rps": rounds / engine_s,
+           "compile_count": tr.compile_count, "seed_compiles": seed_compiles,
+           "k_grid_size": grid}
+    if verbose:
+        print(f"  engine_bucketed[{task_name}]: {out['engine_rps']:.1f} "
+              f"rounds/s vs seed {out['seed_rps']:.1f} rounds/s "
+              f"({out['speedup']:.2f}x); compiles {out['compile_count']} <= "
+              f"grid {grid} (seed loop: {seed_compiles})")
+    return out
+
+
+def run_prefetch_overlap(rounds: int = 48, *, seed: int = 0,
+                         verbose: bool = False) -> Dict:
+    """Background prefetch thread vs. the inline builder on a compute-bound
+    config (large batches, fixed K0, periodic eval).
+
+    Expected ≈1.0x on CPU: async dispatch already hides the depth-1 inline
+    build behind the previous bucket's device work, so this row is an
+    overhead check — the thread must not cost throughput.  Its value is the
+    double-buffering contract for regimes where the main thread blocks
+    (frequent feedback syncs, blocking dispatch) — see DESIGN.md §6.5/§6.6."""
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(seed),
+                           num_clients=QUICK["clients"],
+                           samples_per_client=QUICK["samples"])
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params0 = small.init_task_model(jax.random.PRNGKey(seed), task)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 8)
+    eval_fn = make_eval_fn(loss_fn, data)
+    trainers = {}
+    for prefetch in (False, True):
+        fed = FedConfig(total_clients=data.num_clients, clients_per_round=8,
+                        rounds=rounds, k0=QUICK["k0"], eta0=task.fed.eta0,
+                        batch_size=32, k_schedule="fixed",
+                        prefetch=prefetch, seed=seed)
+        tr = FedAvgTrainer(loss_fn, params0, data, fed, rt, eval_fn=eval_fn)
+        tr.run(rounds, eval_every=8)                                # warm-up
+        trainers[prefetch] = tr
+    times = {False: [], True: []}
+    for _ in range(3):                     # alternate legs; min vs host noise
+        for prefetch in (False, True):
+            t0 = time.time()
+            trainers[prefetch].run(rounds, eval_every=8)
+            times[prefetch].append(time.time() - t0)
+    out = {"rounds": rounds, "sync_s": min(times[False]),
+           "prefetch_s": min(times[True]),
+           "speedup": min(times[False]) / min(times[True])}
+    if verbose:
+        print(f"  prefetch_overlap: {rounds / out['prefetch_s']:.1f} rounds/s "
+              f"vs sync {rounds / out['sync_s']:.1f} rounds/s "
+              f"({out['speedup']:.2f}x)")
+    return out
+
+
 def run(tasks=("sent140", "femnist"), rounds=None,
         verbose=True) -> List[Tuple[str, float, str]]:
     rows = []
@@ -85,4 +189,14 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                          f"acc={r['max_val_acc']:.3f};"
                          f"relsteps={r['relative_sgd_steps']:.3f};"
                          f"simW={r['sim_wall_clock_s']:.0f}s"))
+    e = run_engine_speedup(verbose=verbose)
+    rows.append(("engine_bucketed_vs_seed", e["engine_s"] * 1e6,
+                 f"speedup={e['speedup']:.2f}x;"
+                 f"rps={e['engine_rps']:.1f};"
+                 f"compiles={e['compile_count']};"
+                 f"grid={e['k_grid_size']}"))
+    p = run_prefetch_overlap(verbose=verbose)
+    rows.append(("engine_prefetch_overlap", p["prefetch_s"] * 1e6,
+                 f"speedup={p['speedup']:.2f}x;"
+                 f"rps={p['rounds'] / p['prefetch_s']:.1f}"))
     return rows

@@ -42,6 +42,9 @@ def main():
         h = trainer.run(args.rounds, eval_every=10, verbose=True)
         results[schedule] = h
 
+        print(f"    ({trainer.compile_count} bucket executables compiled "
+              f"for {args.rounds} rounds)")
+
     f, d = results["fixed"], results["rounds"]
     print("\n=== summary (paper's headline claim) ===")
     print(f"fixed-K : loss={f.min_train_loss[-1]:.4f} "

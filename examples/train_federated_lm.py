@@ -35,6 +35,10 @@ def main():
     ap.add_argument("--k0", type=int, default=8)
     ap.add_argument("--k-schedule", default="rounds",
                     choices=("fixed", "rounds", "error", "step", "cosine", "dsgd"))
+    ap.add_argument("--server-optimizer", default="avg",
+                    choices=("avg", "fedadam", "fedavgm", "fedyogi"))
+    ap.add_argument("--aggregator", default="mean",
+                    choices=("mean", "kernel", "median", "trimmed_mean"))
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
@@ -55,7 +59,9 @@ def main():
 
     fed = FedConfig(total_clients=24, clients_per_round=6, rounds=args.rounds,
                     k0=args.k0, eta0=0.05, batch_size=8, loss_window=8,
-                    k_schedule=args.k_schedule)
+                    k_schedule=args.k_schedule,
+                    server_optimizer=args.server_optimizer,
+                    aggregator=args.aggregator)
     rt = RuntimeModel(n_params * 32 / 1e6, RuntimeModelConfig(beta_seconds=0.05),
                       fed.clients_per_round)
     params = registry.init(jax.random.PRNGKey(0), cfg)

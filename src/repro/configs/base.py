@@ -161,10 +161,17 @@ class FedConfig:
     step_decay_factor: float = 10.0   # K0/10 per the paper
     k_min: int = 1
     k_quantize: bool = False          # beyond-paper: quantize K to geometric grid
-    server_optimizer: str = "avg"     # avg | fedadam (beyond-paper)
+    server_optimizer: str = "avg"     # avg | fedadam | fedavgm | fedyogi
     server_lr: float = 1.0
     seed: int = 0
     strategy: str = "parallel"        # parallel (vmap) | sequential (scan)
+    # --- round engine (DESIGN.md §6) ---
+    aggregator: str = "mean"          # mean | kernel | median | trimmed_mean
+    trim_fraction: float = 0.1        # for aggregator="trimmed_mean"
+    bucket_rounds: int = 8            # max rounds per jitted K-bucket scan
+    feedback_bucket_rounds: int = 1   # bucket length for error/step schedules
+                                      # (1 == per-round feedback, seed-exact)
+    prefetch: bool = True             # build bucket r+1 on a background thread
 
 
 @dataclass(frozen=True)

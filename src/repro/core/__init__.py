@@ -1,12 +1,19 @@
 # The paper's primary contribution: FedAvg with decaying local SGD steps.
-from repro.core.fedavg import FedAvgTrainer, History, make_eval_fn, make_round_fn
+from repro.core import theory
+from repro.core.engine import (RoundEngine, RoundScheduler, get_aggregator,
+                               get_server_optimizer)
+from repro.core.fedavg import (FedAvgTrainer, History, ReferenceRun,
+                               make_eval_fn, make_round_fn,
+                               run_reference_rounds)
 from repro.core.loss_tracker import LossTracker, PlateauDetector
 from repro.core.runtime_model import RoundCost, RuntimeModel
 from repro.core.schedules import (DecayController, ETA_SCHEDULES, K_SCHEDULES,
                                   quantize_k, schedule_preview)
-from repro.core import theory
 
-__all__ = ["FedAvgTrainer", "History", "make_eval_fn", "make_round_fn",
+__all__ = ["FedAvgTrainer", "History", "ReferenceRun", "make_eval_fn",
+           "make_round_fn", "run_reference_rounds", "RoundEngine",
+           "RoundScheduler",
+           "get_aggregator", "get_server_optimizer",
            "LossTracker", "PlateauDetector", "RoundCost", "RuntimeModel",
            "DecayController", "ETA_SCHEDULES", "K_SCHEDULES", "quantize_k",
            "schedule_preview", "theory"]

@@ -1,0 +1,23 @@
+"""Layered FedAvg round engine (DESIGN.md §6).
+
+    ClientUpdate -> Aggregator -> ServerOptimizer      (one round)
+    RoundScheduler -> K-buckets -> RoundEngine scan    (many rounds, few compiles)
+    BatchPrefetcher                                    (host/device overlap)
+"""
+from repro.core.engine.aggregators import (AGGREGATORS, get_aggregator,
+                                           weighted_mean)
+from repro.core.engine.client import ClientResult, client_update, \
+    make_client_update
+from repro.core.engine.round import (RoundEngine, make_bucket_fn,
+                                     make_round_core, make_round_fn)
+from repro.core.engine.scheduler import Bucket, RoundScheduler, is_loss_free
+from repro.core.engine.server import (SERVER_OPTIMIZERS, ServerOptimizer,
+                                      get_server_optimizer)
+from repro.core.engine.trainer import FedAvgTrainer, History, make_eval_fn
+
+__all__ = ["AGGREGATORS", "get_aggregator", "weighted_mean", "ClientResult",
+           "client_update", "make_client_update", "RoundEngine",
+           "make_bucket_fn", "make_round_core", "make_round_fn", "Bucket",
+           "RoundScheduler", "is_loss_free", "SERVER_OPTIMIZERS",
+           "ServerOptimizer", "get_server_optimizer", "FedAvgTrainer",
+           "History", "make_eval_fn"]

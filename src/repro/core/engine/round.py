@@ -1,0 +1,136 @@
+"""Round execution: single-round core + K-bucketed multi-round scan.
+
+Layering (DESIGN.md §6):
+
+    ClientUpdate (engine.client)   — K-step local SGD, vmapped over clients
+    Aggregator   (engine.aggregators) — client-stack -> aggregate
+    ServerOptimizer (engine.server)   — aggregate -> next global params
+
+``RoundEngine`` composes the three and executes *buckets*: consecutive
+rounds sharing one quantized K, run as a single jitted ``lax.scan`` over the
+round axis. XLA compiles one executable per distinct ``(K, bucket_shape)``
+pair, so with K snapped to the geometric grid (``quantize_k``) the compile
+count is bounded by the grid size — instead of one compile per distinct raw
+K_r and one dispatch per round.
+
+Buckets shorter than the executable shape are padded by repeating the last
+round's batches with ``active=False``; inactive rounds pass params and
+server state through a ``jnp.where`` select, which is bitwise transparent,
+so padding never perturbs training state.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.aggregators import Aggregator, get_aggregator
+from repro.core.engine.client import make_client_update
+from repro.core.engine.server import ServerOptimizer, get_server_optimizer
+
+PyTree = Any
+LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Any]
+
+
+def make_round_core(loss_fn: LossFn, aggregator: Aggregator,
+                    server: ServerOptimizer, server_lr: float):
+    """round_core(params, batches{(N,K,b,...)}, weights(N,), eta, state)
+    -> (new_params, first_losses (N,), last_losses (N,), state)."""
+    client = make_client_update(loss_fn)
+
+    def round_core(params, batches, weights, eta, server_state):
+        client_params, first_losses, last_losses = jax.vmap(
+            client, in_axes=(None, 0, None))(params, batches, eta)
+        aggregate = aggregator(client_params, weights)
+        new_params, server_state = server.step(params, aggregate,
+                                               server_state, server_lr)
+        return new_params, first_losses, last_losses, server_state
+
+    return round_core
+
+
+def make_bucket_fn(round_core):
+    """Multi-round scan over a K-bucket.
+
+    bucket_fn(params, batches{(B,N,K,b,...)}, weights(B,N), etas(B,),
+              active(B,) bool, server_state)
+        -> (new_params, first_losses (B,N), last_losses (B,N), server_state)
+    """
+    def bucket_fn(params, batches, weights, etas, active, server_state):
+        def body(carry, xs):
+            params, state = carry
+            b, w, eta, act = xs
+            new_p, first, last, new_s = round_core(params, b, w, eta, state)
+            new_p = jax.tree.map(lambda n, o: jnp.where(act, n, o),
+                                 new_p, params)
+            new_s = jax.tree.map(lambda n, o: jnp.where(act, n, o),
+                                 new_s, state)
+            return (new_p, new_s), (first, last)
+
+        (params, server_state), (firsts, lasts) = jax.lax.scan(
+            body, (params, server_state), (batches, weights, etas, active))
+        return params, firsts, lasts, server_state
+
+    return bucket_fn
+
+
+class RoundEngine:
+    """Jit-compiled executor for round buckets with a bounded compile cache."""
+
+    def __init__(self, loss_fn: LossFn, *, aggregator: str = "mean",
+                 trim_fraction: float = 0.1, server: str = "avg",
+                 server_lr: float = 1.0):
+        self.server = get_server_optimizer(server)
+        self.round_core = make_round_core(
+            loss_fn, get_aggregator(aggregator, trim_fraction=trim_fraction),
+            self.server, server_lr)
+        self._bucket_fn = jax.jit(make_bucket_fn(self.round_core))
+        self._shape_keys = set()
+
+    def init_server_state(self, params: PyTree) -> Any:
+        return self.server.init(params)
+
+    def run_bucket(self, params, batches, weights, etas, active, server_state
+                   ) -> Tuple[PyTree, jnp.ndarray, jnp.ndarray, Any]:
+        """batches leaves (B, N, K, b, ...); weights (B, N); etas/active (B,)."""
+        lead = next(iter(batches.values())).shape[:3]   # (B, N, K)
+        self._shape_keys.add(lead)
+        return self._bucket_fn(params,
+                               {k: jnp.asarray(v) for k, v in batches.items()},
+                               jnp.asarray(weights, jnp.float32),
+                               jnp.asarray(etas, jnp.float32),
+                               jnp.asarray(active, bool), server_state)
+
+    @property
+    def compile_count(self) -> int:
+        """Number of distinct bucket executables built so far."""
+        try:
+            return int(self._bucket_fn._cache_size())
+        except Exception:
+            return len(self._shape_keys)
+
+
+def make_round_fn(loss_fn: LossFn, *, server: str = "avg",
+                  server_lr: float = 1.0, use_kernel_avg: bool = False):
+    """Seed-compatible single-round builder (one jitted FedAvg round).
+
+    round_fn(params, batches{(N,K,b,...)}, weights (N,), eta, server_state)
+        -> (new_params, first_losses (N,), mean_last_loss, server_state)
+
+    Returns ``(round_fn, srv_init)`` where ``srv_init`` is None for the
+    stateless ``avg`` server (its state is ``()``), matching the historical
+    ``make_round_fn`` contract that `tests` and benchmarks rely on.
+    """
+    srv = get_server_optimizer(server)
+    core = make_round_core(
+        loss_fn, get_aggregator("kernel" if use_kernel_avg else "mean"),
+        srv, server_lr)
+
+    def round_fn(params, batches, weights, eta, server_state):
+        new_params, first_losses, last_losses, server_state = core(
+            params, batches, weights, eta, server_state)
+        return new_params, first_losses, jnp.mean(last_losses), server_state
+
+    srv_init = None if server == "avg" else srv.init
+    return jax.jit(round_fn), srv_init

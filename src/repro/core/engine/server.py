@@ -1,0 +1,69 @@
+"""ServerOptimizer — the server-side step applied to the aggregated model.
+
+Protocol (functional, jit-friendly):
+
+    init(params)                                  -> state
+    step(params, aggregate, state, server_lr)     -> (new_params, state)
+
+``aggregate`` is the output of the round's Aggregator. FedOpt-style servers
+(Reddi et al. '21) treat the *pseudo-gradient* ``delta = params - aggregate``
+as a gradient and run a stateful first-order method on it; plain FedAvg is
+the stateless special case ``params + server_lr * (aggregate - params)``
+(server_lr=1 recovers Algorithm 1 line 11 exactly). See DESIGN.md §6.3.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+
+PyTree = Any
+
+SERVER_OPTIMIZERS = ("avg", "fedadam", "fedavgm", "fedyogi")
+
+
+class ServerOptimizer(NamedTuple):
+    init: Callable[[PyTree], Any]
+    step: Callable[[PyTree, PyTree, Any, float], Tuple[PyTree, Any]]
+
+
+def _avg() -> ServerOptimizer:
+    def init(params):
+        return ()
+
+    def step(params, aggregate, state, server_lr):
+        new = jax.tree.map(
+            lambda p, a: (p + server_lr * (a - p)).astype(p.dtype),
+            params, aggregate)
+        return new, state
+
+    return ServerOptimizer(init, step)
+
+
+def _from_optim(pair) -> ServerOptimizer:
+    opt_init, opt_update = pair
+
+    def init(params):
+        return opt_init(params)
+
+    def step(params, aggregate, state, server_lr):
+        delta = optim.tree_sub(params, aggregate)   # pseudo-gradient
+        updates, state = opt_update(delta, state, params, server_lr)
+        return optim.apply_updates(params, updates), state
+
+    return ServerOptimizer(init, step)
+
+
+def get_server_optimizer(name: str) -> ServerOptimizer:
+    if name == "avg":
+        return _avg()
+    if name == "fedadam":
+        return _from_optim(optim.fedadam_server())
+    if name == "fedavgm":
+        return _from_optim(optim.fedavgm_server())
+    if name == "fedyogi":
+        return _from_optim(optim.fedyogi_server())
+    raise ValueError(f"server optimizer {name!r} not in {SERVER_OPTIMIZERS}")

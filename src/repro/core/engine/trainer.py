@@ -1,0 +1,233 @@
+"""FedAvgTrainer on the layered round engine (DESIGN.md §6).
+
+Drives: RoundScheduler (K-bucket plan) -> BatchPrefetcher (host tensors for
+the upcoming bucket, built on a background thread) -> RoundEngine (one
+jitted multi-round scan per bucket) -> DecayController feedback.
+
+Synchronisation policy:
+  * loss-free schedules (fixed/dsgd/rounds/cosine x fixed/rounds) never
+    block mid-plan: bucket r's losses are materialised only after bucket
+    r+1 has been dispatched, so host batch building, device compute and
+    history accounting overlap;
+  * error/step schedules sync at bucket boundaries only (bucket length
+    ``fed.feedback_bucket_rounds``; the default 1 reproduces the seed
+    per-round feedback loop exactly).
+
+Evaluation happens at bucket boundaries; the scheduler cuts buckets at
+``eval_every`` multiples so eval rounds match the seed loop exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core.engine.round import LossFn, RoundEngine
+from repro.core.engine.scheduler import Bucket, RoundScheduler
+from repro.core.runtime_model import RuntimeModel
+from repro.core.schedules import DecayController
+from repro.data import pipeline
+from repro.data.synthetic import FederatedData
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# history
+# ---------------------------------------------------------------------------
+
+@dataclass
+class History:
+    rounds: List[int] = field(default_factory=list)
+    k: List[int] = field(default_factory=list)
+    eta: List[float] = field(default_factory=list)
+    wall_clock_s: List[float] = field(default_factory=list)   # cumulative, Eq. 5
+    sgd_steps: List[int] = field(default_factory=list)        # cumulative
+    train_loss: List[float] = field(default_factory=list)     # Eq. 15 round mean
+    min_train_loss: List[float] = field(default_factory=list) # Fig. 1 metric
+    val_rounds: List[int] = field(default_factory=list)
+    val_error: List[float] = field(default_factory=list)
+    max_val_acc: List[float] = field(default_factory=list)    # Fig. 2 metric
+
+    def as_dict(self) -> Dict[str, list]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, list]) -> "History":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: list(v) for k, v in d.items() if k in names})
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+class FedAvgTrainer:
+    def __init__(self, loss_fn: LossFn, init_params: PyTree,
+                 data: FederatedData, fed: FedConfig,
+                 runtime: RuntimeModel,
+                 eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
+                 use_kernel_avg: bool = False):
+        self.loss_fn = loss_fn
+        self.params = init_params
+        self.data = data
+        self.fed = fed
+        self.runtime = runtime
+        self.eval_fn = eval_fn
+        self.ctrl = DecayController(fed)
+        aggregator = "kernel" if use_kernel_avg else fed.aggregator
+        self.engine = RoundEngine(loss_fn, aggregator=aggregator,
+                                  trim_fraction=fed.trim_fraction,
+                                  server=fed.server_optimizer,
+                                  server_lr=fed.server_lr)
+        self.server_state = self.engine.init_server_state(init_params)
+        self.history = History()
+        self._np_rng = np.random.default_rng(fed.seed)
+        self._wall = 0.0
+        self._steps = 0
+        self._min_loss = float("inf")
+        self._max_acc = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def compile_count(self) -> int:
+        return self.engine.compile_count
+
+    def run(self, rounds: Optional[int] = None, eval_every: int = 10,
+            verbose: bool = False) -> History:
+        rounds = rounds if rounds is not None else self.fed.rounds
+        sched = RoundScheduler(
+            self.ctrl, self.fed, total_rounds=rounds,
+            eval_every=eval_every if self.eval_fn is not None else None)
+        # the builder consumes the trainer's persistent rng so repeated
+        # run() calls continue one sample stream (seed-loop semantics)
+        builder = pipeline.make_builder(
+            self.data, self.fed.clients_per_round, self.fed.batch_size,
+            self._np_rng,
+            background=self.fed.prefetch and sched.loss_free)
+        try:
+            if sched.loss_free:
+                self._run_pipelined(sched, builder, rounds, verbose)
+            else:
+                self._run_feedback(sched, builder, rounds, verbose)
+        finally:
+            builder.close()
+        return self.history
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, bucket: Bucket,
+                  bb: pipeline.BucketBatch) -> jax.Array:
+        """Run one bucket on device; returns the (B, N) first-loss futures."""
+        pad = bucket.shape_rounds - len(bucket)
+        etas = np.asarray(list(bucket.etas) + [bucket.etas[-1]] * pad,
+                          np.float32)
+        self.params, firsts, _lasts, self.server_state = \
+            self.engine.run_bucket(self.params, bb.batches, bb.weights,
+                                   etas, bb.active, self.server_state)
+        return firsts
+
+    def _run_pipelined(self, sched: RoundScheduler, builder, rounds: int,
+                       verbose: bool) -> None:
+        plan = sched.plan()
+        pending: Optional[Tuple[Bucket, jax.Array]] = None
+        nxt = next(plan, None)
+        if nxt is not None:
+            builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds)
+        while nxt is not None:
+            cur, nxt = nxt, next(plan, None)
+            if nxt is not None:   # scheduler announces the upcoming K-bucket
+                builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds)
+            firsts = self._dispatch(cur, builder.get())
+            if pending is not None:     # sync bucket r-1 while r computes
+                self._absorb(*pending)
+                pending = None
+            if cur.eval_after:
+                self._absorb(cur, firsts)
+                self._eval(cur.rounds[-1], verbose)
+            else:
+                pending = (cur, firsts)
+        if pending is not None:
+            self._absorb(*pending)
+
+    def _run_feedback(self, sched: RoundScheduler, builder, rounds: int,
+                      verbose: bool) -> None:
+        # plan() is lazy: each iteration consults the controller, which has
+        # absorbed the previous bucket's losses by the time it is advanced
+        for bucket in sched.plan():
+            builder.submit(len(bucket), bucket.k, pad_to=bucket.shape_rounds)
+            firsts = self._dispatch(bucket, builder.get())
+            self._absorb(bucket, firsts)          # boundary sync
+            if bucket.eval_after:
+                self._eval(bucket.rounds[-1], verbose)
+
+    # ------------------------------------------------------------------
+    def _absorb(self, bucket: Bucket, firsts: jax.Array) -> None:
+        """Materialise a finished bucket into controller + history state."""
+        losses = np.asarray(firsts)               # device sync
+        h = self.history
+        for i, r in enumerate(bucket.rounds):
+            round_loss = float(np.mean(losses[i]))
+            self.ctrl.observe_round_losses(round_loss)
+            cost = self.runtime.round_cost(bucket.k)
+            self._wall += cost.wall_clock_s
+            self._steps += cost.sgd_steps
+            self._min_loss = min(self._min_loss, round_loss)
+            h.rounds.append(r)
+            h.k.append(bucket.k)
+            h.eta.append(bucket.etas[i])
+            h.wall_clock_s.append(self._wall)
+            h.sgd_steps.append(self._steps)
+            h.train_loss.append(round_loss)
+            h.min_train_loss.append(self._min_loss)
+
+    def _eval(self, r: int, verbose: bool) -> None:
+        metrics = self.eval_fn(self.params)
+        err = metrics.get("error", 1.0 - metrics.get("acc", 0.0))
+        self.ctrl.observe_validation(err)
+        self._max_acc = max(self._max_acc, metrics.get("acc", 0.0))
+        h = self.history
+        h.val_rounds.append(r)
+        h.val_error.append(err)
+        h.max_val_acc.append(self._max_acc)
+        if verbose:
+            print(f"round {r:5d} K={h.k[-1]:3d} eta={h.eta[-1]:.4f} "
+                  f"loss={h.train_loss[-1]:.4f} val_err={err:.4f} "
+                  f"W={self._wall:.1f}s steps={self._steps}")
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+def make_eval_fn(loss_fn: LossFn, data: FederatedData, batch_size: int = 128):
+    """Validation accuracy/error over the global validation split.
+
+    Per-batch means are weighted by batch size so the ragged tail batch
+    (``val_batches`` keeps the remainder) contributes exactly its share.
+    """
+    batches = pipeline.val_batches(data, batch_size)
+
+    @jax.jit
+    def eval_batch(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return loss, metrics.get("acc", jax.numpy.zeros(()))
+
+    def eval_fn(params) -> Dict[str, float]:
+        loss_sum = acc_sum = 0.0
+        n_tot = 0
+        for b in batches:
+            n = len(b["y"])
+            l, a = eval_batch(params,
+                              {k: jax.numpy.asarray(v) for k, v in b.items()})
+            loss_sum += float(l) * n
+            acc_sum += float(a) * n
+            n_tot += n
+        acc = acc_sum / max(n_tot, 1)
+        return {"loss": loss_sum / max(n_tot, 1), "acc": acc,
+                "error": 1.0 - acc}
+
+    return eval_fn

@@ -1,32 +1,27 @@
-"""FedAvg with decaying local steps — the training engine (Algorithm 1).
+"""FedAvg with decaying local steps — compatibility facade + reference loop.
 
-One communication round, jitted end-to-end:
-
-    client_params, first_losses = vmap_c [ K-step local SGD from x_r ]
-    x_{r+1} = server_update( sum_c p_c * client_params )
-
-``K`` is the leading axis of the round's batch tensors, so a K-decay schedule
-changes the compiled shape; XLA caches one executable per distinct K (the
-``k_quantize`` option bounds that set — see DESIGN.md §5).
-
-The engine is model-agnostic: it takes ``loss_fn(params, batch) ->
-(loss, metrics)`` and initial params, so the same engine trains the paper's
-convex/DNN/CNN/GRU tasks and the assigned transformer architectures.
+The training engine now lives in ``repro.core.engine`` (see DESIGN.md §6):
+ClientUpdate / Aggregator / ServerOptimizer compose into a round, a
+RoundScheduler groups rounds into K-buckets executed as single jitted
+multi-round scans, and a BatchPrefetcher overlaps host batch construction
+with device compute. This module re-exports the public names that
+historically lived here (``FedAvgTrainer``, ``History``, ``make_round_fn``,
+``make_eval_fn``) and keeps the *seed per-round loop* as
+``run_reference_rounds`` — the bitwise oracle the engine's bucketed
+execution is verified against (tests/test_engine.py) and the baseline for
+the dispatch-amortisation benchmark.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, NamedTuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import optim
 from repro.configs.base import FedConfig
-from repro.core.runtime_model import RuntimeModel
+from repro.core.engine.round import make_round_fn
+from repro.core.engine.server import get_server_optimizer
+from repro.core.engine.trainer import FedAvgTrainer, History, make_eval_fn
 from repro.core.schedules import DecayController
 from repro.data import pipeline
 from repro.data.synthetic import FederatedData
@@ -34,174 +29,50 @@ from repro.data.synthetic import FederatedData
 PyTree = Any
 LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Any]
 
+__all__ = ["FedAvgTrainer", "History", "make_eval_fn", "make_round_fn",
+           "ReferenceRun", "run_reference_rounds"]
 
-# ---------------------------------------------------------------------------
-# round function
-# ---------------------------------------------------------------------------
 
-def make_round_fn(loss_fn: LossFn, *, server: str = "avg",
-                  server_lr: float = 1.0, use_kernel_avg: bool = False):
-    """Build the jitted FedAvg round.
+class ReferenceRun(NamedTuple):
+    params: PyTree
+    losses: np.ndarray       # per-round mean first-step losses
+    ks: List[int]            # per-round K_r actually executed
+    round_fn: Any            # pass back in to reuse warm executables
 
-    round_fn(params, batches{(N,K,b,...)}, weights (N,), eta, server_state)
-        -> (new_params, first_losses (N,), mean_last_loss, server_state)
+
+def run_reference_rounds(loss_fn: LossFn, params: PyTree,
+                         data: FederatedData, fed: FedConfig,
+                         rounds: int, *, round_fn=None) -> ReferenceRun:
+    """The seed trainer's inner loop, verbatim: one jitted round per
+    dispatch, one blocking ``float(jnp.mean(...))`` sync per round, one XLA
+    compile per distinct K_r. Follows the configured K/eta schedules via a
+    fresh ``DecayController`` (loss feedback observed per round, exactly as
+    the seed trainer did).
+
+    The bitwise-parity oracle for the bucketed engine (tests/test_engine.py)
+    and the baseline for the dispatch-amortisation benchmark
+    (benchmarks/schedules_bench.py) — pass ``round_fn`` from a previous run
+    to time a warm pass.
     """
-    if server == "fedadam":
-        srv_init, srv_update = optim.fedadam_server()
-    else:
-        srv_init, srv_update = None, None
-
-    def local_sgd(params, client_batches, eta):
-        def step(p, batch):
-            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
-            p = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype), p, grads)
-            return p, loss
-
-        final, losses = jax.lax.scan(step, params, client_batches)
-        return final, losses[0], losses[-1]
-
-    def round_fn(params, batches, weights, eta, server_state):
-        client_params, first_losses, last_losses = jax.vmap(
-            local_sgd, in_axes=(None, 0, None))(params, batches, eta)
-        if use_kernel_avg:
-            from repro.kernels import ops as kops
-            avg = kops.fedavg_reduce_tree(client_params, weights)
-        else:
-            avg = jax.tree.map(
-                lambda cp: jnp.einsum("c,c...->...", weights.astype(jnp.float32),
-                                      cp.astype(jnp.float32)).astype(cp.dtype),
-                client_params)
-        if server == "fedadam":
-            # pseudo-gradient = -(avg - params); Adam server step (Reddi'21)
-            delta = optim.tree_sub(params, avg)
-            updates, server_state = srv_update(delta, server_state, params,
-                                               server_lr)
-            new_params = optim.apply_updates(params, updates)
-        else:
-            # plain FedAvg (server_lr=1 recovers Algorithm 1 line 11 exactly)
-            new_params = jax.tree.map(
-                lambda p, a: (p + server_lr * (a - p)).astype(p.dtype),
-                params, avg)
-        return new_params, first_losses, jnp.mean(last_losses), server_state
-
-    return jax.jit(round_fn), srv_init
-
-
-# ---------------------------------------------------------------------------
-# history
-# ---------------------------------------------------------------------------
-
-@dataclass
-class History:
-    rounds: List[int] = field(default_factory=list)
-    k: List[int] = field(default_factory=list)
-    eta: List[float] = field(default_factory=list)
-    wall_clock_s: List[float] = field(default_factory=list)   # cumulative, Eq. 5
-    sgd_steps: List[int] = field(default_factory=list)        # cumulative
-    train_loss: List[float] = field(default_factory=list)     # Eq. 15 round mean
-    min_train_loss: List[float] = field(default_factory=list) # Fig. 1 metric
-    val_rounds: List[int] = field(default_factory=list)
-    val_error: List[float] = field(default_factory=list)
-    max_val_acc: List[float] = field(default_factory=list)    # Fig. 2 metric
-
-    def as_dict(self) -> Dict[str, list]:
-        return dataclasses.asdict(self)
-
-
-# ---------------------------------------------------------------------------
-# trainer
-# ---------------------------------------------------------------------------
-
-class FedAvgTrainer:
-    def __init__(self, loss_fn: LossFn, init_params: PyTree,
-                 data: FederatedData, fed: FedConfig,
-                 runtime: RuntimeModel,
-                 eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
-                 use_kernel_avg: bool = False):
-        self.loss_fn = loss_fn
-        self.params = init_params
-        self.data = data
-        self.fed = fed
-        self.runtime = runtime
-        self.eval_fn = eval_fn
-        self.ctrl = DecayController(fed)
-        self.round_fn, srv_init = make_round_fn(
-            loss_fn, server=fed.server_optimizer, server_lr=fed.server_lr,
-            use_kernel_avg=use_kernel_avg)
-        self.server_state = srv_init(init_params) if srv_init else ()
-        self.history = History()
-        self._np_rng = np.random.default_rng(fed.seed)
-        self._wall = 0.0
-        self._steps = 0
-        self._min_loss = float("inf")
-        self._max_acc = 0.0
-
-    def run(self, rounds: Optional[int] = None, eval_every: int = 10,
-            verbose: bool = False) -> History:
-        rounds = rounds if rounds is not None else self.fed.rounds
-        fed, data = self.fed, self.data
-        for r in range(1, rounds + 1):
-            k_r = self.ctrl.k_for_round(r)
-            eta_r = self.ctrl.eta_for_round(r)
-
-            ids = pipeline.sample_clients(self._np_rng, data,
-                                          fed.clients_per_round)
-            batches = pipeline.round_batches(self._np_rng, data, ids, k_r,
-                                             fed.batch_size)
-            weights = pipeline.client_weights(data, ids)
-            self.params, first_losses, last_loss, self.server_state = \
-                self.round_fn(self.params,
-                              {k: jnp.asarray(v) for k, v in batches.items()},
-                              jnp.asarray(weights), jnp.float32(eta_r),
-                              self.server_state)
-
-            round_loss = float(jnp.mean(first_losses))
-            self.ctrl.observe_round_losses(round_loss)
-            cost = self.runtime.round_cost(k_r)
-            self._wall += cost.wall_clock_s
-            self._steps += cost.sgd_steps
-            self._min_loss = min(self._min_loss, round_loss)
-
-            h = self.history
-            h.rounds.append(r)
-            h.k.append(k_r)
-            h.eta.append(eta_r)
-            h.wall_clock_s.append(self._wall)
-            h.sgd_steps.append(self._steps)
-            h.train_loss.append(round_loss)
-            h.min_train_loss.append(self._min_loss)
-
-            if self.eval_fn is not None and (r % eval_every == 0 or r == rounds):
-                metrics = self.eval_fn(self.params)
-                err = metrics.get("error", 1.0 - metrics.get("acc", 0.0))
-                self.ctrl.observe_validation(err)
-                self._max_acc = max(self._max_acc, metrics.get("acc", 0.0))
-                h.val_rounds.append(r)
-                h.val_error.append(err)
-                h.max_val_acc.append(self._max_acc)
-                if verbose:
-                    print(f"round {r:5d} K={k_r:3d} eta={eta_r:.4f} "
-                          f"loss={round_loss:.4f} val_err={err:.4f} "
-                          f"W={self._wall:.1f}s steps={self._steps}")
-        return self.history
-
-
-def make_eval_fn(loss_fn: LossFn, data: FederatedData, batch_size: int = 128):
-    """Validation accuracy/error over the global validation split."""
-    batches = pipeline.val_batches(data, batch_size)
-
-    @jax.jit
-    def eval_batch(params, batch):
-        loss, metrics = loss_fn(params, batch)
-        return loss, metrics.get("acc", jnp.zeros(()))
-
-    def eval_fn(params) -> Dict[str, float]:
-        losses, accs = [], []
-        for b in batches:
-            l, a = eval_batch(params, {k: jnp.asarray(v) for k, v in b.items()})
-            losses.append(float(l))
-            accs.append(float(a))
-        acc = float(np.mean(accs))
-        return {"loss": float(np.mean(losses)), "acc": acc, "error": 1.0 - acc}
-
-    return eval_fn
+    ctrl = DecayController(fed)
+    if round_fn is None:
+        round_fn, _ = make_round_fn(loss_fn, server=fed.server_optimizer,
+                                    server_lr=fed.server_lr)
+    server_state = (() if fed.server_optimizer == "avg"
+                    else get_server_optimizer(fed.server_optimizer).init(params))
+    rng = np.random.default_rng(fed.seed)
+    losses, ks = [], []
+    for r in range(1, rounds + 1):
+        k_r = ctrl.k_for_round(r)
+        eta_r = ctrl.eta_for_round(r)
+        ids = pipeline.sample_clients(rng, data, fed.clients_per_round)
+        batches = pipeline.round_batches(rng, data, ids, k_r, fed.batch_size)
+        weights = pipeline.client_weights(data, ids)
+        params, first_losses, _, server_state = round_fn(
+            params, {key: jnp.asarray(v) for key, v in batches.items()},
+            jnp.asarray(weights), jnp.float32(eta_r), server_state)
+        loss = float(jnp.mean(first_losses))           # the per-round sync
+        ctrl.observe_round_losses(loss)
+        losses.append(loss)
+        ks.append(k_r)
+    return ReferenceRun(params, np.asarray(losses), ks, round_fn)

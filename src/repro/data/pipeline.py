@@ -7,12 +7,20 @@ minibatches of size b. We materialise these as stacked arrays of shape
 distinct K (K-decay schedules change K across rounds; see the K-quantization
 note in DESIGN.md §5).
 
+The round engine consumes *buckets* of consecutive rounds that share one K
+(DESIGN.md §6.4); ``bucket_batches`` stacks per-round tensors to
+``(B, N, K, b, ...)`` and ``BatchPrefetcher`` builds the next bucket on a
+background thread while the current one runs on device (double buffering).
+
 Sampling is with replacement within a client's local dataset (clients own few
 samples; the paper's K0*b frequently exceeds n_c too).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -48,9 +56,181 @@ def client_weights(data: FederatedData, client_ids: Sequence[int]) -> np.ndarray
 
 
 def val_batches(data: FederatedData, batch_size: int) -> List[Dict[str, np.ndarray]]:
+    """Full validation split, including the ragged tail batch (< batch_size).
+
+    Evaluators must weight per-batch means by batch size (see
+    ``make_eval_fn``) — the tail batch is smaller than the rest.
+    """
     n = len(data.val_y)
     out = []
-    for i in range(0, n - batch_size + 1, batch_size):
+    for i in range(0, n, batch_size):
         out.append({"x": data.val_x[i:i + batch_size],
                     "y": data.val_y[i:i + batch_size]})
-    return out or [{"x": data.val_x, "y": data.val_y}]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# bucket construction + background prefetch
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BucketBatch:
+    """Host tensors for one K-bucket of ``n_rounds`` active rounds, padded to
+    ``pad_to`` rounds (padding repeats the last active round; the engine
+    masks it with ``active=False``)."""
+    batches: Dict[str, np.ndarray]   # (B, N, K, b, ...)
+    weights: np.ndarray              # (B, N)
+    active: np.ndarray               # (B,) bool
+    n_rounds: int
+
+
+def bucket_batches(rng: np.random.Generator, data: FederatedData, *,
+                   n_rounds: int, k: int, clients_per_round: int,
+                   batch_size: int, pad_to: Optional[int] = None) -> BucketBatch:
+    """Draws EXACTLY the same rng stream as ``n_rounds`` sequential calls of
+    sample_clients + round_batches + client_weights — the engine's bitwise
+    parity with the seed per-round loop depends on this ordering.
+
+    Gathers sample rows directly into the preallocated ``(B, N, K, b, ...)``
+    bucket arrays (``np.take(..., out=...)``): no per-round temporaries, no
+    second stacking copy — the bucket build costs less host time than the
+    equivalent sequence of per-round ``round_batches`` calls."""
+    pad_to = pad_to or n_rounds
+    if pad_to < n_rounds:
+        raise ValueError(f"pad_to {pad_to} < n_rounds {n_rounds}")
+    n = min(clients_per_round, data.num_clients)
+    feat = data.client_x[0].shape[1:]
+    lead = (pad_to, n, k, batch_size)
+    xs = np.empty(lead + feat, data.client_x[0].dtype)
+    ys = np.empty(lead + data.client_y[0].shape[1:], data.client_y[0].dtype)
+    weights = np.empty((pad_to, n), np.float32)
+    for i in range(n_rounds):
+        ids = sample_clients(rng, data, clients_per_round)
+        for j, c in enumerate(ids):
+            n_c = len(data.client_y[c])
+            idx = rng.integers(0, n_c, size=k * batch_size)
+            np.take(data.client_x[c], idx, axis=0,
+                    out=xs[i, j].reshape((k * batch_size,) + feat))
+            np.take(data.client_y[c], idx, axis=0,
+                    out=ys[i, j].reshape((k * batch_size,)
+                                         + data.client_y[0].shape[1:]))
+        weights[i] = client_weights(data, ids)
+    for i in range(n_rounds, pad_to):     # masked-out padding rounds
+        xs[i], ys[i], weights[i] = xs[n_rounds - 1], ys[n_rounds - 1], \
+            weights[n_rounds - 1]
+    active = np.zeros(pad_to, bool)
+    active[:n_rounds] = True
+    return BucketBatch(batches={"x": xs, "y": ys}, weights=weights,
+                       active=active, n_rounds=n_rounds)
+
+
+class _BuilderBase:
+    """submit/get protocol shared by the sync and threaded builders. Requests
+    are served strictly FIFO by a single rng, so batch contents depend only
+    on (rng state, submission order) — never on timing.
+
+    ``rng`` may be an int seed or a live ``np.random.Generator``; the
+    trainer passes its persistent Generator (used in place, not copied) so
+    repeated ``run()`` calls continue one sample stream."""
+
+    def __init__(self, data: FederatedData, clients_per_round: int,
+                 batch_size: int,
+                 rng: "Union[int, np.random.Generator]"):
+        self.data = data
+        self.clients_per_round = clients_per_round
+        self.batch_size = batch_size
+        self._rng = np.random.default_rng(rng)
+
+    def _build(self, n_rounds: int, k: int,
+               pad_to: Optional[int]) -> BucketBatch:
+        return bucket_batches(self._rng, self.data, n_rounds=n_rounds, k=k,
+                              clients_per_round=self.clients_per_round,
+                              batch_size=self.batch_size, pad_to=pad_to)
+
+    def submit(self, n_rounds: int, k: int,
+               pad_to: Optional[int] = None) -> None:
+        raise NotImplementedError
+
+    def get(self) -> BucketBatch:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class SyncBatchBuilder(_BuilderBase):
+    """Builds on ``get`` in the caller's thread (prefetch disabled)."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._pending: List = []
+
+    def submit(self, n_rounds, k, pad_to=None):
+        self._pending.append((n_rounds, k, pad_to))
+
+    def get(self):
+        return self._build(*self._pending.pop(0))
+
+
+class BatchPrefetcher(_BuilderBase):
+    """Double-buffered background bucket builder.
+
+    A single daemon thread owns the rng and builds submitted buckets FIFO;
+    the bounded output queue (depth 1 by default) means at most one bucket
+    is staged ahead — bucket r+1's host tensors are constructed while bucket
+    r runs on device. The round scheduler submits the upcoming K-bucket as
+    soon as it is known (immediately, for loss-free schedules).
+    """
+
+    def __init__(self, data: FederatedData, clients_per_round: int,
+                 batch_size: int, rng: "Union[int, np.random.Generator]",
+                 depth: int = 1):
+        super().__init__(data, clients_per_round, batch_size, rng)
+        self._req: "queue.Queue" = queue.Queue()
+        self._out: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True,
+                                        name="fedavg-batch-prefetch")
+        self._thread.start()
+
+    def _work(self):
+        while True:
+            req = self._req.get()
+            if req is None:
+                return
+            try:
+                item = ("ok", self._build(*req))
+            except BaseException as e:          # surfaced on the next get();
+                item = ("err", e)               # worker keeps serving later
+            while not self._stop.is_set():      # requests
+                try:
+                    self._out.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def submit(self, n_rounds, k, pad_to=None):
+        self._req.put((n_rounds, k, pad_to))
+
+    def get(self):
+        status, item = self._out.get()
+        if status == "err":
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        self._req.put(None)
+        while self._thread.is_alive():
+            try:                                 # unblock a pending put
+                self._out.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.1)
+
+
+def make_builder(data: FederatedData, clients_per_round: int, batch_size: int,
+                 rng: "Union[int, np.random.Generator]", *,
+                 background: bool = True) -> _BuilderBase:
+    cls = BatchPrefetcher if background else SyncBatchBuilder
+    return cls(data, clients_per_round, batch_size, rng)

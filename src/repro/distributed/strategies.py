@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.engine import aggregators as agg
+from repro.core.engine.client import client_update
 from repro.models import registry
 
 PyTree = Any
@@ -35,15 +37,11 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 def _local_sgd(loss_fn, params, client_batches, eta):
-    """K steps of SGD from the round-start params. Leaves of
+    """K steps of SGD from the round-start params (the engine's shared
+    ClientUpdate — see repro.core.engine.client). Leaves of
     ``client_batches`` have leading K axis."""
-    def step(p, batch):
-        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
-        p = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype), p, grads)
-        return p, loss
-
-    final, losses = jax.lax.scan(step, params, client_batches)
-    return final, losses[0]
+    res = client_update(loss_fn, params, client_batches, eta)
+    return res.params, res.first_loss
 
 
 def make_fed_train_step(cfg: ArchConfig, *, strategy: str = "parallel",
@@ -70,15 +68,9 @@ def make_fed_train_step(cfg: ArchConfig, *, strategy: str = "parallel",
             client_params, first_losses = jax.vmap(
                 lambda b: _local_sgd(loss_fn, params, b, eta),
                 spmd_axis_name=client_spmd_axes)(batches)
-            if use_kernel_avg:
-                from repro.kernels import ops as kops
-                new_params = kops.fedavg_reduce_tree(client_params, weights)
-            else:
-                w32 = weights.astype(jnp.float32)
-                new_params = jax.tree.map(
-                    lambda cp: jnp.einsum("c,c...->...", w32,
-                                          cp.astype(jnp.float32)).astype(cp.dtype),
-                    client_params)
+            aggregate = agg.get_aggregator(
+                "kernel" if use_kernel_avg else "mean")
+            new_params = aggregate(client_params, weights)
             return new_params, jnp.mean(first_losses)
 
         return train_step

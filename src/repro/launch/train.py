@@ -43,7 +43,15 @@ def main():
                     choices=("fixed", "rounds", "error", "step"))
     ap.add_argument("--k-quantize", action="store_true")
     ap.add_argument("--server-optimizer", default="avg",
-                    choices=("avg", "fedadam"))
+                    choices=("avg", "fedadam", "fedavgm", "fedyogi"))
+    ap.add_argument("--aggregator", default="mean",
+                    choices=("mean", "kernel", "median", "trimmed_mean"))
+    ap.add_argument("--bucket-rounds", type=int, default=8,
+                    help="max rounds per jitted K-bucket scan")
+    ap.add_argument("--feedback-bucket", type=int, default=1,
+                    help="bucket length for error/step schedules")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the background batch prefetch thread")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -68,12 +76,18 @@ def main():
                     loss_window=max(args.rounds // 8, 3),
                     k_schedule=args.k_schedule, eta_schedule=args.eta_schedule,
                     k_quantize=args.k_quantize,
-                    server_optimizer=args.server_optimizer, seed=args.seed)
+                    server_optimizer=args.server_optimizer,
+                    aggregator=args.aggregator,
+                    bucket_rounds=args.bucket_rounds,
+                    feedback_bucket_rounds=args.feedback_bucket,
+                    prefetch=not args.no_prefetch, seed=args.seed)
     rt = RuntimeModel(n_params * 32 / 1e6, RuntimeModelConfig(beta_seconds=0.05),
                       fed.clients_per_round)
     params = registry.init(jax.random.PRNGKey(args.seed), cfg)
     trainer = FedAvgTrainer(loss_fn, params, data, fed, rt)
     h = trainer.run(args.rounds, verbose=False)
+    print(f"[train] engine: {trainer.compile_count} bucket executable(s) "
+          f"compiled for {args.rounds} rounds")
     step = max(args.rounds // 10, 1)
     for i in range(0, args.rounds, step):
         print(f"[train] round {h.rounds[i]:4d} K={h.k[i]:3d} "

@@ -1,6 +1,8 @@
 from repro.optim.optimizers import (adam, apply_updates, fedadam_server,
-                                    momentum, sgd, tree_add, tree_scale,
-                                    tree_sub, tree_zeros_like)
+                                    fedavgm_server, fedyogi_server, momentum,
+                                    sgd, tree_add, tree_scale, tree_sub,
+                                    tree_zeros_like, yogi)
 
-__all__ = ["sgd", "momentum", "adam", "fedadam_server", "apply_updates",
-           "tree_add", "tree_sub", "tree_scale", "tree_zeros_like"]
+__all__ = ["sgd", "momentum", "adam", "yogi", "fedadam_server",
+           "fedavgm_server", "fedyogi_server", "apply_updates", "tree_add",
+           "tree_sub", "tree_scale", "tree_zeros_like"]

@@ -86,6 +86,41 @@ def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
     return init, update
 
 
+def yogi(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-3):
+    """Yogi (Zaheer et al., 2018) — Adam with an additive, sign-controlled
+    second-moment update: v += -(1-b2) * sign(v - g^2) * g^2. The bounded
+    per-step change to v makes it less eager than Adam when gradients spike,
+    which suits the sparse, bursty pseudo-gradients of federated rounds."""
+    def init(params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(
+            lambda vi, g: vi - (1 - b2) * jnp.sign(vi - jnp.square(g))
+            * jnp.square(g),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda mi, vi: -lr * (mi / bc1) / (jnp.sqrt(jnp.maximum(vi, 0.0))
+                                               + eps), m, v)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return init, update
+
+
 def fedadam_server(b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3):
     """Server-side Adam on the averaged client delta (beyond-paper)."""
     return adam(b1=b1, b2=b2, eps=eps)
+
+
+def fedavgm_server(beta: float = 0.9):
+    """Server momentum on the averaged client delta (Hsu et al., 2019)."""
+    return momentum(beta=beta)
+
+
+def fedyogi_server(b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3):
+    """Server-side Yogi on the averaged client delta (Reddi et al., 2021)."""
+    return yogi(b1=b1, b2=b2, eps=eps)

@@ -65,6 +65,76 @@ def test_checkpoint_roundtrip(tmp_path, rng):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_val_batches_keeps_tail_remainder(np_rng):
+    data = make_paper_task("femnist", np_rng, num_clients=4,
+                           samples_per_client=10)
+    n = len(data.val_y)
+    bs = 100
+    assert n % bs != 0, "fixture should exercise the ragged tail"
+    batches = pipeline.val_batches(data, bs)
+    assert sum(len(b["y"]) for b in batches) == n     # nothing dropped
+    assert len(batches[-1]["y"]) == n % bs
+    np.testing.assert_array_equal(
+        np.concatenate([b["y"] for b in batches]), data.val_y)
+
+
+def test_eval_fn_weights_ragged_tail_exactly():
+    """make_eval_fn must equal the whole-split accuracy/loss, not the
+    unweighted mean of per-batch means."""
+    from repro.core import make_eval_fn
+    from repro.data.synthetic import FederatedData
+    rng = np.random.default_rng(0)
+    n, bs = 100, 32                                   # batches 32,32,32,4
+    vx = rng.normal(size=(n, 8)).astype(np.float32)
+    vy = rng.integers(0, 2, size=n).astype(np.int32)
+    data = FederatedData([vx[:1]], [vy[:1]], vx, vy, 2)
+
+    def loss_fn(params, batch):
+        import jax.numpy as jnp
+        logits = batch["x"] @ params["w"]
+        lab = batch["y"]
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(lp, lab[:, None], 1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == lab).astype(jnp.float32))
+        return loss, {"acc": acc}
+
+    params = {"w": np.asarray(rng.normal(size=(8, 2)), np.float32)}
+    got = make_eval_fn(loss_fn, data, batch_size=bs)(params)
+    logits = vx @ params["w"]
+    acc_exact = float(np.mean(np.argmax(logits, -1) == vy))
+    assert got["acc"] == pytest.approx(acc_exact, abs=1e-6)
+    assert got["error"] == pytest.approx(1.0 - acc_exact, abs=1e-6)
+
+
+def test_history_checkpoint_roundtrip(tmp_path):
+    """History -> checkpoint meta -> restore preserves every series."""
+    from repro.core import History
+    h = History()
+    for r in range(1, 6):
+        h.rounds.append(r)
+        h.k.append(8 - r)
+        h.eta.append(0.3 / r)
+        h.wall_clock_s.append(10.0 * r)
+        h.sgd_steps.append(48 * r)
+        h.train_loss.append(1.0 / r)
+        h.min_train_loss.append(1.0 / r)
+    h.val_rounds.append(5)
+    h.val_error.append(0.25)
+    h.max_val_acc.append(0.75)
+    params = {"w": np.ones((3, 2), np.float32)}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params, meta={"round": 5, "history": h.as_dict()})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        params)
+    _, meta = load_checkpoint(path, like)
+    restored = History.from_dict(meta["history"])
+    assert restored.as_dict() == h.as_dict()
+    assert restored.k == [7, 6, 5, 4, 3]
+    # unknown keys in old checkpoints are ignored, missing ones default
+    partial = History.from_dict({"rounds": [1], "bogus": [9]})
+    assert partial.rounds == [1] and partial.k == []
+
+
 def test_checkpoint_shape_mismatch_raises(tmp_path, rng):
     from repro.configs import get_arch
     from repro.models import registry

@@ -1,0 +1,292 @@
+"""Round-engine tests: K-bucketed execution parity with the seed loop,
+scheduler planning, pluggable aggregators/server optimizers, prefetch
+determinism, and the compile-count bound (DESIGN.md §6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_paper_task
+from repro.configs.base import FedConfig
+from repro.core import (DecayController, FedAvgTrainer, RuntimeModel,
+                        quantize_k, run_reference_rounds)
+from repro.core.engine import aggregators, get_server_optimizer
+from repro.core.engine.scheduler import RoundScheduler, is_loss_free
+from repro.data import make_paper_task, pipeline
+from repro.models import small
+
+
+@pytest.fixture(scope="module")
+def femnist_setup():
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=20, samples_per_client=40)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    return task, data, loss_fn, params
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# parity: bucketed multi-round execution == seed per-round loop, bitwise
+# ---------------------------------------------------------------------------
+
+def test_bucketed_parity_with_seed_loop(femnist_setup):
+    """Acceptance: fixed-K, >=20 rounds, bitwise-identical params."""
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=20, clients_per_round=6, rounds=24, k0=6,
+                    eta0=0.3, batch_size=8, k_schedule="fixed", seed=0)
+    ref = run_reference_rounds(loss_fn, params, data, fed, 24)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    h = tr.run(24)
+    assert trees_equal(ref.params, tr.params)
+    np.testing.assert_allclose(ref.losses, h.train_loss, rtol=1e-6)
+    assert ref.ks == h.k
+    assert tr.compile_count == 1          # one K -> one executable
+
+
+def test_parity_padded_tail_bucket(femnist_setup):
+    """23 rounds (prime) with bucket_rounds=8 forces a padded tail bucket;
+    masked padding rounds must be bitwise transparent."""
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=20, clients_per_round=6, rounds=23, k0=5,
+                    eta0=0.3, batch_size=8, k_schedule="fixed",
+                    bucket_rounds=8, seed=1)
+    sched = RoundScheduler(DecayController(fed), fed, total_rounds=23)
+    plan = list(sched.plan())
+    assert any(len(b) < b.shape_rounds for b in plan), "no padded bucket"
+    ref = run_reference_rounds(loss_fn, params, data, fed, 23)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    tr.run(23)
+    assert trees_equal(ref.params, tr.params)
+
+
+def test_parity_with_prefetch_disabled(femnist_setup):
+    task, data, loss_fn, params = femnist_setup
+    fed_kw = dict(total_clients=20, clients_per_round=6, rounds=16, k0=4,
+                  eta0=0.3, batch_size=8, k_schedule="fixed", seed=2)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr_bg = FedAvgTrainer(loss_fn, params, data,
+                          FedConfig(**fed_kw, prefetch=True), rt)
+    tr_sync = FedAvgTrainer(loss_fn, params, data,
+                            FedConfig(**fed_kw, prefetch=False), rt)
+    tr_bg.run(16)
+    tr_sync.run(16)
+    assert trees_equal(tr_bg.params, tr_sync.params)
+
+
+def test_stateful_server_parity_across_buckets(femnist_setup):
+    """fedadam state must thread through bucket scans identically to the
+    per-round reference loop."""
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=20, clients_per_round=6, rounds=20, k0=4,
+                    eta0=0.3, batch_size=8, k_schedule="fixed",
+                    server_optimizer="fedadam", server_lr=0.01, seed=3)
+    ref = run_reference_rounds(loss_fn, params, data, fed, 20)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    tr.run(20)
+    assert trees_equal(ref.params, tr.params)
+
+
+# ---------------------------------------------------------------------------
+# compile bound
+# ---------------------------------------------------------------------------
+
+def test_compile_count_bounded_by_k_grid(femnist_setup):
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=20, clients_per_round=6, rounds=60, k0=10,
+                    eta0=0.3, batch_size=8, k_schedule="rounds",
+                    k_quantize=True, seed=0)
+    grid = len({quantize_k(k, fed.k0) for k in range(1, fed.k0 + 1)})
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    h = tr.run(60)
+    assert tr.compile_count <= grid
+    assert len(set(h.k)) <= grid
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def plan_of(fed, rounds, eval_every=None):
+    sched = RoundScheduler(DecayController(fed), fed, total_rounds=rounds,
+                           eval_every=eval_every)
+    return sched, list(sched.plan())
+
+
+def test_scheduler_covers_every_round_once():
+    fed = FedConfig(k0=10, k_schedule="rounds", k_quantize=True, rounds=50)
+    for eval_every in (None, 5, 7):
+        _, plan = plan_of(fed, 50, eval_every)
+        seen = [r for b in plan for r in b.rounds]
+        assert seen == list(range(1, 51))
+        for b in plan:
+            assert len(b) <= b.shape_rounds
+            ctrl = DecayController(fed)
+            assert all(ctrl.k_for_round(r) == b.k for r in b.rounds)
+
+
+def test_scheduler_cuts_at_eval_boundaries():
+    fed = FedConfig(k0=8, k_schedule="fixed", rounds=20)
+    _, plan = plan_of(fed, 20, eval_every=5)
+    ends = [b.rounds[-1] for b in plan if b.eval_after]
+    assert ends == [5, 10, 15, 20]
+    for b in plan:
+        # a bucket never straddles an eval round
+        assert not any(r % 5 == 0 for r in b.rounds[:-1])
+
+
+def test_scheduler_shape_divides_misaligned_eval_window():
+    """bucket_rounds=8 with eval_every=10 must not pad 6 of every 16
+    computed rounds: the per-K shape adapts (here 5 divides 10 exactly)."""
+    fed = FedConfig(k0=8, k_schedule="fixed", rounds=100, bucket_rounds=8)
+    _, plan = plan_of(fed, 100, eval_every=10)
+    computed = sum(b.shape_rounds for b in plan)
+    assert computed == 100                        # zero padding
+    assert all(len(b) == b.shape_rounds == 5 for b in plan)
+
+
+def test_scheduler_one_shape_per_k():
+    fed = FedConfig(k0=10, k_schedule="rounds", k_quantize=True, rounds=200)
+    _, plan = plan_of(fed, 200)
+    shapes = {}
+    for b in plan:
+        shapes.setdefault(b.k, set()).add(b.shape_rounds)
+    assert all(len(s) == 1 for s in shapes.values())
+
+
+def test_scheduler_feedback_mode_single_round_default():
+    fed = FedConfig(k0=8, k_schedule="error", rounds=10, loss_window=3)
+    sched, plan = plan_of(fed, 10)
+    assert not sched.loss_free and not is_loss_free(fed)
+    assert all(len(b) == 1 for b in plan)
+
+
+# ---------------------------------------------------------------------------
+# aggregators
+# ---------------------------------------------------------------------------
+
+def _stack(rng, n=6, shape=(4, 3)):
+    return {"w": jnp.asarray(rng.normal(size=(n,) + shape).astype(np.float32))}
+
+
+def test_median_and_trimmed_mean_reject_outlier():
+    rng = np.random.default_rng(0)
+    clean = _stack(rng)
+    poisoned = {"w": clean["w"].at[0].set(1e6)}     # Byzantine client
+    w = jnp.full((6,), 1 / 6, jnp.float32)
+    med = aggregators.coordinate_median(poisoned, w)["w"]
+    trm = aggregators.trimmed_mean(poisoned, w, trim_fraction=0.2)["w"]
+    mean = aggregators.weighted_mean(poisoned, w)["w"]
+    assert float(jnp.abs(med).max()) < 10.0
+    assert float(jnp.abs(trm).max()) < 10.0
+    assert float(jnp.abs(mean).max()) > 1e4       # mean is not robust
+    # the default fraction must still trim >=1 client at small N
+    dflt = aggregators.trimmed_mean(poisoned, w)["w"]
+    assert float(jnp.abs(dflt).max()) < 10.0
+    # trimmed with degenerate fraction falls back to median
+    deg = aggregators.trimmed_mean(poisoned, w, trim_fraction=0.5)["w"]
+    np.testing.assert_allclose(np.asarray(deg), np.asarray(med), rtol=1e-6)
+
+
+def test_trimmed_mean_matches_mean_on_uniform_weights():
+    """With no outliers and zero trim, trimmed mean == uniform mean."""
+    rng = np.random.default_rng(1)
+    stack = _stack(rng)
+    w = jnp.full((6,), 1 / 6, jnp.float32)
+    trm = aggregators.trimmed_mean(stack, w, trim_fraction=0.0)["w"]
+    ref = jnp.mean(stack["w"], axis=0)
+    np.testing.assert_allclose(np.asarray(trm), np.asarray(ref), rtol=1e-5)
+
+
+def test_unknown_aggregator_raises():
+    with pytest.raises(ValueError):
+        aggregators.get_aggregator("bogus")
+
+
+def test_robust_aggregator_trains(femnist_setup):
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=20, clients_per_round=6, rounds=8, k0=4,
+                    eta0=0.3, batch_size=8, aggregator="median", seed=0)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    h = FedAvgTrainer(loss_fn, params, data, fed, rt).run(8)
+    assert np.isfinite(h.train_loss).all()
+    assert h.min_train_loss[-1] < h.train_loss[0]
+
+
+# ---------------------------------------------------------------------------
+# server optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("server", ["fedavgm", "fedyogi"])
+def test_new_server_optimizers_train(femnist_setup, server):
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=20, clients_per_round=6, rounds=8, k0=4,
+                    eta0=0.3, batch_size=8, server_optimizer=server,
+                    server_lr=0.1 if server == "fedyogi" else 0.5, seed=0)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    h = FedAvgTrainer(loss_fn, params, data, fed, rt).run(8)
+    assert np.isfinite(h.train_loss).all()
+
+
+def test_unknown_server_optimizer_raises():
+    with pytest.raises(ValueError):
+        get_server_optimizer("bogus")
+
+
+# ---------------------------------------------------------------------------
+# prefetcher
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_matches_sync_builder(femnist_setup):
+    _, data, _, _ = femnist_setup
+    reqs = [(3, 4, 4), (2, 2, 4), (1, 6, 2)]      # (n_rounds, k, pad_to)
+    bg = pipeline.BatchPrefetcher(data, 5, 8, 123)
+    sync = pipeline.SyncBatchBuilder(data, 5, 8, 123)
+    try:
+        for r in reqs:
+            bg.submit(*r)
+            sync.submit(*r)
+        for _ in reqs:
+            a, b = bg.get(), sync.get()
+            assert np.array_equal(a.batches["x"], b.batches["x"])
+            assert np.array_equal(a.batches["y"], b.batches["y"])
+            assert np.array_equal(a.weights, b.weights)
+            assert np.array_equal(a.active, b.active)
+    finally:
+        bg.close()
+
+
+def test_prefetcher_surfaces_worker_errors(femnist_setup):
+    _, data, _, _ = femnist_setup
+    bg = pipeline.BatchPrefetcher(data, 5, 8, 0)
+    try:
+        bg.submit(5, 3, 2)                        # pad_to < n_rounds
+        bg.submit(2, 3, None)                     # queued behind the error
+        with pytest.raises(ValueError):
+            bg.get()
+        # the worker survives the error and serves later requests
+        ok = bg.get()
+        assert ok.n_rounds == 2
+    finally:
+        bg.close()
+
+
+def test_bucket_batches_padding_masks():
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=8, samples_per_client=12)
+    rng = np.random.default_rng(0)
+    bb = pipeline.bucket_batches(rng, data, n_rounds=3, k=2,
+                                 clients_per_round=4, batch_size=4, pad_to=5)
+    assert bb.batches["x"].shape == (5, 4, 2, 4, 784)
+    assert bb.active.tolist() == [True, True, True, False, False]
+    np.testing.assert_array_equal(bb.batches["x"][3], bb.batches["x"][2])
+    np.testing.assert_array_equal(bb.weights[4], bb.weights[2])

@@ -1,10 +1,14 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import math
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs.base import FedConfig, RuntimeModelConfig

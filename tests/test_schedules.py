@@ -87,3 +87,88 @@ def test_invalid_schedule_raises():
         DecayController(FedConfig(k_schedule="bogus"))
     with pytest.raises(ValueError):
         DecayController(FedConfig(eta_schedule="bogus"))
+
+
+# ---------------------------------------------------------------------------
+# quantize_k grid edge cases
+# ---------------------------------------------------------------------------
+
+def test_quantize_k_edges():
+    # k at or above k0 snaps to k0; k at or below 1 snaps to 1
+    assert quantize_k(80, 80) == 80
+    assert quantize_k(200, 80) == 80
+    assert quantize_k(1, 80) == 1
+    assert quantize_k(0, 80) == 1
+    assert quantize_k(-3, 80) == 1
+    # degenerate grids
+    assert quantize_k(1, 1) == 1
+    assert quantize_k(2, 2) == 2
+    assert quantize_k(1, 2) == 1
+
+
+def test_quantize_k_grid_size_bounded():
+    for k0 in (2, 7, 80, 128):
+        grid = {quantize_k(k, k0) for k in range(1, k0 + 1)}
+        assert all(1 <= kq <= k0 for kq in grid)
+        assert len(grid) <= math.floor(math.log(k0) / math.log(1.35)) + 2
+
+
+def test_quantize_k_monotone():
+    k0 = 80
+    qs = [quantize_k(k, k0) for k in range(1, k0 + 1)]
+    assert all(a <= b for a, b in zip(qs, qs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# DecayController feedback paths
+# ---------------------------------------------------------------------------
+
+def test_error_ratio_clamped_when_loss_rises():
+    """F_r/F0 is clamped to [0, 1]: a rising loss never pushes K above K0
+    or eta above eta0 (Eq. 13/14 with the paper's clamp)."""
+    ctrl = DecayController(make("error", eta_schedule="error"))
+    ctrl.observe_round_losses(1.0)                # sets F0
+    for _ in range(10):
+        ctrl.observe_round_losses(5.0)            # diverging loss
+    assert ctrl._error_ratio() == 1.0
+    assert ctrl.k_for_round(20) == 80
+    assert ctrl.eta_for_round(20) == pytest.approx(0.3)
+
+
+def test_error_ratio_cold_until_window_full():
+    ctrl = DecayController(make("error"))
+    ctrl.observe_round_losses(1.0)                # snapshots F0
+    for _ in range(3):                            # window is 5
+        ctrl.observe_round_losses(0.001)
+        assert ctrl._error_ratio() == 1.0         # still warming
+    ctrl.observe_round_losses(0.001)              # window full
+    assert ctrl._error_ratio() < 1.0
+    for _ in range(5):                            # F0 sample rolls out
+        ctrl.observe_round_losses(0.001)
+    assert ctrl._error_ratio() < 0.01
+
+
+def test_f0_snapshots_first_round():
+    ctrl = DecayController(make("error"))
+    ctrl.observe_round_losses(4.0)
+    for _ in range(10):
+        ctrl.observe_round_losses(0.5)
+    assert ctrl._f0 == 4.0
+    assert ctrl._error_ratio() == pytest.approx(0.125)
+
+
+def test_plateau_trigger_requires_patience():
+    ctrl = DecayController(make("step"))          # patience=3
+    ctrl.observe_validation(0.5)
+    ctrl.observe_validation(0.4)                  # improving: resets
+    ctrl.observe_validation(0.4)
+    ctrl.observe_validation(0.4)
+    assert not ctrl.plateau.plateaued
+    ctrl.observe_validation(0.4)
+    assert ctrl.plateau.plateaued
+    assert ctrl.k_for_round(10) == 8              # K0/10
+    # eta-step decays by the same factor
+    ctrl_eta = DecayController(make(eta_schedule="step"))
+    for _ in range(6):
+        ctrl_eta.observe_validation(0.9)
+    assert ctrl_eta.eta_for_round(10) == pytest.approx(0.3 / 10.0)

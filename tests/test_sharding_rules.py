@@ -1,7 +1,10 @@
 """Sharding-rule unit tests (FakeMesh — no devices needed)."""
 import jax
 import jax.numpy as jnp
+import pytest
 from jax.sharding import PartitionSpec as P
+
+pytestmark = pytest.mark.slow      # eval_shape over every arch; see pytest.ini
 
 from repro.configs import get_arch
 from repro.distributed import sharding

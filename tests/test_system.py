@@ -8,6 +8,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow      # long multi-round runs; see pytest.ini
+
 from repro.configs import get_paper_task
 from repro.configs.base import FedConfig
 from repro.core import FedAvgTrainer, RuntimeModel, make_eval_fn
