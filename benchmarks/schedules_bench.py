@@ -135,6 +135,57 @@ def run_engine_speedup(rounds: int = 200, *, task_name: str = "sent140",
     return out
 
 
+def run_backend_compare(rounds: int = 60, *, task_name: str = "sent140",
+                        clients_per_round: int = 4, batch_size: int = 4,
+                        seed: int = 0, verbose: bool = False) -> List[Dict]:
+    """Local vs mesh ExecutionBackend on the same K-decay run (DESIGN.md §7).
+
+    Both backends drive the identical FedAvgTrainer/K-bucketed scan; the
+    mesh rows run on the host-device (devices x 1) data x model mesh —
+    degenerate on 1 CPU device, but the same GSPMD/jit path a pod takes.
+    Reports warm rounds/sec plus dispatch and compile counts, so the
+    K-bucket amortisation (dispatches << rounds) is visible on both paths.
+    """
+    from repro.core.engine import MeshBackend
+
+    task = get_paper_task(task_name)
+    data = make_paper_task(task_name, np.random.default_rng(seed),
+                           num_clients=QUICK["clients"],
+                           samples_per_client=QUICK["samples"])
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params0 = small.init_task_model(jax.random.PRNGKey(seed), task)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, clients_per_round)
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    backends = [
+        ("local", lambda: None),
+        ("mesh_parallel", lambda: MeshBackend(mesh, strategy="parallel")),
+        ("mesh_sequential", lambda: MeshBackend(mesh, strategy="sequential",
+                                                groups=2)),
+    ]
+    out = []
+    for name, mk in backends:
+        fed = FedConfig(total_clients=data.num_clients,
+                        clients_per_round=clients_per_round, rounds=rounds,
+                        k0=QUICK["k0"], eta0=task.fed.eta0,
+                        batch_size=batch_size, k_schedule="rounds",
+                        k_quantize=True, seed=seed)
+        tr = FedAvgTrainer(loss_fn, params0, data, fed, rt, backend=mk())
+        tr.run(rounds)                                          # warm-up
+        d0 = tr.engine.dispatch_count
+        t0 = time.time()
+        tr.run(rounds)
+        dt = time.time() - t0
+        row = {"backend": name, "rounds": rounds, "bench_s": dt,
+               "rps": rounds / dt, "dispatches": tr.engine.dispatch_count - d0,
+               "compiles": tr.compile_count}
+        out.append(row)
+        if verbose:
+            print(f"  engine_backend[{name}]: {row['rps']:.1f} rounds/s, "
+                  f"{row['dispatches']} dispatches / {rounds} rounds, "
+                  f"{row['compiles']} compiles")
+    return out
+
+
 def run_prefetch_overlap(rounds: int = 48, *, seed: int = 0,
                          verbose: bool = False) -> Dict:
     """Background prefetch thread vs. the inline builder on a compute-bound
@@ -189,14 +240,33 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                          f"acc={r['max_val_acc']:.3f};"
                          f"relsteps={r['relative_sgd_steps']:.3f};"
                          f"simW={r['sim_wall_clock_s']:.0f}s"))
-    e = run_engine_speedup(verbose=verbose)
+    e = run_engine_speedup(rounds=rounds or 200, verbose=verbose)
     rows.append(("engine_bucketed_vs_seed", e["engine_s"] * 1e6,
                  f"speedup={e['speedup']:.2f}x;"
                  f"rps={e['engine_rps']:.1f};"
                  f"compiles={e['compile_count']};"
                  f"grid={e['k_grid_size']}"))
-    p = run_prefetch_overlap(verbose=verbose)
+    for b in run_backend_compare(rounds=rounds or 60, verbose=verbose):
+        rows.append((f"engine_backend_{b['backend']}", b["bench_s"] * 1e6,
+                     f"rps={b['rps']:.1f};"
+                     f"dispatches={b['dispatches']};"
+                     f"compiles={b['compiles']}"))
+    p = run_prefetch_overlap(rounds=rounds or 48, verbose=verbose)
     rows.append(("engine_prefetch_overlap", p["prefetch_s"] * 1e6,
                  f"speedup={p['speedup']:.2f}x;"
                  f"rps={p['rounds'] / p['prefetch_s']:.1f}"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="rounds per run (small values = CI smoke)")
+    ap.add_argument("--tasks", nargs="*", default=["sent140"])
+    ap.add_argument("--quiet", action="store_true")
+    a = ap.parse_args()
+    for name, us, derived in run(tasks=tuple(a.tasks), rounds=a.rounds,
+                                 verbose=not a.quiet):
+        print(f"{name},{us:.1f},{derived}")

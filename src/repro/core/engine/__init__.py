@@ -6,6 +6,8 @@
 """
 from repro.core.engine.aggregators import (AGGREGATORS, get_aggregator,
                                            weighted_mean)
+from repro.core.engine.backends import (ExecutionBackend, LocalBackend,
+                                        MeshBackend)
 from repro.core.engine.client import ClientResult, client_update, \
     make_client_update
 from repro.core.engine.round import (RoundEngine, make_bucket_fn,
@@ -15,7 +17,8 @@ from repro.core.engine.server import (SERVER_OPTIMIZERS, ServerOptimizer,
                                       get_server_optimizer)
 from repro.core.engine.trainer import FedAvgTrainer, History, make_eval_fn
 
-__all__ = ["AGGREGATORS", "get_aggregator", "weighted_mean", "ClientResult",
+__all__ = ["AGGREGATORS", "get_aggregator", "weighted_mean",
+           "ExecutionBackend", "LocalBackend", "MeshBackend", "ClientResult",
            "client_update", "make_client_update", "RoundEngine",
            "make_bucket_fn", "make_round_core", "make_round_fn", "Bucket",
            "RoundScheduler", "is_loss_free", "SERVER_OPTIMIZERS",

@@ -1,0 +1,9 @@
+"""Execution backends: where/how a round's client fan-out runs (DESIGN.md §7)."""
+from repro.core.engine.backends.base import (ExecutionBackend,
+                                             LINEAR_AGGREGATORS)
+from repro.core.engine.backends.local import (LocalBackend,
+                                              make_parallel_round_core)
+from repro.core.engine.backends.mesh import MeshBackend
+
+__all__ = ["ExecutionBackend", "LINEAR_AGGREGATORS", "LocalBackend",
+           "MeshBackend", "make_parallel_round_core"]

@@ -1,0 +1,82 @@
+"""ExecutionBackend — where and how a federated round's client fan-out runs.
+
+The round *semantics* (ClientUpdate -> Aggregator -> ServerOptimizer, see
+DESIGN.md §6) are backend-independent; an ExecutionBackend decides the
+*execution geometry*:
+
+  * how the client axis of a round executes (single-device ``vmap``, mesh
+    ``vmap`` with ``spmd_axis_name``, or a grouped sequential scan),
+  * which concrete aggregation implementation runs (plain einsum, Pallas
+    kernel, or the client-sharded Pallas kernel with an all-reduce of
+    per-shard partials),
+  * how host tensors are placed on device (plain transfer vs ``device_put``
+    with the backend's client sharding, issued from the prefetch thread so
+    the H2D copy overlaps device compute).
+
+``RoundEngine`` composes a backend's round core into the K-bucketed
+multi-round scan and AOT-compiles one executable per input signature
+(DESIGN.md §7) — so every schedule, server optimizer and robust aggregator
+works identically on a laptop CPU and on a GSPMD-sharded pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Any]
+
+# aggregators that are linear in the client stack: a sequential backend can
+# stream them as a running weighted sum instead of materialising the
+# (N, ...) stack (kernel == mean contraction, just a different implementation)
+LINEAR_AGGREGATORS = ("mean", "kernel")
+
+
+class ExecutionBackend:
+    """Protocol + shared no-op placement defaults (single-device behaviour).
+
+    Subclasses must implement ``make_round_core``; placement hooks are
+    optional and must be idempotent (placing an already-placed array is a
+    no-op) so ``RoundEngine.run_bucket`` can call them unconditionally.
+    """
+
+    name: str = "base"
+
+    # ------------------------------------------------------------------
+    # round core construction
+    # ------------------------------------------------------------------
+    def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
+                        trim_fraction: float = 0.1, server=None,
+                        server_lr: float = 1.0):
+        """Return round_core(params, batches{(N,K,b,...)}, weights(N,), eta,
+        server_state) -> (new_params, first_losses(N,), last_losses(N,),
+        server_state)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # placement (host -> device, with the backend's shardings)
+    # ------------------------------------------------------------------
+    def place_params(self, params: PyTree) -> PyTree:
+        return jax.tree.map(jnp.asarray, params)
+
+    def place_batches(self, batches: Dict[str, Any]) -> Dict[str, Any]:
+        """Bucket batch tensors, leaves (B, N, K, b, ...)."""
+        return {k: jnp.asarray(v) for k, v in batches.items()}
+
+    def place_weights(self, weights) -> jnp.ndarray:
+        """Bucket weights (B, N)."""
+        return jnp.asarray(weights, jnp.float32)
+
+    def place_scalars(self, etas, active):
+        return jnp.asarray(etas, jnp.float32), jnp.asarray(active, bool)
+
+    def place_bucket(self, bb):
+        """Place a ``pipeline.BucketBatch`` in one call — used as the
+        prefetcher's ``place_fn`` so transfers start on the build thread."""
+        return dataclasses.replace(
+            bb, batches=self.place_batches(bb.batches),
+            weights=self.place_weights(bb.weights),
+            active=jnp.asarray(bb.active, bool))

@@ -1,0 +1,52 @@
+"""LocalBackend — single-device execution (the PR-1 engine's geometry).
+
+The round's N clients run as a plain ``jax.vmap`` over the client axis;
+aggregation is the configured Aggregator verbatim; placement is a plain
+transfer. This is the degenerate point of the backend protocol: everything
+``MeshBackend`` does collapses to this on a 1x1 mesh, which is exactly what
+the parity tests assert (tests/test_backends.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from repro.core.engine.aggregators import Aggregator, get_aggregator
+from repro.core.engine.backends.base import ExecutionBackend, LossFn
+from repro.core.engine.client import make_client_update
+
+
+def make_parallel_round_core(loss_fn: LossFn, aggregator: Aggregator,
+                             server, server_lr: float, *,
+                             client_spmd_axes: Optional[Sequence[str]] = None):
+    """The vmap-over-clients round core shared by Local and Mesh-parallel.
+
+    ``client_spmd_axes``: mesh axes the vmapped client dim is sharded over
+    (``spmd_axis_name``); None on a single device.
+
+    round_core(params, batches{(N,K,b,...)}, weights(N,), eta, server_state)
+    -> (new_params, first_losses (N,), last_losses (N,), server_state).
+    """
+    client = make_client_update(loss_fn)
+
+    def round_core(params, batches, weights, eta, server_state):
+        client_params, first_losses, last_losses = jax.vmap(
+            client, in_axes=(None, 0, None),
+            spmd_axis_name=client_spmd_axes)(params, batches, eta)
+        aggregate = aggregator(client_params, weights)
+        new_params, server_state = server.step(params, aggregate,
+                                               server_state, server_lr)
+        return new_params, first_losses, last_losses, server_state
+
+    return round_core
+
+
+class LocalBackend(ExecutionBackend):
+    name = "local"
+
+    def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
+                        trim_fraction: float = 0.1, server=None,
+                        server_lr: float = 1.0):
+        agg = get_aggregator(aggregator, trim_fraction=trim_fraction)
+        return make_parallel_round_core(loss_fn, agg, server, server_lr)

@@ -1,0 +1,227 @@
+"""MeshBackend — GSPMD mesh execution of the round's client fan-out.
+
+Absorbs the two mesh strategies that previously lived (scheduler-less and
+aggregator-less) in ``repro.distributed.strategies``:
+
+* ``parallel`` (cross-device FL): the client axis is a ``vmap`` dim sharded
+  over the mesh ``data`` (x ``pod``) axes via ``spmd_axis_name``; the
+  aggregation contracts the client axis — GSPMD turns it into the
+  aggregation all-reduce, or, with ``aggregator="kernel"``, the explicit
+  client-sharded Pallas reduction (local block-reduce + all-reduce of the
+  per-shard partials, ``kernels.fedavg_reduce_sharded``).
+
+* ``sequential`` (cross-silo FL, 100B+ archs): one fully-sharded parameter
+  set; ``groups`` client groups run as a vmap (hierarchical FL, one group
+  per pod), clients within a group as a ``lax.scan`` using the whole mesh.
+  Linear aggregators (mean/kernel) stream as a running weighted sum in
+  ``acc_dtype`` — the (N, ...) client stack is never materialised; robust
+  aggregators (median/trimmed_mean) need the coordinate-wise client
+  distribution, so the scan stacks per-client params (documented memory
+  trade: N x params, same as the parallel path).
+
+With ``mesh=None`` the backend builds the same round cores (sharding
+annotations only) for abstract lowering — ``launch.dryrun`` traces through
+this path; placement hooks then degrade to plain transfers.
+
+On a 1x1 host mesh every path is numerically equivalent to ``LocalBackend``
+(tests/test_backends.py), which is what makes the engine's K-bucketed scan,
+server optimizers and robust aggregators safe to drive the production path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.engine.aggregators import get_aggregator
+from repro.core.engine.backends.base import (ExecutionBackend,
+                                             LINEAR_AGGREGATORS, LossFn)
+from repro.core.engine.backends.local import make_parallel_round_core
+from repro.core.engine.client import client_update
+
+PyTree = Any
+
+
+class MeshBackend(ExecutionBackend):
+    name = "mesh"
+
+    def __init__(self, mesh=None, *, strategy: str = "parallel",
+                 client_axes: Optional[Sequence[str]] = None,
+                 groups: int = 1, param_specs: Optional[PyTree] = None,
+                 acc_dtype=jnp.float32):
+        """``client_axes``: mesh axes the client dim shards over (defaults
+        to ``("pod", "data")``/``("data",)`` from the mesh's axis names);
+        ``param_specs``: PartitionSpec tree pinning params (sequential FSDP
+        keeps the delta accumulator on the params' 2d sharding);
+        ``acc_dtype``: sequential streaming-accumulator dtype — f32 default
+        preserves LocalBackend numerics, bf16 halves the scan carry."""
+        if strategy not in ("parallel", "sequential"):
+            raise ValueError(f"unknown strategy {strategy!r}")
+        self.mesh = mesh
+        self.strategy = strategy
+        if client_axes is None and mesh is not None:
+            client_axes = ("pod", "data") if "pod" in mesh.axis_names \
+                else ("data",)
+        self.client_axes = tuple(client_axes) if client_axes else None
+        self.groups = max(int(groups), 1)
+        self.param_specs = param_specs
+        self.acc_dtype = acc_dtype
+
+    # ------------------------------------------------------------------
+    # round core
+    # ------------------------------------------------------------------
+    def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
+                        trim_fraction: float = 0.1, server=None,
+                        server_lr: float = 1.0):
+        if self.strategy == "parallel":
+            agg = self._resolve_aggregator(aggregator, trim_fraction)
+            return make_parallel_round_core(
+                loss_fn, agg, server, server_lr,
+                client_spmd_axes=self.client_axes)
+        return self._make_sequential_core(loss_fn, aggregator, trim_fraction,
+                                          server, server_lr)
+
+    def _resolve_aggregator(self, name: str, trim_fraction: float):
+        if name == "kernel" and self.mesh is not None:
+            from repro.kernels import ops as kops
+            mesh, axes = self.mesh, self.client_axes
+            size = _axes_size(mesh, axes)
+            plain = get_aggregator("kernel")
+
+            def sharded_kernel(client_params, weights):
+                n = weights.shape[0]
+                if n % size != 0:                # static at trace time
+                    return plain(client_params, weights)
+                return kops.fedavg_reduce_tree_sharded(
+                    client_params, weights, mesh=mesh, client_axes=axes)
+
+            return sharded_kernel
+        return get_aggregator(name, trim_fraction=trim_fraction)
+
+    def _make_sequential_core(self, loss_fn, aggregator, trim_fraction,
+                              server, server_lr):
+        stream = aggregator in LINEAR_AGGREGATORS
+        agg = None if stream else get_aggregator(aggregator,
+                                                 trim_fraction=trim_fraction)
+        groups, acc_dtype = self.groups, self.acc_dtype
+        param_specs, axes = self.param_specs, self.client_axes
+
+        def constrain(tree):
+            # keep the accumulator/client params on the params' sharding —
+            # without this GSPMD replicates full weights inside the scan
+            if param_specs is None:
+                return tree
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                tree, param_specs)
+
+        def round_core(params, batches, weights, eta, server_state):
+            n = weights.shape[0]
+            if n % groups:
+                raise ValueError(f"{n} clients not divisible into "
+                                 f"{groups} groups")
+            ng = n // groups
+            gb = jax.tree.map(
+                lambda x: x.reshape((groups, ng) + x.shape[1:]), batches)
+            gw = weights.reshape(groups, ng)
+            if stream:
+                def per_group(group_batches, group_w):
+                    def client(acc, inp):
+                        cb, w = inp
+                        res = client_update(loss_fn, params, cb, eta)
+                        cp = constrain(res.params)
+                        acc = constrain(jax.tree.map(
+                            lambda a, c: (a + w.astype(acc_dtype)
+                                          * c.astype(acc_dtype)
+                                          ).astype(acc_dtype), acc, cp))
+                        return acc, (res.first_loss, res.last_loss)
+
+                    zeros = constrain(jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, acc_dtype), params))
+                    return jax.lax.scan(client, zeros,
+                                        (group_batches, group_w))
+
+                accs, (firsts, lasts) = jax.vmap(
+                    per_group, spmd_axis_name=axes)(gb, gw)
+                aggregate = jax.tree.map(
+                    lambda p, a: jnp.sum(a, axis=0).astype(p.dtype),
+                    params, accs)
+            else:
+                def per_group(group_batches):
+                    def client(carry, cb):
+                        res = client_update(loss_fn, params, cb, eta)
+                        return carry, (constrain(res.params),
+                                       res.first_loss, res.last_loss)
+
+                    _, ys = jax.lax.scan(client, 0, group_batches)
+                    return ys
+
+                cps, firsts, lasts = jax.vmap(
+                    per_group, spmd_axis_name=axes)(gb)
+                stack = jax.tree.map(
+                    lambda x: x.reshape((n,) + x.shape[2:]), cps)
+                aggregate = agg(stack, weights)
+            new_params, server_state = server.step(params, aggregate,
+                                                   server_state, server_lr)
+            return (new_params, firsts.reshape(n), lasts.reshape(n),
+                    server_state)
+
+        return round_core
+
+    # ------------------------------------------------------------------
+    # placement
+    # ------------------------------------------------------------------
+    def _named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def place_params(self, params: PyTree) -> PyTree:
+        if self.mesh is None:
+            return jax.tree.map(jnp.asarray, params)
+        if self.param_specs is not None:
+            return jax.tree.map(
+                lambda x, s: jax.device_put(x, self._named(s)),
+                params, self.param_specs)
+        rep = self._named(P())
+        return jax.tree.map(lambda x: jax.device_put(x, rep), params)
+
+    def _batch_spec(self, shape: Tuple[int, ...]) -> P:
+        """Bucket leaves (B, N, K, b, ...): client dim sharded (parallel) or
+        the per-client batch dim data-sharded (sequential)."""
+        if self.strategy == "parallel":
+            if self.client_axes and \
+                    shape[1] % _axes_size(self.mesh, self.client_axes) == 0:
+                return P(None, self.client_axes)
+            return P()
+        if len(shape) >= 4 and \
+                shape[3] % _axes_size(self.mesh, ("data",)) == 0 \
+                and "data" in self.mesh.axis_names:
+            return P(None, None, None, "data")
+        return P()
+
+    def place_batches(self, batches: Dict[str, Any]) -> Dict[str, Any]:
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batches.items()}
+        return {k: jax.device_put(jnp.asarray(v),
+                                  self._named(self._batch_spec(v.shape)))
+                for k, v in batches.items()}
+
+    def place_weights(self, weights) -> jnp.ndarray:
+        w = jnp.asarray(weights, jnp.float32)
+        if self.mesh is None:
+            return w
+        spec = P()
+        if self.strategy == "parallel" and self.client_axes and \
+                w.shape[-1] % _axes_size(self.mesh, self.client_axes) == 0:
+            spec = P(*((None,) * (w.ndim - 1)), self.client_axes)
+        return jax.device_put(w, self._named(spec))
+
+
+def _axes_size(mesh, axes) -> int:
+    if mesh is None or not axes:
+        return 1
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a] if a in mesh.axis_names else 1
+    return size

@@ -1,17 +1,21 @@
 """Round execution: single-round core + K-bucketed multi-round scan.
 
-Layering (DESIGN.md §6):
+Layering (DESIGN.md §6-§7):
 
     ClientUpdate (engine.client)   — K-step local SGD, vmapped over clients
     Aggregator   (engine.aggregators) — client-stack -> aggregate
     ServerOptimizer (engine.server)   — aggregate -> next global params
+    ExecutionBackend (engine.backends) — where/how the fan-out executes
 
-``RoundEngine`` composes the three and executes *buckets*: consecutive
-rounds sharing one quantized K, run as a single jitted ``lax.scan`` over the
-round axis. XLA compiles one executable per distinct ``(K, bucket_shape)``
-pair, so with K snapped to the geometric grid (``quantize_k``) the compile
-count is bounded by the grid size — instead of one compile per distinct raw
-K_r and one dispatch per round.
+``RoundEngine`` asks its backend for the round core (LocalBackend: plain
+vmap; MeshBackend: GSPMD-sharded vmap or grouped sequential scan) and
+executes *buckets*: consecutive rounds sharing one quantized K, run as a
+single multi-round ``lax.scan`` over the round axis. Each distinct input
+signature (shapes + dtypes of params/batches/weights/etas/active/state) is
+AOT-lowered and compiled exactly once into an explicit executable registry,
+so with K snapped to the geometric grid (``quantize_k``) the compile count
+is bounded by the grid size — and ``compile_count`` reports the registry
+size exactly instead of probing jit-internal caches.
 
 Buckets shorter than the executable shape are padded by repeating the last
 round's batches with ``active=False``; inactive rounds pass params and
@@ -20,13 +24,15 @@ so padding never perturbs training state.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine.aggregators import Aggregator, get_aggregator
-from repro.core.engine.client import make_client_update
+from repro.core.engine.backends.base import ExecutionBackend
+from repro.core.engine.backends.local import (LocalBackend,
+                                              make_parallel_round_core)
 from repro.core.engine.server import ServerOptimizer, get_server_optimizer
 
 PyTree = Any
@@ -37,17 +43,7 @@ def make_round_core(loss_fn: LossFn, aggregator: Aggregator,
                     server: ServerOptimizer, server_lr: float):
     """round_core(params, batches{(N,K,b,...)}, weights(N,), eta, state)
     -> (new_params, first_losses (N,), last_losses (N,), state)."""
-    client = make_client_update(loss_fn)
-
-    def round_core(params, batches, weights, eta, server_state):
-        client_params, first_losses, last_losses = jax.vmap(
-            client, in_axes=(None, 0, None))(params, batches, eta)
-        aggregate = aggregator(client_params, weights)
-        new_params, server_state = server.step(params, aggregate,
-                                               server_state, server_lr)
-        return new_params, first_losses, last_losses, server_state
-
-    return round_core
+    return make_parallel_round_core(loss_fn, aggregator, server, server_lr)
 
 
 def make_bucket_fn(round_core):
@@ -75,40 +71,66 @@ def make_bucket_fn(round_core):
     return bucket_fn
 
 
+def _signature(args) -> Tuple:
+    """Hashable (treedef, leaf shapes/dtypes) key for the AOT registry."""
+    leaves, treedef = jax.tree.flatten(args)
+    return treedef, tuple((tuple(l.shape), jnp.result_type(l).name)
+                          for l in leaves)
+
+
 class RoundEngine:
-    """Jit-compiled executor for round buckets with a bounded compile cache."""
+    """Bucket executor with an explicit per-signature executable registry.
+
+    The backend decides execution geometry and placement; the engine owns
+    compilation: ``run_bucket`` looks the placed arguments' signature up in
+    the registry and AOT-compiles (``jit(...).lower(...).compile()``) on
+    miss — one executable per distinct signature, counted exactly by
+    ``compile_count`` (no reliance on private jit cache probes).
+    """
 
     def __init__(self, loss_fn: LossFn, *, aggregator: str = "mean",
                  trim_fraction: float = 0.1, server: str = "avg",
-                 server_lr: float = 1.0):
+                 server_lr: float = 1.0,
+                 backend: Optional[ExecutionBackend] = None):
+        self.backend = backend if backend is not None else LocalBackend()
         self.server = get_server_optimizer(server)
-        self.round_core = make_round_core(
-            loss_fn, get_aggregator(aggregator, trim_fraction=trim_fraction),
-            self.server, server_lr)
-        self._bucket_fn = jax.jit(make_bucket_fn(self.round_core))
-        self._shape_keys = set()
+        self.round_core = self.backend.make_round_core(
+            loss_fn, aggregator=aggregator, trim_fraction=trim_fraction,
+            server=self.server, server_lr=server_lr)
+        self._jitted = jax.jit(make_bucket_fn(self.round_core))
+        self._executables: Dict[Tuple, Any] = {}
+        self.dispatch_count = 0
 
     def init_server_state(self, params: PyTree) -> Any:
         return self.server.init(params)
 
     def run_bucket(self, params, batches, weights, etas, active, server_state
                    ) -> Tuple[PyTree, jnp.ndarray, jnp.ndarray, Any]:
-        """batches leaves (B, N, K, b, ...); weights (B, N); etas/active (B,)."""
-        lead = next(iter(batches.values())).shape[:3]   # (B, N, K)
-        self._shape_keys.add(lead)
-        return self._bucket_fn(params,
-                               {k: jnp.asarray(v) for k, v in batches.items()},
-                               jnp.asarray(weights, jnp.float32),
-                               jnp.asarray(etas, jnp.float32),
-                               jnp.asarray(active, bool), server_state)
+        """batches leaves (B, N, K, b, ...); weights (B, N); etas/active (B,).
+
+        Inputs may be host (numpy) or already-placed device arrays — the
+        backend's placement hooks are idempotent, so prefetched buckets that
+        were ``device_put`` on the build thread pass through untouched.
+        """
+        be = self.backend
+        params = be.place_params(params)
+        batches = be.place_batches(batches)
+        weights = be.place_weights(weights)
+        etas, active = be.place_scalars(etas, active)
+        server_state = jax.tree.map(jnp.asarray, server_state)
+        args = (params, batches, weights, etas, active, server_state)
+        key = _signature(args)
+        exe = self._executables.get(key)
+        if exe is None:
+            exe = self._jitted.lower(*args).compile()
+            self._executables[key] = exe
+        self.dispatch_count += 1
+        return exe(*args)
 
     @property
     def compile_count(self) -> int:
-        """Number of distinct bucket executables built so far."""
-        try:
-            return int(self._bucket_fn._cache_size())
-        except Exception:
-            return len(self._shape_keys)
+        """Number of distinct bucket executables built so far (exact)."""
+        return len(self._executables)
 
 
 def make_round_fn(loss_fn: LossFn, *, server: str = "avg",

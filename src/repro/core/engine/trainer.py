@@ -71,7 +71,10 @@ class FedAvgTrainer:
                  data: FederatedData, fed: FedConfig,
                  runtime: RuntimeModel,
                  eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
-                 use_kernel_avg: bool = False):
+                 use_kernel_avg: bool = False, backend=None):
+        """``backend``: an ``engine.backends.ExecutionBackend`` deciding the
+        execution geometry (default LocalBackend; pass a MeshBackend to run
+        the same schedules/aggregators/servers GSPMD-sharded)."""
         self.loss_fn = loss_fn
         self.params = init_params
         self.data = data
@@ -83,7 +86,8 @@ class FedAvgTrainer:
         self.engine = RoundEngine(loss_fn, aggregator=aggregator,
                                   trim_fraction=fed.trim_fraction,
                                   server=fed.server_optimizer,
-                                  server_lr=fed.server_lr)
+                                  server_lr=fed.server_lr,
+                                  backend=backend)
         self.server_state = self.engine.init_server_state(init_params)
         self.history = History()
         self._np_rng = np.random.default_rng(fed.seed)
@@ -105,10 +109,14 @@ class FedAvgTrainer:
             eval_every=eval_every if self.eval_fn is not None else None)
         # the builder consumes the trainer's persistent rng so repeated
         # run() calls continue one sample stream (seed-loop semantics)
+        # buckets are device_put with the backend's client sharding as soon
+        # as they are built — on the prefetch thread, the H2D transfer
+        # overlaps the previous bucket's device compute
         builder = pipeline.make_builder(
             self.data, self.fed.clients_per_round, self.fed.batch_size,
             self._np_rng,
-            background=self.fed.prefetch and sched.loss_free)
+            background=self.fed.prefetch and sched.loss_free,
+            place_fn=self.engine.backend.place_bucket)
         try:
             if sched.loss_free:
                 self._run_pipelined(sched, builder, rounds, verbose)

@@ -20,7 +20,7 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -131,21 +131,30 @@ class _BuilderBase:
 
     ``rng`` may be an int seed or a live ``np.random.Generator``; the
     trainer passes its persistent Generator (used in place, not copied) so
-    repeated ``run()`` calls continue one sample stream."""
+    repeated ``run()`` calls continue one sample stream.
+
+    ``place_fn`` (optional): applied to each finished BucketBatch — the
+    execution backend's host->device placement (``device_put`` with the
+    backend's client sharding). On the threaded builder it runs on the
+    worker, so the H2D transfer of bucket r+1 overlaps bucket r's compute."""
 
     def __init__(self, data: FederatedData, clients_per_round: int,
                  batch_size: int,
-                 rng: "Union[int, np.random.Generator]"):
+                 rng: "Union[int, np.random.Generator]",
+                 place_fn: Optional[Callable[["BucketBatch"],
+                                             "BucketBatch"]] = None):
         self.data = data
         self.clients_per_round = clients_per_round
         self.batch_size = batch_size
         self._rng = np.random.default_rng(rng)
+        self._place_fn = place_fn
 
     def _build(self, n_rounds: int, k: int,
                pad_to: Optional[int]) -> BucketBatch:
-        return bucket_batches(self._rng, self.data, n_rounds=n_rounds, k=k,
-                              clients_per_round=self.clients_per_round,
-                              batch_size=self.batch_size, pad_to=pad_to)
+        bb = bucket_batches(self._rng, self.data, n_rounds=n_rounds, k=k,
+                            clients_per_round=self.clients_per_round,
+                            batch_size=self.batch_size, pad_to=pad_to)
+        return self._place_fn(bb) if self._place_fn is not None else bb
 
     def submit(self, n_rounds: int, k: int,
                pad_to: Optional[int] = None) -> None:
@@ -184,8 +193,9 @@ class BatchPrefetcher(_BuilderBase):
 
     def __init__(self, data: FederatedData, clients_per_round: int,
                  batch_size: int, rng: "Union[int, np.random.Generator]",
-                 depth: int = 1):
-        super().__init__(data, clients_per_round, batch_size, rng)
+                 depth: int = 1, place_fn=None):
+        super().__init__(data, clients_per_round, batch_size, rng,
+                         place_fn=place_fn)
         self._req: "queue.Queue" = queue.Queue()
         self._out: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
@@ -231,6 +241,6 @@ class BatchPrefetcher(_BuilderBase):
 
 def make_builder(data: FederatedData, clients_per_round: int, batch_size: int,
                  rng: "Union[int, np.random.Generator]", *,
-                 background: bool = True) -> _BuilderBase:
+                 background: bool = True, place_fn=None) -> _BuilderBase:
     cls = BatchPrefetcher if background else SyncBatchBuilder
-    return cls(data, clients_per_round, batch_size, rng)
+    return cls(data, clients_per_round, batch_size, rng, place_fn=place_fn)

@@ -216,12 +216,12 @@ def cache_pspecs(cfg: ArchConfig, cache_shapes: PyTree, mesh: Mesh) -> PyTree:
         keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
         last = keys[-1]
         shape = leaf.shape
-        if last in ("ks", "vs"):
+        if last in ("ks", "vs", "krs", "vrs"):
             # int8-cache scales (..., B, L, KV, 1): batch over data only
             lead = (None,) * (len(shape) - 4)
             b_ax2: Any = ba if shape[-4] % dsize == 0 else None
             specs.append(P(*lead, b_ax2, None, None, None))
-        elif last in ("k", "v", "xk", "xv"):
+        elif last in ("k", "v", "kr", "vr", "xk", "xv"):
             B, S, KV, hd = shape[-4:]
             lead = (None,) * (len(shape) - 4)
             b_ax: Any = ba if B % dsize == 0 else None

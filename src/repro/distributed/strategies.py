@@ -1,16 +1,24 @@
 """Mesh-level FedAvg train steps and serving steps for the assigned archs.
 
+The federated strategies are a thin shim over the engine's execution
+backends (``repro.core.engine.backends``, DESIGN.md §7): ``make_fed_train_step``
+builds the arch's loss function (remat / MoE path / activation-sharding
+plumbing) and delegates the round itself — K-step local SGD, aggregation,
+server step — to a ``MeshBackend`` round core, the same code the
+K-bucketed ``RoundEngine`` executes. The two geometries it exposes:
+
 Strategy A — ``parallel`` (cross-device FL): the round's N clients live on
-the mesh ``data`` (x ``pod``) axes via ``vmap``; each lane runs K local SGD
-steps (``lax.scan``); the weighted model average contracts the client axis —
-GSPMD turns that into the aggregation all-reduce. Params stay 1d
-(tensor-parallel over ``model``).
+the mesh ``data`` (x ``pod``) axes via ``vmap``; the weighted model average
+contracts the client axis — GSPMD turns that into the aggregation
+all-reduce. Params stay 1d (tensor-parallel over ``model``).
 
 Strategy B — ``sequential`` (cross-silo FL, 100B+ archs): one fully-sharded
 (2d: model x data FSDP) parameter set; clients are processed by a
 ``lax.scan``; each client's K steps use the whole mesh; weighted deltas
-accumulate in f32. With a ``pod`` axis, client groups split across pods
-(hierarchical FL) and the final average all-reduces over ``pod``.
+accumulate in ``acc_dtype`` (bf16 default: f32 doubles the carry and
+XLA:CPU double-buffers scan carries — ablation in EXPERIMENTS §Perf). With
+a ``pod`` axis, client groups split across pods (hierarchical FL) and the
+final average all-reduces over ``pod``.
 
 Serving: ``serve_step`` = one decoded token against a KV/SSM cache;
 ``prefill_step`` = full-sequence forward returning last-token logits + the
@@ -18,15 +26,14 @@ decode states.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.engine import aggregators as agg
-from repro.core.engine.client import client_update
+from repro.core.engine.backends.mesh import MeshBackend
+from repro.core.engine.server import get_server_optimizer
 from repro.models import registry
 
 PyTree = Any
@@ -36,88 +43,61 @@ PyTree = Any
 # federated train steps
 # ---------------------------------------------------------------------------
 
-def _local_sgd(loss_fn, params, client_batches, eta):
-    """K steps of SGD from the round-start params (the engine's shared
-    ClientUpdate — see repro.core.engine.client). Leaves of
-    ``client_batches`` have leading K axis."""
-    res = client_update(loss_fn, params, client_batches, eta)
-    return res.params, res.first_loss
-
-
 def make_fed_train_step(cfg: ArchConfig, *, strategy: str = "parallel",
                         remat: bool = True, moe_path: str = "dispatch",
                         use_kernel: bool = False, use_kernel_avg: bool = False,
                         act_spec=None, client_spmd_axes=None,
                         param_specs=None, acc_dtype=jnp.bfloat16,
-                        attn_kv_spec=None, moe_shards=1, moe_spmd_axes=None):
+                        attn_kv_spec=None, moe_shards=1, moe_spmd_axes=None,
+                        mesh=None):
     """Returns train_step(params, batches, weights, eta) ->
     (new_params, mean_first_step_loss).
 
     ``client_spmd_axes``: mesh axes the client vmap dim is sharded over —
     required when ``act_spec`` constrains activations inside the vmap
-    (otherwise GSPMD replicates the client dim at the constraint)."""
+    (otherwise GSPMD replicates the client dim at the constraint).
+    ``mesh``: optional concrete Mesh — with ``use_kernel_avg`` it routes the
+    aggregation through the client-sharded Pallas reduction (local
+    block-reduce + all-reduce of partials) instead of the plain kernel."""
+    if strategy not in ("parallel", "sequential"):
+        raise ValueError(f"unknown strategy {strategy!r}")
     loss_fn = registry.loss_fn(cfg, remat=remat, moe_path=moe_path,
                                use_kernel=use_kernel, act_spec=act_spec,
                                attn_kv_spec=attn_kv_spec,
                                moe_shards=moe_shards,
                                moe_spmd_axes=moe_spmd_axes)
+    aggregator = "kernel" if use_kernel_avg else "mean"
+    server = get_server_optimizer("avg")     # plain FedAvg at server_lr=1
 
     if strategy == "parallel":
+        backend = MeshBackend(mesh, strategy="parallel",
+                              client_axes=client_spmd_axes)
+        core = backend.make_round_core(loss_fn, aggregator=aggregator,
+                                       server=server, server_lr=1.0)
+
         def train_step(params, batches, weights, eta):
             # batches leaves: (N, K, b, ...); weights: (N,)
-            client_params, first_losses = jax.vmap(
-                lambda b: _local_sgd(loss_fn, params, b, eta),
-                spmd_axis_name=client_spmd_axes)(batches)
-            aggregate = agg.get_aggregator(
-                "kernel" if use_kernel_avg else "mean")
-            new_params = aggregate(client_params, weights)
+            new_params, first_losses, _, _ = core(params, batches, weights,
+                                                  eta, ())
             return new_params, jnp.mean(first_losses)
 
         return train_step
 
-    if strategy == "sequential":
-        def constrain(tree):
-            # keep the f32 delta accumulator on the params' 2d sharding —
-            # without this GSPMD replicates full f32 weights inside the
-            # client scan (measured +8 GB/chip on nemotron-340b)
-            if param_specs is None:
-                return tree
-            return jax.tree.map(
-                lambda x, s: jax.lax.with_sharding_constraint(x, s),
-                tree, param_specs)
+    def train_step(params, batches, weights, eta):
+        # batches leaves: (G, Ng, K, b, ...); weights: (G, Ng).  The group
+        # count is static at trace time, so the backend core is built here.
+        backend = MeshBackend(mesh, strategy="sequential",
+                              client_axes=client_spmd_axes,
+                              groups=weights.shape[0],
+                              param_specs=param_specs, acc_dtype=acc_dtype)
+        core = backend.make_round_core(loss_fn, aggregator=aggregator,
+                                       server=server, server_lr=1.0)
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batches)
+        new_params, first_losses, _, _ = core(params, flat,
+                                              weights.reshape(-1), eta, ())
+        return new_params, jnp.mean(first_losses)
 
-        def train_step(params, batches, weights, eta):
-            # batches leaves: (G, Ng, K, b, ...); weights: (G, Ng)
-            def per_group(group_batches, group_w):
-                def client(acc, inp):
-                    cb, w = inp
-                    cp, first = _local_sgd(loss_fn, params, cb, eta)
-                    cp = constrain(cp)
-                    # delta accumulation: bf16 by default (f32 doubles the
-                    # carry and XLA:CPU double-buffers scan carries; the
-                    # f32 ablation is recorded in EXPERIMENTS §Perf)
-                    acc = constrain(jax.tree.map(
-                        lambda a, c: (a + w.astype(acc_dtype)
-                                      * c.astype(acc_dtype)).astype(acc_dtype),
-                        acc, cp))
-                    return acc, first
-
-                zeros = constrain(jax.tree.map(
-                    lambda p: jnp.zeros(p.shape, acc_dtype), params))
-                acc, firsts = jax.lax.scan(client, zeros,
-                                           (group_batches, group_w))
-                return acc, firsts
-
-            accs, firsts = jax.vmap(per_group,
-                                    spmd_axis_name=client_spmd_axes)(batches,
-                                                                     weights)
-            new_params = jax.tree.map(
-                lambda p, a: jnp.sum(a, axis=0).astype(p.dtype), params, accs)
-            return new_params, jnp.mean(firsts)
-
-        return train_step
-
-    raise ValueError(f"unknown strategy {strategy!r}")
+    return train_step
 
 
 def fed_batch_specs(cfg: ArchConfig, shape: ShapeConfig, *, n_clients: int,

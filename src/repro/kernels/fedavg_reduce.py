@@ -11,6 +11,12 @@ Block layout:
   x:   (N, M)  -> blocks (N, BM), grid = (M // BM,)
   w:   (N, 1)  -> whole, broadcast within block
   out: (1, M)  -> blocks (1, BM)
+
+``fedavg_reduce_sharded`` is the mesh variant (DESIGN.md §7): the client
+stack arrives sharded over the mesh client axes, each shard runs the same
+block-reduce over its local clients (partial weighted sums in f32), and a
+single ``psum`` all-reduces the (M,)-sized partials — the collective moves
+one model-size buffer per shard instead of the N-client stack.
 """
 from __future__ import annotations
 
@@ -19,6 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 DEFAULT_BLOCK = 4096
 
@@ -29,11 +37,11 @@ def _kernel(w_ref, x_ref, o_ref):
     o_ref[...] = jnp.sum(x * w, axis=0, keepdims=True).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def fedavg_reduce(client_stack: jnp.ndarray, weights: jnp.ndarray, *,
-                  block: int = DEFAULT_BLOCK,
-                  interpret: bool = False) -> jnp.ndarray:
-    """client_stack: (N, M); weights: (N,) -> (M,)."""
+def _block_reduce(client_stack: jnp.ndarray, weights: jnp.ndarray,
+                  block: int, interpret: bool,
+                  out_dtype=None) -> jnp.ndarray:
+    """The (N, M) x (N,) -> (M,) pallas_call, unjitted (shared by the
+    single-device entry point and the per-shard body of the mesh variant)."""
     n, m = client_stack.shape
     pad = (-m) % block
     if pad:
@@ -47,7 +55,42 @@ def fedavg_reduce(client_stack: jnp.ndarray, weights: jnp.ndarray, *,
             pl.BlockSpec((n, block), lambda i: (0, i)),  # client block
         ],
         out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, mp), client_stack.dtype),
+        out_shape=jax.ShapeDtypeStruct((1, mp),
+                                       out_dtype or client_stack.dtype),
         interpret=interpret,
     )(weights[:, None], client_stack)
     return out[0, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fedavg_reduce(client_stack: jnp.ndarray, weights: jnp.ndarray, *,
+                  block: int = DEFAULT_BLOCK,
+                  interpret: bool = False) -> jnp.ndarray:
+    """client_stack: (N, M); weights: (N,) -> (M,)."""
+    return _block_reduce(client_stack, weights, block, interpret)
+
+
+def fedavg_reduce_sharded(client_stack: jnp.ndarray, weights: jnp.ndarray, *,
+                          mesh, client_axes, block: int = DEFAULT_BLOCK,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Mesh variant: client_stack (N, M) with N sharded over ``client_axes``.
+
+    Each shard block-reduces its N/shards local clients into an f32 (M,)
+    partial, then one all-reduce over the client axes sums the partials;
+    the result is replicated (every shard holds the new global params, which
+    is exactly what the next round's broadcast wants). N must divide the
+    product of the client axes' sizes.
+    """
+    axes = tuple(client_axes)
+
+    def local(x, w):                      # x (N/shards, M); w (N/shards,)
+        partial = _block_reduce(x, w, block, interpret,
+                                out_dtype=jnp.float32)
+        return jax.lax.psum(partial, axes)
+
+    # check_rep=False: shard_map has no replication rule for pallas_call;
+    # the psum makes the out_spec P() replication explicit ourselves
+    out = shard_map(local, mesh=mesh,
+                    in_specs=(P(axes, None), P(axes)),
+                    out_specs=P(), check_rep=False)(client_stack, weights)
+    return out.astype(client_stack.dtype)

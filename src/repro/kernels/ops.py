@@ -48,6 +48,29 @@ def fedavg_reduce_tree(client_params: PyTree, weights: jnp.ndarray) -> PyTree:
     return jax.tree.map(one, client_params)
 
 
+def fedavg_reduce_sharded(client_stack: jnp.ndarray, weights: jnp.ndarray, *,
+                          mesh, client_axes) -> jnp.ndarray:
+    """(N, M) x (N,) -> (M,), N sharded over the mesh client axes: local
+    Pallas block-reduce per shard + all-reduce of the f32 partials."""
+    return _fr.fedavg_reduce_sharded(client_stack, weights, mesh=mesh,
+                                     client_axes=client_axes,
+                                     interpret=INTERPRET)
+
+
+def fedavg_reduce_tree_sharded(client_params: PyTree, weights: jnp.ndarray,
+                               *, mesh, client_axes) -> PyTree:
+    """Sharded weighted average of a client-stacked pytree (MeshBackend's
+    ``aggregator="kernel"`` path — see DESIGN.md §7)."""
+    def one(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        return fedavg_reduce_sharded(flat, weights, mesh=mesh,
+                                     client_axes=client_axes
+                                     ).reshape(leaf.shape[1:])
+
+    return jax.tree.map(one, client_params)
+
+
 # ---------------------------------------------------------------------------
 # flash attention (model layout adapter)
 # ---------------------------------------------------------------------------

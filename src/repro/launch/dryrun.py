@@ -263,6 +263,8 @@ def run_case(arch_name: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # jax<=0.4.x returns [dict] per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # Loop-aware accounting: XLA:CPU cost_analysis counts while bodies once
     # (verified K=1 == K=4), so FLOPs/bytes/collectives are re-derived from

@@ -7,9 +7,15 @@ schedules, the Eq. 3-5 runtime model, and checkpointing.
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \\
         --rounds 50 --k-schedule rounds --checkpoint /tmp/ckpt
 
-On a real TPU pod the same step functions are jit'd with the shardings from
-repro.distributed (see dryrun.py for the exact in/out sharding assembly);
-on CPU this trains the reduced config end-to-end.
+The trainer is driven through an execution backend (DESIGN.md §7):
+``--backend local`` is the single-device engine; ``--backend mesh`` runs the
+SAME FedAvgTrainer (K-bucketed scans, server optimizers, robust
+aggregators) through a ``MeshBackend`` — the client axis is placed on the
+mesh ``data`` axis, batches are ``device_put`` with the client sharding from
+the prefetch thread, and ``--aggregator kernel`` routes aggregation through
+the client-sharded Pallas reduction. On CPU the mesh is the degenerate
+(devices x 1) data x model mesh, so the identical code path that runs on a
+pod is exercised end-to-end here.
 """
 from __future__ import annotations
 
@@ -22,8 +28,19 @@ from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS, get_arch
 from repro.configs.base import FedConfig, RuntimeModelConfig
 from repro.core import FedAvgTrainer, RuntimeModel
+from repro.core.engine import MeshBackend
 from repro.data import make_lm_clients
 from repro.models import registry
+
+
+def make_backend(name: str, strategy: str, groups: int):
+    """``local`` -> None (the engine's LocalBackend default); ``mesh`` ->
+    a MeshBackend on a (devices, 1) data x model mesh."""
+    if name == "local":
+        return None
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    return MeshBackend(mesh, strategy=strategy, groups=groups)
 
 
 def main():
@@ -46,6 +63,13 @@ def main():
                     choices=("avg", "fedadam", "fedavgm", "fedyogi"))
     ap.add_argument("--aggregator", default="mean",
                     choices=("mean", "kernel", "median", "trimmed_mean"))
+    ap.add_argument("--backend", default="local", choices=("local", "mesh"),
+                    help="execution backend: single-device or GSPMD mesh")
+    ap.add_argument("--strategy", default="parallel",
+                    choices=("parallel", "sequential"),
+                    help="mesh client fan-out (ignored for --backend local)")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="sequential-strategy client groups (hierarchical FL)")
     ap.add_argument("--bucket-rounds", type=int, default=8,
                     help="max rounds per jitted K-bucket scan")
     ap.add_argument("--feedback-bucket", type=int, default=1,
@@ -84,10 +108,12 @@ def main():
     rt = RuntimeModel(n_params * 32 / 1e6, RuntimeModelConfig(beta_seconds=0.05),
                       fed.clients_per_round)
     params = registry.init(jax.random.PRNGKey(args.seed), cfg)
-    trainer = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    backend = make_backend(args.backend, args.strategy, args.groups)
+    trainer = FedAvgTrainer(loss_fn, params, data, fed, rt, backend=backend)
     h = trainer.run(args.rounds, verbose=False)
-    print(f"[train] engine: {trainer.compile_count} bucket executable(s) "
-          f"compiled for {args.rounds} rounds")
+    print(f"[train] engine[{args.backend}]: {trainer.compile_count} bucket "
+          f"executable(s) compiled, {trainer.engine.dispatch_count} "
+          f"dispatch(es) for {args.rounds} rounds")
     step = max(args.rounds // 10, 1)
     for i in range(0, args.rounds, step):
         print(f"[train] round {h.rounds[i]:4d} K={h.k[i]:3d} "

@@ -390,12 +390,16 @@ def _block_cache(cfg: ArchConfig, ltype: str, batch: int, max_seq: int, dtype,
         if w is not None:
             eff = min(max_seq, w)
     shape = (batch, eff, cfg.num_kv_heads, cfg.head_dim)
-    if quant:  # int8 values + per-(token, head) f32 scales (§Perf Q-KV)
+    if quant:  # two-level int8 + per-(token, head) f32 scales (§Perf Q-KV)
         sshape = shape[:-1] + (1,)
         return {"k": jnp.zeros(shape, jnp.int8),
                 "ks": jnp.ones(sshape, jnp.float32),
+                "kr": jnp.zeros(shape, jnp.int8),
+                "krs": jnp.ones(sshape, jnp.float32),
                 "v": jnp.zeros(shape, jnp.int8),
-                "vs": jnp.ones(sshape, jnp.float32)}
+                "vs": jnp.ones(sshape, jnp.float32),
+                "vr": jnp.zeros(shape, jnp.int8),
+                "vrs": jnp.ones(sshape, jnp.float32)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

@@ -1,0 +1,223 @@
+"""Execution-backend tests (DESIGN.md §7): MeshBackend on a 1x1 host mesh is
+numerically equivalent to LocalBackend for both strategies — with server
+optimizers and robust aggregators — the sharded Pallas aggregation matches
+``aggregators.mean``, the strategies module is a true shim over the backend
+round core, and the engine's executable registry counts compiles exactly.
+
+Parallel parity is asserted bitwise (same vmap fan-out, only sharding
+annotations differ); the sequential streaming path re-associates the
+weighted sum (per-group scan + group sum vs a single einsum), so the mean
+aggregator is held to the same rtol regime as the reference-loop loss
+parity in test_engine.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, get_paper_task
+from repro.configs.base import FedConfig
+from repro.core import FedAvgTrainer, RuntimeModel
+from repro.core.engine import (LocalBackend, MeshBackend, RoundEngine,
+                               aggregators)
+from repro.data import make_paper_task, pipeline
+from repro.distributed.strategies import make_fed_train_step
+from repro.kernels import ops as kops
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry, small
+
+
+@pytest.fixture(scope="module")
+def femnist_setup():
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=16, samples_per_client=30)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    return task, data, loss_fn, params
+
+
+@pytest.fixture(scope="module")
+def host_mesh():
+    return make_host_mesh()
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def trees_close(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+def run_trainer(femnist_setup, backend, rounds=8, **fed_kw):
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=16, clients_per_round=6, rounds=rounds,
+                    k0=4, eta0=0.3, batch_size=8, k_schedule="fixed",
+                    seed=0, **fed_kw)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt, backend=backend)
+    tr.run(rounds)
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# parity: MeshBackend (1x1 mesh) == LocalBackend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fed_kw", [
+    dict(),                                                       # plain FedAvg
+    dict(server_optimizer="fedavgm", server_lr=0.5,
+         aggregator="trimmed_mean"),    # acceptance: non-avg server + robust
+    dict(server_optimizer="fedyogi", server_lr=0.1,
+         aggregator="median"),
+])
+def test_mesh_parallel_parity(femnist_setup, host_mesh, fed_kw):
+    """Parallel strategy on a degenerate mesh is bitwise the local engine."""
+    local = run_trainer(femnist_setup, None, **fed_kw)
+    mesh = run_trainer(femnist_setup,
+                       MeshBackend(host_mesh, strategy="parallel"), **fed_kw)
+    assert trees_equal(local.params, mesh.params)
+    np.testing.assert_allclose(local.history.train_loss,
+                               mesh.history.train_loss, rtol=1e-6)
+    assert mesh.compile_count == 1
+
+
+@pytest.mark.parametrize("fed_kw,tol", [
+    # streaming weighted sum re-associates the mean contraction
+    (dict(), dict(rtol=2e-5, atol=1e-6)),
+    # robust aggregators materialise the client stack -> same values
+    (dict(server_optimizer="fedavgm", server_lr=0.5,
+          aggregator="trimmed_mean"), dict(rtol=0, atol=0)),
+    (dict(server_optimizer="fedyogi", server_lr=0.1,
+          aggregator="median"), dict(rtol=0, atol=0)),
+])
+def test_mesh_sequential_parity(femnist_setup, host_mesh, fed_kw, tol):
+    local = run_trainer(femnist_setup, None, **fed_kw)
+    mesh = run_trainer(
+        femnist_setup,
+        MeshBackend(host_mesh, strategy="sequential", groups=2), **fed_kw)
+    trees_close(local.params, mesh.params, **tol)
+
+
+def test_mesh_prefetched_buckets_match_sync(femnist_setup, host_mesh):
+    """device_put-on-the-prefetch-thread placement changes nothing."""
+    kw = dict(server_optimizer="fedavgm", server_lr=0.5)
+    bg = run_trainer(femnist_setup,
+                     MeshBackend(host_mesh, strategy="parallel"),
+                     prefetch=True, **kw)
+    sync = run_trainer(femnist_setup,
+                       MeshBackend(host_mesh, strategy="parallel"),
+                       prefetch=False, **kw)
+    assert trees_equal(bg.params, sync.params)
+
+
+# ---------------------------------------------------------------------------
+# sharded Pallas aggregation
+# ---------------------------------------------------------------------------
+
+def test_sharded_fedavg_reduce_matches_mean(host_mesh):
+    rng = np.random.default_rng(0)
+    stack = {"w": jnp.asarray(rng.normal(size=(8, 33, 7)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(8, 5000)).astype(np.float32))}
+    w = jnp.asarray((rng.random(8) + 0.1).astype(np.float32))
+    w = w / w.sum()
+    ref = aggregators.weighted_mean(stack, w)
+    out = kops.fedavg_reduce_tree_sharded(stack, w, mesh=host_mesh,
+                                          client_axes=("data",))
+    trees_close(out, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_mesh_kernel_avg_trains_and_matches_mean(femnist_setup, host_mesh):
+    """use_kernel_avg through the mesh path == mean aggregation (fp tol)."""
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=16, clients_per_round=6, rounds=4, k0=3,
+                    eta0=0.3, batch_size=8, k_schedule="fixed", seed=0)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr_k = FedAvgTrainer(loss_fn, params, data, fed, rt, use_kernel_avg=True,
+                         backend=MeshBackend(host_mesh, strategy="parallel"))
+    tr_m = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    tr_k.run(4)
+    tr_m.run(4)
+    trees_close(tr_k.params, tr_m.params, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# strategies shim delegates to the backend round core
+# ---------------------------------------------------------------------------
+
+def _lm_round_inputs(cfg, n=4, k=2, b=2, s=16, groups=None):
+    rng = np.random.default_rng(0)
+    lead = (groups, n // groups, k, b) if groups else (n, k, b)
+    tokens = rng.integers(0, cfg.vocab_size, size=lead + (s,), dtype=np.int32)
+    w = np.full(lead[:-2], 1.0 / n, np.float32)
+    return {"tokens": jnp.asarray(tokens)}, jnp.asarray(w)
+
+
+def test_strategies_shim_matches_engine_round(femnist_setup, host_mesh):
+    """make_fed_train_step == the engine's own round core on the same batch
+    (the strategies module carries no local-SGD/aggregation logic anymore)."""
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    params = registry.init(jax.random.PRNGKey(0), cfg)
+    loss_fn = registry.loss_fn(cfg, moe_path="dense")
+    batches, w = _lm_round_inputs(cfg)
+    eta = jnp.float32(0.05)
+
+    step = make_fed_train_step(cfg, strategy="parallel", remat=False,
+                               moe_path="dense")
+    got_p, got_l = jax.jit(step)(params, batches, w, eta)
+
+    engine = RoundEngine(lambda p, b: loss_fn(p, b), backend=LocalBackend())
+    want_p, firsts, _, _ = jax.jit(engine.round_core)(params, batches, w,
+                                                      eta, ())
+    trees_close(got_p, want_p, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(got_l), float(np.mean(firsts)),
+                               rtol=1e-6)
+
+
+def test_strategies_sequential_shim_runs_grouped(femnist_setup):
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    params = registry.init(jax.random.PRNGKey(0), cfg)
+    batches, w = _lm_round_inputs(cfg, groups=2)
+    step = make_fed_train_step(cfg, strategy="sequential", remat=False,
+                               moe_path="dense", acc_dtype=jnp.float32)
+    new_p, loss = jax.jit(step)(params, batches, w, jnp.float32(0.05))
+    assert np.isfinite(float(loss))
+    # params actually moved
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(new_p)))
+    assert moved
+
+
+# ---------------------------------------------------------------------------
+# explicit executable registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend_fn", [
+    lambda mesh: None,
+    lambda mesh: MeshBackend(mesh, strategy="parallel"),
+])
+def test_compile_registry_counts_exactly(femnist_setup, host_mesh,
+                                         backend_fn):
+    task, data, loss_fn, params = femnist_setup
+    engine = RoundEngine(loss_fn, backend=backend_fn(host_mesh))
+    state = engine.init_server_state(params)
+    rng = np.random.default_rng(0)
+
+    def bucket(n_rounds, k):
+        bb = pipeline.bucket_batches(rng, data, n_rounds=n_rounds, k=k,
+                                     clients_per_round=6, batch_size=8)
+        etas = np.full(n_rounds, 0.3, np.float32)
+        return bb, etas
+
+    assert engine.compile_count == 0
+    for i, (b, k) in enumerate([(2, 3), (2, 3), (4, 3), (2, 2)]):
+        bb, etas = bucket(b, k)
+        params, _, _, state = engine.run_bucket(
+            params, bb.batches, bb.weights, etas, bb.active, state)
+    # (2,3) reused its executable; (4,3) and (2,2) are new signatures
+    assert engine.compile_count == 3
+    assert engine.dispatch_count == 4
