@@ -34,6 +34,20 @@ def run(verbose=True) -> List[Tuple[str, float, str]]:
     us_r = _time(jax.jit(ref.fedavg_reduce_ref), x, w)
     rows.append(("kern_fedavg_reduce", us_k, f"oracle_us={us_r:.0f}"))
 
+    # fused int8 decompress-reduce (transport, DESIGN.md §8): oracle is
+    # decode-to-f32 then the weighted einsum — the (N, M) f32 materialise
+    # the fused kernel avoids
+    qi = jnp.clip(jnp.round(x * 40.0), -127, 127).astype(jnp.int8)
+    qr = jnp.clip(jnp.round((x - qi * 0.025) * 5080.0), -127, 127
+                  ).astype(jnp.int8)
+    w1, w2 = w * 0.025, w * (0.025 / 127.0)
+    us_k = _time(ops.int8_delta_reduce, qi, w1, qr, w2)
+    oracle = jax.jit(lambda q, qr, w1, w2: jnp.einsum(
+        "c,cm->m", w1, q.astype(jnp.float32))
+        + jnp.einsum("c,cm->m", w2, qr.astype(jnp.float32)))
+    us_r = _time(oracle, qi, qr, w1, w2)
+    rows.append(("kern_int8_delta_reduce", us_k, f"oracle_us={us_r:.0f}"))
+
     q = jax.random.normal(ks[0], (1, 512, 8, 64)) * 0.3
     k = jax.random.normal(ks[1], (1, 512, 2, 64)) * 0.3
     v = jax.random.normal(ks[2], (1, 512, 2, 64))

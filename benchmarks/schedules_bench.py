@@ -68,6 +68,7 @@ def run_task(task_name: str, rounds: int, *, seed: int = 0,
             "min_train_loss": h.min_train_loss[-1],
             "max_val_acc": h.max_val_acc[-1] if h.max_val_acc else 0.0,
             "sim_wall_clock_s": h.wall_clock_s[-1],
+            "uplink_mbit": h.uplink_mbit[-1],
             "relative_sgd_steps": rel,
             "bench_s": time.time() - t0,
         })
@@ -75,7 +76,7 @@ def run_task(task_name: str, rounds: int, *, seed: int = 0,
             r = results[-1]
             print(f"  {task_name:12s} {name:12s} loss={r['min_train_loss']:.4f} "
                   f"acc={r['max_val_acc']:.3f} W={r['sim_wall_clock_s']:.0f}s "
-                  f"rel_steps={rel:.2f}")
+                  f"rel_steps={rel:.2f} up={r['uplink_mbit']:.0f}mbit")
     return results
 
 
@@ -186,6 +187,59 @@ def run_backend_compare(rounds: int = 60, *, task_name: str = "sent140",
     return out
 
 
+def run_transport_compare(rounds: int = 30, *, task_name: str = "femnist",
+                          topk_frac: float = 0.05, seed: int = 0,
+                          verbose: bool = False) -> List[Dict]:
+    """Delta-transport codecs on the decaying-K schedule (DESIGN.md §8).
+
+    Same task/schedule/seed per codec; reports final + min training loss
+    (the 'matched final loss' contract — int8's error-feedback keeps it at
+    the uncompressed loss), total modelled bytes-on-wire, the uplink
+    reduction vs ``none``, and the modelled Eq. 5 wall-clock — the wire is
+    a first-class axis of the decayed-K comparison now, not just FLOPs.
+    Single-level int8 rides ~1.0003 bytes/param (value plane + one f32
+    scale per leaf), i.e. the full 4x vs f32 up to per-leaf metadata.
+    """
+    task = get_paper_task(task_name)
+    data = make_paper_task(task_name, np.random.default_rng(seed),
+                           num_clients=QUICK["clients"],
+                           samples_per_client=QUICK["samples"])
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params0 = small.init_task_model(jax.random.PRNGKey(seed), task)
+    out: List[Dict] = []
+    for name in ("none", "int8", "topk"):
+        fed = FedConfig(total_clients=data.num_clients,
+                        clients_per_round=QUICK["per_round"], rounds=rounds,
+                        k0=QUICK["k0"], eta0=task.fed.eta0,
+                        batch_size=min(task.fed.batch_size, 16),
+                        k_schedule="rounds", k_quantize=True,
+                        transport=name, topk_frac=topk_frac, seed=seed)
+        rt = RuntimeModel(task.model_size_mb, task.runtime,
+                          fed.clients_per_round)
+        t0 = time.time()
+        tr = FedAvgTrainer(loss_fn, params0, data, fed, rt)
+        h = tr.run(rounds)
+        out.append({
+            "transport": name, "task": task_name,
+            "final_loss": h.train_loss[-1],
+            "min_train_loss": h.min_train_loss[-1],
+            "uplink_mbit": h.uplink_mbit[-1],
+            "uplink_x": out[0]["uplink_mbit"] / h.uplink_mbit[-1]
+            if out else 1.0,
+            "dloss": h.train_loss[-1] - out[0]["final_loss"] if out else 0.0,
+            "sim_wall_clock_s": h.wall_clock_s[-1],
+            "bench_s": time.time() - t0,
+        })
+        if verbose:
+            r = out[-1]
+            print(f"  transport[{name:5s}] {task_name}: "
+                  f"loss={r['final_loss']:.4f} (d={r['dloss']:+.4f}) "
+                  f"uplink={r['uplink_mbit']:.0f}mbit "
+                  f"({r['uplink_x']:.2f}x less) "
+                  f"W={r['sim_wall_clock_s']:.0f}s")
+    return out
+
+
 def run_prefetch_overlap(rounds: int = 48, *, seed: int = 0,
                          verbose: bool = False) -> Dict:
     """Background prefetch thread vs. the inline builder on a compute-bound
@@ -239,7 +293,8 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                          f"loss={r['min_train_loss']:.4f};"
                          f"acc={r['max_val_acc']:.3f};"
                          f"relsteps={r['relative_sgd_steps']:.3f};"
-                         f"simW={r['sim_wall_clock_s']:.0f}s"))
+                         f"simW={r['sim_wall_clock_s']:.0f}s;"
+                         f"upMbit={r['uplink_mbit']:.1f}"))
     e = run_engine_speedup(rounds=rounds or 200, verbose=verbose)
     rows.append(("engine_bucketed_vs_seed", e["engine_s"] * 1e6,
                  f"speedup={e['speedup']:.2f}x;"
@@ -251,11 +306,35 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                      f"rps={b['rps']:.1f};"
                      f"dispatches={b['dispatches']};"
                      f"compiles={b['compiles']}"))
+    for t in run_transport_compare(rounds=rounds or 30, verbose=verbose):
+        rows.append((f"transport_{t['transport']}_{t['task']}",
+                     t["bench_s"] * 1e6,
+                     f"uplink_x={t['uplink_x']:.2f};"
+                     f"loss={t['final_loss']:.4f};"
+                     f"dloss={t['dloss']:+.4f};"
+                     f"simW={t['sim_wall_clock_s']:.0f}s;"
+                     f"upMbit={t['uplink_mbit']:.1f}"))
     p = run_prefetch_overlap(rounds=rounds or 48, verbose=verbose)
     rows.append(("engine_prefetch_overlap", p["prefetch_s"] * 1e6,
                  f"speedup={p['speedup']:.2f}x;"
                  f"rps={p['rounds'] / p['prefetch_s']:.1f}"))
     return rows
+
+
+def write_csv(rows: List[Tuple[str, float, str]], path: str) -> None:
+    """CSV with bytes-on-wire as a first-class column (parsed back out of
+    the ``upMbit=`` derived field; empty for wire-less rows)."""
+    import csv
+
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["name", "us_per_call", "uplink_mbit", "derived"])
+        for name, us, derived in rows:
+            up = ""
+            for part in derived.split(";"):
+                if part.startswith("upMbit="):
+                    up = part.split("=", 1)[1]
+            w.writerow([name, f"{us:.1f}", up, derived])
 
 
 if __name__ == "__main__":
@@ -265,8 +344,14 @@ if __name__ == "__main__":
     ap.add_argument("--rounds", type=int, default=None,
                     help="rounds per run (small values = CI smoke)")
     ap.add_argument("--tasks", nargs="*", default=["sent140"])
+    ap.add_argument("--csv", default=None,
+                    help="also write the rows (incl. bytes-on-wire column) "
+                         "to this CSV file")
     ap.add_argument("--quiet", action="store_true")
     a = ap.parse_args()
-    for name, us, derived in run(tasks=tuple(a.tasks), rounds=a.rounds,
-                                 verbose=not a.quiet):
+    all_rows = run(tasks=tuple(a.tasks), rounds=a.rounds,
+                   verbose=not a.quiet)
+    for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")
+    if a.csv:
+        write_csv(all_rows, a.csv)

@@ -75,4 +75,23 @@ def run(verbose=True) -> List[Tuple[str, float, str]]:
         if verbose:
             print(f"  table4 {name:12s} Eq.5 equal-rounds wall-clock speedup "
                   f"{speedup:.2f}x over fixed-K")
+        # decayed K shrinks the compute term, so the fixed |x|/U uplink is
+        # what bounds the round — int8 transport attacks exactly that term.
+        # Nominal 4x codec ratio (per-leaf scale overhead vanishes at the
+        # Table 1/2 model sizes; see DESIGN.md §8).
+        from repro.core.engine.transport import Int8Transport
+        rt8 = RuntimeModel(task.model_size_mb, task.runtime,
+                           task.fed.clients_per_round,
+                           uplink_compression=Int8Transport().nominal_ratio())
+        speedup8 = rt.total_time(ks_fixed) / rt8.total_time(ks_dec)
+        up_frac = (rt8.uplink_mbit_per_client / rt8.cfg.upload_mbps) \
+            / rt8.comm_time()
+        rows.append((f"table4_{name}_wallclock_speedup_int8", 0.0,
+                     f"speedup={speedup8:.2f}x;"
+                     f"vs_plain={speedup8 / speedup:.2f}x;"
+                     f"uplink_comm_frac={up_frac:.2f}"))
+        if verbose:
+            print(f"  table4 {name:12s} K_r-rounds + int8 uplink: "
+                  f"{speedup8:.2f}x over fixed-K uncompressed "
+                  f"({speedup8 / speedup:.2f}x from the wire)")
     return rows

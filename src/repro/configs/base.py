@@ -168,6 +168,9 @@ class FedConfig:
     # --- round engine (DESIGN.md §6) ---
     aggregator: str = "mean"          # mean | kernel | median | trimmed_mean
     trim_fraction: float = 0.1        # for aggregator="trimmed_mean"
+    # --- delta transport (DESIGN.md §8) ---
+    transport: str = "none"           # none | int8 | int8x2 | topk
+    topk_frac: float = 0.1            # kept fraction for transport="topk"
     bucket_rounds: int = 8            # max rounds per jitted K-bucket scan
     feedback_bucket_rounds: int = 1   # bucket length for error/step schedules
                                       # (1 == per-round feedback, seed-exact)

@@ -11,16 +11,23 @@ from repro.core.engine.backends import (ExecutionBackend, LocalBackend,
 from repro.core.engine.client import ClientResult, client_update, \
     make_client_update
 from repro.core.engine.round import (RoundEngine, make_bucket_fn,
-                                     make_round_core, make_round_fn)
+                                     make_round_core, make_round_fn,
+                                     make_transport_bucket_fn)
 from repro.core.engine.scheduler import Bucket, RoundScheduler, is_loss_free
 from repro.core.engine.server import (SERVER_OPTIMIZERS, ServerOptimizer,
                                       get_server_optimizer)
 from repro.core.engine.trainer import FedAvgTrainer, History, make_eval_fn
+from repro.core.engine.transport import (TRANSPORTS, IdentityTransport,
+                                         Int8Transport, TopKTransport,
+                                         Transport, get_transport)
 
 __all__ = ["AGGREGATORS", "get_aggregator", "weighted_mean",
            "ExecutionBackend", "LocalBackend", "MeshBackend", "ClientResult",
            "client_update", "make_client_update", "RoundEngine",
-           "make_bucket_fn", "make_round_core", "make_round_fn", "Bucket",
+           "make_bucket_fn", "make_round_core", "make_round_fn",
+           "make_transport_bucket_fn", "Bucket",
            "RoundScheduler", "is_loss_free", "SERVER_OPTIMIZERS",
            "ServerOptimizer", "get_server_optimizer", "FedAvgTrainer",
-           "History", "make_eval_fn"]
+           "History", "make_eval_fn", "TRANSPORTS", "Transport",
+           "IdentityTransport", "Int8Transport", "TopKTransport",
+           "get_transport"]

@@ -35,6 +35,16 @@ LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Any]
 LINEAR_AGGREGATORS = ("mean", "kernel")
 
 
+def axes_size(mesh, axes) -> int:
+    """Product of the named mesh axes' sizes (1 for no mesh / no axes)."""
+    if mesh is None or not axes:
+        return 1
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a] if a in mesh.axis_names else 1
+    return size
+
+
 class ExecutionBackend:
     """Protocol + shared no-op placement defaults (single-device behaviour).
 
@@ -50,10 +60,15 @@ class ExecutionBackend:
     # ------------------------------------------------------------------
     def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
                         trim_fraction: float = 0.1, server=None,
-                        server_lr: float = 1.0):
+                        server_lr: float = 1.0, transport=None):
         """Return round_core(params, batches{(N,K,b,...)}, weights(N,), eta,
         server_state) -> (new_params, first_losses(N,), last_losses(N,),
-        server_state)."""
+        server_state).
+
+        With a non-None ``transport`` (DESIGN.md §8) the core gains a
+        trailing transport-state argument/result: round_core(params,
+        batches, weights, eta, server_state, t_state) -> (new_params,
+        first_losses, last_losses, server_state, t_state)."""
         raise NotImplementedError
 
     # ------------------------------------------------------------------
@@ -80,3 +95,21 @@ class ExecutionBackend:
             bb, batches=self.place_batches(bb.batches),
             weights=self.place_weights(bb.weights),
             active=jnp.asarray(bb.active, bool))
+
+    def place_transport_state(self, state):
+        """Transport error-feedback state is params-shaped (or ``()``), so
+        it rides the params placement (sharding specs included)."""
+        if not jax.tree.leaves(state):
+            return state
+        return self.place_params(state)
+
+    # ------------------------------------------------------------------
+    # output sharding pinning
+    # ------------------------------------------------------------------
+    def constrain_update(self, tree: PyTree) -> PyTree:
+        """Pin the bucket executable's params-like outputs (new params,
+        transport state) to the backend's parameter sharding, so the next
+        bucket's ``place_params`` is a no-op instead of a per-bucket
+        canonicalising ``device_put`` (DESIGN.md §7.3). No-op on a single
+        device."""
+        return tree

@@ -19,7 +19,8 @@ from repro.core.engine.client import make_client_update
 
 def make_parallel_round_core(loss_fn: LossFn, aggregator: Aggregator,
                              server, server_lr: float, *,
-                             client_spmd_axes: Optional[Sequence[str]] = None):
+                             client_spmd_axes: Optional[Sequence[str]] = None,
+                             transport=None):
     """The vmap-over-clients round core shared by Local and Mesh-parallel.
 
     ``client_spmd_axes``: mesh axes the vmapped client dim is sharded over
@@ -27,17 +28,36 @@ def make_parallel_round_core(loss_fn: LossFn, aggregator: Aggregator,
 
     round_core(params, batches{(N,K,b,...)}, weights(N,), eta, server_state)
     -> (new_params, first_losses (N,), last_losses (N,), server_state).
+
+    With ``transport`` (DESIGN.md §8) the clients' stacked params go through
+    the codec's delta pipeline (encode -> fused decompress-reduce) instead
+    of the aggregator, and the core threads the transport state:
+    round_core(..., server_state, t_state) -> (..., server_state, t_state).
     """
     client = make_client_update(loss_fn)
 
-    def round_core(params, batches, weights, eta, server_state):
+    if transport is None:
+        def round_core(params, batches, weights, eta, server_state):
+            client_params, first_losses, last_losses = jax.vmap(
+                client, in_axes=(None, 0, None),
+                spmd_axis_name=client_spmd_axes)(params, batches, eta)
+            aggregate = aggregator(client_params, weights)
+            new_params, server_state = server.step(params, aggregate,
+                                                   server_state, server_lr)
+            return new_params, first_losses, last_losses, server_state
+
+        return round_core
+
+    def round_core(params, batches, weights, eta, server_state, t_state):
         client_params, first_losses, last_losses = jax.vmap(
             client, in_axes=(None, 0, None),
             spmd_axis_name=client_spmd_axes)(params, batches, eta)
-        aggregate = aggregator(client_params, weights)
+        aggregate, t_state = transport.aggregate(
+            aggregator, params, client_params, weights, t_state)
         new_params, server_state = server.step(params, aggregate,
                                                server_state, server_lr)
-        return new_params, first_losses, last_losses, server_state
+        return (new_params, first_losses, last_losses, server_state,
+                t_state)
 
     return round_core
 
@@ -47,6 +67,7 @@ class LocalBackend(ExecutionBackend):
 
     def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
                         trim_fraction: float = 0.1, server=None,
-                        server_lr: float = 1.0):
+                        server_lr: float = 1.0, transport=None):
         agg = get_aggregator(aggregator, trim_fraction=trim_fraction)
-        return make_parallel_round_core(loss_fn, agg, server, server_lr)
+        return make_parallel_round_core(loss_fn, agg, server, server_lr,
+                                        transport=transport)

@@ -37,7 +37,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.engine.aggregators import get_aggregator
 from repro.core.engine.backends.base import (ExecutionBackend,
-                                             LINEAR_AGGREGATORS, LossFn)
+                                             LINEAR_AGGREGATORS, LossFn,
+                                             axes_size as _axes_size)
 from repro.core.engine.backends.local import make_parallel_round_core
 from repro.core.engine.client import client_update
 
@@ -74,14 +75,33 @@ class MeshBackend(ExecutionBackend):
     # ------------------------------------------------------------------
     def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
                         trim_fraction: float = 0.1, server=None,
-                        server_lr: float = 1.0):
+                        server_lr: float = 1.0, transport=None):
+        if transport is not None and self.mesh is not None:
+            # bound copy: reduce() routes through the client-sharded
+            # decompress-reduce kernel (delta_codec, DESIGN.md §8)
+            transport = transport.with_mesh(self.mesh, self.client_axes)
         if self.strategy == "parallel":
             agg = self._resolve_aggregator(aggregator, trim_fraction)
             return make_parallel_round_core(
                 loss_fn, agg, server, server_lr,
-                client_spmd_axes=self.client_axes)
+                client_spmd_axes=self.client_axes, transport=transport)
+        if transport is not None and transport.name == "none":
+            # identity codec: keep the legacy sequential core (streaming
+            # linear / stacking robust aggregators) and thread the empty
+            # transport state through unchanged
+            core = self._make_sequential_core(loss_fn, aggregator,
+                                              trim_fraction, server,
+                                              server_lr)
+
+            def identity_core(params, batches, weights, eta, server_state,
+                              t_state):
+                p, f, l, s = core(params, batches, weights, eta,
+                                  server_state)
+                return p, f, l, s, t_state
+
+            return identity_core
         return self._make_sequential_core(loss_fn, aggregator, trim_fraction,
-                                          server, server_lr)
+                                          server, server_lr, transport)
 
     def _resolve_aggregator(self, name: str, trim_fraction: float):
         if name == "kernel" and self.mesh is not None:
@@ -101,7 +121,10 @@ class MeshBackend(ExecutionBackend):
         return get_aggregator(name, trim_fraction=trim_fraction)
 
     def _make_sequential_core(self, loss_fn, aggregator, trim_fraction,
-                              server, server_lr):
+                              server, server_lr, transport=None):
+        if transport is not None:
+            return self._make_sequential_transport_core(loss_fn, server,
+                                                        server_lr, transport)
         stream = aggregator in LINEAR_AGGREGATORS
         agg = None if stream else get_aggregator(aggregator,
                                                  trim_fraction=trim_fraction)
@@ -114,7 +137,8 @@ class MeshBackend(ExecutionBackend):
             if param_specs is None:
                 return tree
             return jax.tree.map(
-                lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, self._spec_sharding(s)),
                 tree, param_specs)
 
         def round_core(params, batches, weights, eta, server_state):
@@ -170,18 +194,103 @@ class MeshBackend(ExecutionBackend):
 
         return round_core
 
+    def _make_sequential_transport_core(self, loss_fn, server, server_lr,
+                                        transport):
+        """Streaming compressed sequential core (DESIGN.md §8): each client
+        in the scan encodes its (error-corrected) delta and the decoded
+        payload folds into a running f32 weighted sum — neither the (N, ...)
+        client stack nor the decoded per-client deltas are ever stacked.
+        Error feedback additionally streams the true weighted delta sum, so
+        the residual update matches the parallel path's exactly (modulo sum
+        re-association, the documented sequential-parity regime)."""
+        groups = self.groups
+        param_specs, axes = self.param_specs, self.client_axes
+        ef = transport.error_feedback
+
+        def constrain(tree):
+            if param_specs is None:
+                return tree
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, self._spec_sharding(s)),
+                tree, param_specs)
+
+        def round_core(params, batches, weights, eta, server_state, t_state):
+            n = weights.shape[0]
+            if n % groups:
+                raise ValueError(f"{n} clients not divisible into "
+                                 f"{groups} groups")
+            ng = n // groups
+            gb = jax.tree.map(
+                lambda x: x.reshape((groups, ng) + x.shape[1:]), batches)
+            gw = weights.reshape(groups, ng)
+
+            def per_group(group_batches, group_w):
+                def client(carry, inp):
+                    hat_acc, true_acc = carry
+                    cb, w = inp
+                    res = client_update(loss_fn, params, cb, eta)
+                    delta = constrain(jax.tree.map(
+                        lambda c, p: c.astype(jnp.float32)
+                        - p.astype(jnp.float32), res.params, params))
+                    if ef:
+                        delta = constrain(jax.tree.map(
+                            jnp.add, delta, t_state))
+                    dec = transport.decode(transport.encode(delta),
+                                           like=params)
+                    w32 = w.astype(jnp.float32)
+                    hat_acc = constrain(jax.tree.map(
+                        lambda a, d: a + w32 * d, hat_acc, dec))
+                    if ef:
+                        true_acc = constrain(jax.tree.map(
+                            lambda a, d: a + w32 * d, true_acc, delta))
+                    return ((hat_acc, true_acc),
+                            (res.first_loss, res.last_loss))
+
+                zeros = constrain(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params))
+                zeros_t = zeros if ef else ()
+                return jax.lax.scan(client, (zeros, zeros_t),
+                                    (group_batches, group_w))
+
+            (hat_g, true_g), (firsts, lasts) = jax.vmap(
+                per_group, spmd_axis_name=axes)(gb, gw)
+            hat = jax.tree.map(lambda a: jnp.sum(a, axis=0), hat_g)
+            if ef:
+                true = jax.tree.map(lambda a: jnp.sum(a, axis=0), true_g)
+                new_t = jax.tree.map(jnp.subtract, true, hat)
+            else:
+                new_t = t_state
+            aggregate = jax.tree.map(
+                lambda p, h: (p.astype(jnp.float32) + h).astype(p.dtype),
+                params, hat)
+            new_params, server_state = server.step(params, aggregate,
+                                                   server_state, server_lr)
+            return (new_params, firsts.reshape(n), lasts.reshape(n),
+                    server_state, new_t)
+
+        return round_core
+
     # ------------------------------------------------------------------
     # placement
     # ------------------------------------------------------------------
     def _named(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
 
+    def _spec_sharding(self, s):
+        """Resolve a param-spec entry for ``with_sharding_constraint``:
+        concrete mesh -> NamedSharding (no mesh context needed); abstract
+        lowering (mesh=None) or an already-built Sharding pass through."""
+        if self.mesh is None or isinstance(s, jax.sharding.Sharding):
+            return s
+        return self._named(s)
+
     def place_params(self, params: PyTree) -> PyTree:
         if self.mesh is None:
             return jax.tree.map(jnp.asarray, params)
         if self.param_specs is not None:
             return jax.tree.map(
-                lambda x, s: jax.device_put(x, self._named(s)),
+                lambda x, s: jax.device_put(x, self._spec_sharding(s)),
                 params, self.param_specs)
         rep = self._named(P())
         return jax.tree.map(lambda x: jax.device_put(x, rep), params)
@@ -217,11 +326,26 @@ class MeshBackend(ExecutionBackend):
             spec = P(*((None,) * (w.ndim - 1)), self.client_axes)
         return jax.device_put(w, self._named(spec))
 
+    # ------------------------------------------------------------------
+    # output sharding pinning (DESIGN.md §7.3)
+    # ------------------------------------------------------------------
+    def constrain_update(self, tree: PyTree) -> PyTree:
+        """Pin params-like executable outputs to the placement sharding
+        (param_specs, or replicated): the next bucket's ``place_params``
+        then sees an already-canonical sharding and skips the per-bucket
+        ``device_put`` resharding (the PR-2 ROADMAP item)."""
+        if self.mesh is None or not jax.tree.leaves(tree):
+            return tree
+        if self.param_specs is None:
+            rep = self._named(P())
+            return jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(x, rep), tree)
+        try:
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, self._spec_sharding(s)), tree, self.param_specs)
+        except ValueError:
+            # tree is not params-shaped (exotic server/transport state) —
+            # leave its sharding to GSPMD
+            return tree
 
-def _axes_size(mesh, axes) -> int:
-    if mesh is None or not axes:
-        return 1
-    size = 1
-    for a in axes:
-        size *= mesh.shape[a] if a in mesh.axis_names else 1
-    return size

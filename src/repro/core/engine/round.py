@@ -30,10 +30,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine.aggregators import Aggregator, get_aggregator
-from repro.core.engine.backends.base import ExecutionBackend
+from repro.core.engine.backends.base import (ExecutionBackend,
+                                             LINEAR_AGGREGATORS)
 from repro.core.engine.backends.local import (LocalBackend,
                                               make_parallel_round_core)
 from repro.core.engine.server import ServerOptimizer, get_server_optimizer
+from repro.core.engine.transport import get_transport
 
 PyTree = Any
 LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Any]
@@ -71,6 +73,36 @@ def make_bucket_fn(round_core):
     return bucket_fn
 
 
+def make_transport_bucket_fn(round_core):
+    """Multi-round scan for a transport-threaded core (DESIGN.md §8): the
+    carry additionally holds the codec's error-feedback state, masked on
+    padding rounds with the same bitwise-transparent ``jnp.where`` select
+    as params and server state.
+
+    bucket_fn(params, batches, weights, etas, active, server_state, t_state)
+        -> (new_params, first_losses, last_losses, server_state, t_state)
+    """
+    def bucket_fn(params, batches, weights, etas, active, server_state,
+                  t_state):
+        def body(carry, xs):
+            params, state, tstate = carry
+            b, w, eta, act = xs
+            new_p, first, last, new_s, new_t = round_core(
+                params, b, w, eta, state, tstate)
+            sel = lambda n, o: jnp.where(act, n, o)
+            new_p = jax.tree.map(sel, new_p, params)
+            new_s = jax.tree.map(sel, new_s, state)
+            new_t = jax.tree.map(sel, new_t, tstate)
+            return (new_p, new_s, new_t), (first, last)
+
+        (params, server_state, t_state), (firsts, lasts) = jax.lax.scan(
+            body, (params, server_state, t_state),
+            (batches, weights, etas, active))
+        return params, firsts, lasts, server_state, t_state
+
+    return bucket_fn
+
+
 def _signature(args) -> Tuple:
     """Hashable (treedef, leaf shapes/dtypes) key for the AOT registry."""
     leaves, treedef = jax.tree.flatten(args)
@@ -91,18 +123,60 @@ class RoundEngine:
     def __init__(self, loss_fn: LossFn, *, aggregator: str = "mean",
                  trim_fraction: float = 0.1, server: str = "avg",
                  server_lr: float = 1.0,
-                 backend: Optional[ExecutionBackend] = None):
+                 backend: Optional[ExecutionBackend] = None,
+                 transport=None, topk_frac: float = 0.1):
+        """``transport``: None/"none" keeps the historical param-space
+        aggregation path bit-for-bit; "int8"/"int8x2"/"topk" (or a
+        ``Transport`` instance) routes aggregation through the compressed
+        delta pipeline (DESIGN.md §8). Compressed codecs require a linear
+        aggregator; their error-feedback state is engine-owned
+        (``transport_state``) and threads through every bucket scan."""
         self.backend = backend if backend is not None else LocalBackend()
+        self.transport = get_transport(transport, topk_frac=topk_frac)
+        if self.transport is not None and \
+                getattr(self.transport, "name", "") != "none" and \
+                aggregator not in LINEAR_AGGREGATORS:
+            raise ValueError(
+                f"transport {self.transport.name!r} requires a linear "
+                f"aggregator {LINEAR_AGGREGATORS}, got {aggregator!r}")
         self.server = get_server_optimizer(server)
         self.round_core = self.backend.make_round_core(
             loss_fn, aggregator=aggregator, trim_fraction=trim_fraction,
-            server=self.server, server_lr=server_lr)
-        self._jitted = jax.jit(make_bucket_fn(self.round_core))
+            server=self.server, server_lr=server_lr, transport=self.transport)
+        # codec signature participates in the executable-registry key
+        self._codec_sig = (() if self.transport is None
+                           else self.transport.signature())
+        if self.transport is None:
+            raw = make_bucket_fn(self.round_core)
+
+            def bucket(params, batches, weights, etas, active, server_state):
+                p, f, l, s = raw(params, batches, weights, etas, active,
+                                 server_state)
+                return self.backend.constrain_update(p), f, l, s
+        else:
+            raw = make_transport_bucket_fn(self.round_core)
+
+            def bucket(params, batches, weights, etas, active, server_state,
+                       t_state):
+                p, f, l, s, t = raw(params, batches, weights, etas, active,
+                                    server_state, t_state)
+                be = self.backend
+                return be.constrain_update(p), f, l, s, be.constrain_update(t)
+        self._jitted = jax.jit(bucket)
         self._executables: Dict[Tuple, Any] = {}
         self.dispatch_count = 0
+        self.transport_state: Any = None
 
     def init_server_state(self, params: PyTree) -> Any:
         return self.server.init(params)
+
+    def init_transport_state(self, params: PyTree) -> Any:
+        """Create (and own) the codec's error-feedback state. Engine-owned
+        so ``run_bucket``'s signature and 4-tuple result stay unchanged;
+        the trainer checkpoints it via ``transport_state``."""
+        self.transport_state = (() if self.transport is None
+                                else self.transport.init_state(params))
+        return self.transport_state
 
     def run_bucket(self, params, batches, weights, etas, active, server_state
                    ) -> Tuple[PyTree, jnp.ndarray, jnp.ndarray, Any]:
@@ -118,14 +192,25 @@ class RoundEngine:
         weights = be.place_weights(weights)
         etas, active = be.place_scalars(etas, active)
         server_state = jax.tree.map(jnp.asarray, server_state)
-        args = (params, batches, weights, etas, active, server_state)
-        key = _signature(args)
+        if self.transport is None:
+            args = (params, batches, weights, etas, active, server_state)
+        else:
+            if self.transport_state is None:
+                self.init_transport_state(params)
+            t_state = be.place_transport_state(self.transport_state)
+            args = (params, batches, weights, etas, active, server_state,
+                    t_state)
+        key = (self._codec_sig,) + _signature(args)
         exe = self._executables.get(key)
         if exe is None:
             exe = self._jitted.lower(*args).compile()
             self._executables[key] = exe
         self.dispatch_count += 1
-        return exe(*args)
+        out = exe(*args)
+        if self.transport is None:
+            return out
+        params, firsts, lasts, server_state, self.transport_state = out
+        return params, firsts, lasts, server_state
 
     @property
     def compile_count(self) -> int:

@@ -55,11 +55,17 @@ def is_loss_free(fed: FedConfig) -> bool:
 
 class RoundScheduler:
     def __init__(self, ctrl: DecayController, fed: FedConfig, *,
-                 total_rounds: int, eval_every: Optional[int] = None):
-        """``eval_every`` of None means no eval_fn: no eval cut points."""
+                 total_rounds: int, eval_every: Optional[int] = None,
+                 start_round: int = 1):
+        """``eval_every`` of None means no eval_fn: no eval cut points.
+        ``start_round`` > 1 resumes a checkpointed run mid-schedule: rounds
+        [start_round, total_rounds] are planned with their *absolute*
+        indices, so round-indexed K/eta schedules and eval cut points are
+        identical to the uninterrupted run's."""
         self.ctrl = ctrl
         self.fed = fed
         self.total_rounds = total_rounds
+        self.start_round = max(int(start_round), 1)
         self.eval_every = eval_every
         self.loss_free = is_loss_free(fed)
         cap = max(fed.bucket_rounds if self.loss_free
@@ -84,7 +90,7 @@ class RoundScheduler:
         segs: List[List[int]] = []
         cur: List[int] = []
         k_prev = None
-        for r in range(1, self.total_rounds + 1):
+        for r in range(self.start_round, self.total_rounds + 1):
             k = self.ctrl.k_for_round(r)
             if cur and k != k_prev:
                 segs.append(cur)
@@ -131,7 +137,7 @@ class RoundScheduler:
                              eval_after=self._is_eval_round(rounds[-1]))
 
     def _plan_feedback(self) -> Iterator[Bucket]:
-        r = 1
+        r = self.start_round
         while r <= self.total_rounds:
             k = self.ctrl.k_for_round(r)
             rounds, etas = [r], [self.ctrl.eta_for_round(r)]

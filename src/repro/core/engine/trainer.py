@@ -47,6 +47,7 @@ class History:
     eta: List[float] = field(default_factory=list)
     wall_clock_s: List[float] = field(default_factory=list)   # cumulative, Eq. 5
     sgd_steps: List[int] = field(default_factory=list)        # cumulative
+    uplink_mbit: List[float] = field(default_factory=list)    # cumulative wire
     train_loss: List[float] = field(default_factory=list)     # Eq. 15 round mean
     min_train_loss: List[float] = field(default_factory=list) # Fig. 1 metric
     val_rounds: List[int] = field(default_factory=list)
@@ -87,14 +88,31 @@ class FedAvgTrainer:
                                   trim_fraction=fed.trim_fraction,
                                   server=fed.server_optimizer,
                                   server_lr=fed.server_lr,
-                                  backend=backend)
+                                  backend=backend,
+                                  transport=getattr(fed, "transport", "none"),
+                                  topk_frac=getattr(fed, "topk_frac", 0.1))
         self.server_state = self.engine.init_server_state(init_params)
+        self.engine.init_transport_state(init_params)
+        if self.engine.transport is not None:
+            # charge the wire what the codec ships — on a trainer-owned
+            # copy (an injected RuntimeModel may be shared across trainers
+            # with different transports); clone the straggler rng so the
+            # copy owns its draw stream too
+            import copy as _copy
+            rt = _copy.copy(runtime)
+            rt._rng = np.random.default_rng()
+            rt._rng.bit_generator.state = runtime._rng.bit_generator.state
+            rt.uplink_compression = \
+                self.engine.transport.compression_ratio(init_params)
+            self.runtime = rt
         self.history = History()
         self._np_rng = np.random.default_rng(fed.seed)
         self._wall = 0.0
         self._steps = 0
+        self._up_mbit = 0.0
         self._min_loss = float("inf")
         self._max_acc = 0.0
+        self._completed_rounds = 0
 
     # ------------------------------------------------------------------
     @property
@@ -102,11 +120,19 @@ class FedAvgTrainer:
         return self.engine.compile_count
 
     def run(self, rounds: Optional[int] = None, eval_every: int = 10,
-            verbose: bool = False) -> History:
+            verbose: bool = False, resume: bool = False) -> History:
+        """``resume=True`` continues a restored run (``restore_state``) from
+        the first unexecuted round; the default replays the full schedule
+        (repeated ``run()`` calls keep their historical warm-rerun
+        semantics)."""
         rounds = rounds if rounds is not None else self.fed.rounds
+        start = self._completed_rounds + 1 if resume else 1
+        if start > rounds:
+            return self.history
         sched = RoundScheduler(
             self.ctrl, self.fed, total_rounds=rounds,
-            eval_every=eval_every if self.eval_fn is not None else None)
+            eval_every=eval_every if self.eval_fn is not None else None,
+            start_round=start)
         # the builder consumes the trainer's persistent rng so repeated
         # run() calls continue one sample stream (seed-loop semantics)
         # buckets are device_put with the backend's client sharding as soon
@@ -124,6 +150,7 @@ class FedAvgTrainer:
                 self._run_feedback(sched, builder, rounds, verbose)
         finally:
             builder.close()
+        self._completed_rounds = rounds
         return self.history
 
     # ------------------------------------------------------------------
@@ -183,14 +210,78 @@ class FedAvgTrainer:
             cost = self.runtime.round_cost(bucket.k)
             self._wall += cost.wall_clock_s
             self._steps += cost.sgd_steps
+            self._up_mbit += cost.uplink_mbit
             self._min_loss = min(self._min_loss, round_loss)
             h.rounds.append(r)
             h.k.append(bucket.k)
             h.eta.append(bucket.etas[i])
             h.wall_clock_s.append(self._wall)
             h.sgd_steps.append(self._steps)
+            h.uplink_mbit.append(self._up_mbit)
             h.train_loss.append(round_loss)
             h.min_train_loss.append(self._min_loss)
+
+    # ------------------------------------------------------------------
+    # full-state checkpointing (DESIGN.md §8: transport/EF state included)
+    # ------------------------------------------------------------------
+    def save_state(self, path: str) -> None:
+        """Checkpoint everything a bitwise-identical continuation needs:
+        params, server-optimizer state, transport error-feedback state, the
+        numpy rng stream, controller feedback state, history and the
+        simulated-cost counters. Restore with ``restore_state`` and continue
+        via ``run(rounds, resume=True)``."""
+        from repro.checkpoint import save_checkpoint
+        tree = {"params": self.params, "server": self.server_state,
+                "transport": self.engine.transport_state}
+        ctrl = self.ctrl
+        meta = {
+            "completed_rounds": self._completed_rounds,
+            "history": self.history.as_dict(),
+            "rng": self._np_rng.bit_generator.state,
+            # straggler-model draw stream (heterogeneity > 0 consumes it
+            # every round_cost call)
+            "runtime_rng": self.runtime._rng.bit_generator.state,
+            "wall": self._wall, "steps": self._steps,
+            "up_mbit": self._up_mbit,
+            "min_loss": self._min_loss, "max_acc": self._max_acc,
+            "ctrl": {"f0": ctrl._f0, "window": list(ctrl.tracker._buf),
+                     "plateau": [ctrl.plateau.best, ctrl.plateau.stale,
+                                 ctrl.plateau.plateaued]},
+        }
+        save_checkpoint(path, tree, meta=meta)
+
+    def restore_state(self, path: str) -> None:
+        """Inverse of ``save_state`` on a trainer built with the same
+        configuration (templates for every state tree come from the live
+        trainer)."""
+        from repro.checkpoint import load_checkpoint
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
+            {"params": self.params, "server": self.server_state,
+             "transport": self.engine.transport_state})
+        tree, meta = load_checkpoint(path, like)
+        self.params = tree["params"]
+        self.server_state = tree["server"]
+        self.engine.transport_state = tree["transport"]
+        self._completed_rounds = int(meta["completed_rounds"])
+        self.history = History.from_dict(meta["history"])
+        self._np_rng.bit_generator.state = meta["rng"]
+        if "runtime_rng" in meta:
+            self.runtime._rng.bit_generator.state = meta["runtime_rng"]
+        self._wall = float(meta["wall"])
+        self._steps = int(meta["steps"])
+        self._up_mbit = float(meta.get("up_mbit", 0.0))
+        self._min_loss = float(meta["min_loss"])
+        self._max_acc = float(meta["max_acc"])
+        c = meta["ctrl"]
+        self.ctrl.tracker._buf.clear()
+        for v in c["window"]:
+            self.ctrl.tracker.push(v)
+        self.ctrl._f0 = c["f0"]
+        best, stale, plateaued = c["plateau"]
+        self.ctrl.plateau.best = best
+        self.ctrl.plateau.stale = int(stale)
+        self.ctrl.plateau.plateaued = bool(plateaued)
 
     def _eval(self, r: int, verbose: bool) -> None:
         metrics = self.eval_fn(self.params)

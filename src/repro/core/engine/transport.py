@@ -1,0 +1,325 @@
+"""Transport — the compressed client-delta wire protocol (DESIGN.md §8).
+
+Sits between ClientUpdate and Aggregator in every execution backend: clients
+emit *encoded deltas* and aggregation consumes the payloads directly through
+fused decompress-reduce kernels (``kernels.delta_codec``), so compressed
+payloads are never materialised at full precision per client.
+
+Codecs:
+
+  * ``none``   — identity. ``get_transport("none")`` returns None and the
+    engine keeps its historical param-space aggregation path verbatim, so
+    the compiled program (and results) are bit-identical to the
+    pre-transport engine. ``IdentityTransport`` is the same contract spelled
+    through the protocol (used by tests).
+  * ``int8``   — per-leaf int8 quantisation of the flattened delta, reusing
+    the Q-KV quantiser (``models.attention.quantize_kv``: per-vector max/127
+    scale). One int8 plane rides the wire (~4x uplink reduction, asymptotic
+    in leaf size); the quantisation *residual is folded into the server-side
+    error-feedback state* instead of being transmitted — the second Q-KV
+    level for free, amortised across rounds.
+  * ``int8x2`` — both Q-KV levels on the wire (primary + int8 residual,
+    ``quantize_kv_residual`` verbatim): ~2x reduction, per-round error small
+    enough (~1e-4 relative) that no feedback state is needed.
+  * ``topk``   — magnitude top-k of the flattened delta (value + int32
+    index, ``0.5/frac``x reduction) with server-side error feedback.
+
+Error feedback (Karimireddy et al. '19, adapted to sampled stateless
+clients): the paper's clients carry no state between rounds and cohorts
+resample every round, so per-client residual memory is impossible — the
+residual lives server-side at the *aggregate* level. The server broadcasts
+it with the model (downlink already carries |x|); each client encodes
+``delta_c + residual``; the new residual is the weighted compression error
+``sum_c w_c (delta_c + residual) - hat``. The exact weighted-true-delta term
+is directly computable in this single-process simulation; a physical
+deployment would estimate it from the decoded payloads plus a residual
+correction uplink — recorded in DESIGN.md §8. The residual is part of the
+engine's checkpointable state (threads through the bucket scan carry and
+``FedAvgTrainer.save_state``).
+
+Compressed codecs require a *linear* aggregator (mean/kernel): the weighted
+sum distributes over decode. Robust aggregators (median/trimmed_mean) need
+the full client distribution and are rejected at engine construction.
+"""
+from __future__ import annotations
+
+import copy
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# literal reuse of the Q-KV quantisation scheme (two-level int8 + per-vector
+# f32 scales — models/attention.py §Perf Q-KV); pure jnp, no layer deps
+from repro.core.engine.backends.base import axes_size as _axes_size
+from repro.models.attention import quantize_kv, quantize_kv_residual
+
+PyTree = Any
+
+TRANSPORTS = ("none", "int8", "int8x2", "topk")
+
+
+
+def _weighted_true_sum(deltas, weights):
+    """sum_c w_c delta_c in f32 — the EF truth term (an einsum per leaf; the
+    (N, ...) stack already exists, nothing new is materialised)."""
+    w32 = weights.astype(jnp.float32)
+    return [jnp.einsum("c,c...->...", w32, d) for d in deltas]
+
+
+class Transport:
+    """Protocol. ``signature()`` keys the engine's compile cache; ``encode``
+    runs per client (vmapped on parallel backends, inside the client scan on
+    sequential ones); ``reduce`` consumes the stacked payloads fused."""
+
+    name: str = "base"
+    error_feedback: bool = False
+
+    # -- identity / compile-cache -------------------------------------
+    def signature(self) -> Tuple:
+        """Hashable codec signature, mixed into the AOT registry key."""
+        return (self.name, self.error_feedback)
+
+    # -- mesh binding ---------------------------------------------------
+    def with_mesh(self, mesh, client_axes: Optional[Sequence[str]]):
+        """Backend hook: a copy bound to the mesh so ``reduce`` can route
+        through the client-sharded decompress-reduce kernel."""
+        t = copy.copy(self)
+        t._mesh = mesh
+        t._client_axes = tuple(client_axes) if client_axes else None
+        return t
+
+    def _mesh_axes(self):
+        return getattr(self, "_mesh", None), getattr(self, "_client_axes", None)
+
+    # -- state ----------------------------------------------------------
+    def init_state(self, params: PyTree):
+        if not self.error_feedback:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    # -- codec (per-leaf-list payloads, leaves in tree.flatten order) ----
+    def encode(self, delta: PyTree):
+        raise NotImplementedError
+
+    def decode(self, payload, like: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    def reduce(self, payloads, weights: jnp.ndarray, like: PyTree) -> PyTree:
+        """Stacked payloads (leading client axis) -> weighted-sum delta
+        pytree, via the fused decompress-reduce kernels."""
+        raise NotImplementedError
+
+    # -- wire accounting -------------------------------------------------
+    def encoded_bits(self, params: PyTree) -> int:
+        """Uplink bits one client pays per round for this codec."""
+        raise NotImplementedError
+
+    def compression_ratio(self, params: PyTree,
+                          bits_per_param: int = 32) -> float:
+        full = bits_per_param * sum(int(l.size)
+                                    for l in jax.tree.leaves(params))
+        return full / float(self.encoded_bits(params))
+
+    def nominal_ratio(self, bits_per_param: int = 32) -> float:
+        """Asymptotic ratio (scale/metadata overhead -> 0 at model scale);
+        used by analytic benches that have no concrete param tree."""
+        raise NotImplementedError
+
+    # -- the round-core entry point --------------------------------------
+    def aggregate(self, aggregator, params: PyTree, client_stack: PyTree,
+                  weights: jnp.ndarray, state):
+        """(params, client-stacked params (N, ...), weights (N,), state) ->
+        (aggregate pytree, new state). Compressed codecs ignore the
+        aggregator (validated linear upstream) and work in delta space."""
+        del aggregator
+        p32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        deltas = jax.tree.map(lambda cp, p: cp.astype(jnp.float32) - p[None],
+                              client_stack, p32)
+        if self.error_feedback:
+            deltas = jax.tree.map(lambda d, r: d + r[None], deltas, state)
+        payloads = jax.vmap(self.encode)(deltas)
+        hat = self.reduce(payloads, weights, like=params)
+        if self.error_feedback:
+            true = _weighted_true_sum(jax.tree.leaves(deltas), weights)
+            new_state = jax.tree.unflatten(
+                jax.tree.structure(params),
+                [t - h for t, h in zip(true, jax.tree.leaves(hat))])
+        else:
+            new_state = state
+        aggregate = jax.tree.map(
+            lambda p, h: (p.astype(jnp.float32) + h).astype(p.dtype),
+            params, hat)
+        return aggregate, new_state
+
+
+class IdentityTransport(Transport):
+    """The degenerate codec: payloads ARE the client params; aggregation
+    delegates to the configured Aggregator verbatim (robust ones included),
+    so the round math is exactly the transport-less engine's."""
+
+    name = "none"
+
+    def encode(self, delta):
+        return jax.tree.leaves(delta)
+
+    def decode(self, payload, like):
+        return jax.tree.unflatten(jax.tree.structure(like), list(payload))
+
+    def encoded_bits(self, params):
+        return 32 * sum(int(l.size) for l in jax.tree.leaves(params))
+
+    def nominal_ratio(self, bits_per_param: int = 32) -> float:
+        return 1.0
+
+    def aggregate(self, aggregator, params, client_stack, weights, state):
+        return aggregator(client_stack, weights), state
+
+
+class Int8Transport(Transport):
+    """Q-KV int8 codec on the flattened per-leaf delta.
+
+    ``levels=1`` (the ``int8`` transport): one int8 plane + one f32 scale
+    per leaf on the wire; the quantisation residual is recovered through the
+    server-side error-feedback state across rounds. ``levels=2``
+    (``int8x2``): ``quantize_kv_residual`` verbatim — primary + residual
+    int8 planes with their scales, no feedback state needed.
+    """
+
+    name = "int8"
+
+    def __init__(self, levels: int = 1, error_feedback: bool = True):
+        if levels not in (1, 2):
+            raise ValueError(f"int8 transport levels must be 1 or 2: {levels}")
+        self.levels = levels
+        self.error_feedback = error_feedback
+        if levels == 2:
+            self.name = "int8x2"
+
+    def signature(self):
+        return (self.name, self.levels, self.error_feedback)
+
+    def encode(self, delta):
+        out = []
+        for leaf in jax.tree.leaves(delta):
+            flat = leaf.astype(jnp.float32).reshape(-1)
+            if self.levels == 1:
+                q, s = quantize_kv(flat)
+                out.append({"q": q, "s": s})
+            else:
+                q, s, qr, rs = quantize_kv_residual(flat)
+                out.append({"q": q, "s": s, "qr": qr, "rs": rs})
+        return out
+
+    def decode(self, payload, like):
+        leaves, treedef = jax.tree.flatten(like)
+        dec = []
+        for pl, leaf in zip(payload, leaves):
+            x = pl["q"].astype(jnp.float32) * pl["s"]
+            if self.levels == 2:
+                x = x + pl["qr"].astype(jnp.float32) * pl["rs"]
+            dec.append(x.reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, dec)
+
+    def reduce(self, payloads, weights, like):
+        from repro.kernels import ops as kops
+        mesh, axes = self._mesh_axes()
+        n = weights.shape[0]
+        sharded = (mesh is not None and axes
+                   and n % _axes_size(mesh, axes) == 0)
+        leaves, treedef = jax.tree.flatten(like)
+        out = []
+        for pl, leaf in zip(payloads, leaves):
+            w1 = weights.astype(jnp.float32) * pl["s"][:, 0]
+            wr = (weights.astype(jnp.float32) * pl["rs"][:, 0]
+                  if self.levels == 2 else None)
+            qr = pl["qr"] if self.levels == 2 else None
+            if sharded:
+                flat = kops.int8_delta_reduce_sharded(
+                    pl["q"], w1, qr, wr, mesh=mesh, client_axes=axes)
+            else:
+                flat = kops.int8_delta_reduce(pl["q"], w1, qr, wr)
+            out.append(flat.reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, out)
+
+    def encoded_bits(self, params):
+        bits = 0
+        for leaf in jax.tree.leaves(params):
+            bits += self.levels * (8 * int(leaf.size) + 32)   # planes + scales
+        return bits
+
+    def nominal_ratio(self, bits_per_param: int = 32) -> float:
+        return bits_per_param / (8.0 * self.levels)
+
+
+class TopKTransport(Transport):
+    """Magnitude top-k of the flattened per-leaf delta (f32 value + int32
+    index per kept coordinate) with server-side error feedback — the
+    residual carries everything the sparsifier dropped into later rounds."""
+
+    name = "topk"
+
+    def __init__(self, frac: float = 0.1, error_feedback: bool = True):
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"topk frac must be in (0, 1]: {frac}")
+        self.frac = float(frac)
+        self.error_feedback = error_feedback
+
+    def signature(self):
+        return (self.name, self.frac, self.error_feedback)
+
+    def _k(self, size: int) -> int:
+        return max(1, int(math.ceil(self.frac * size)))
+
+    def encode(self, delta):
+        out = []
+        for leaf in jax.tree.leaves(delta):
+            flat = leaf.astype(jnp.float32).reshape(-1)
+            _, idx = jax.lax.top_k(jnp.abs(flat), self._k(flat.shape[0]))
+            out.append({"v": jnp.take(flat, idx), "i": idx.astype(jnp.int32)})
+        return out
+
+    def decode(self, payload, like):
+        leaves, treedef = jax.tree.flatten(like)
+        dec = []
+        for pl, leaf in zip(payload, leaves):
+            flat = jnp.zeros((int(leaf.size),), jnp.float32)
+            dec.append(flat.at[pl["i"]].set(pl["v"]).reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, dec)
+
+    def reduce(self, payloads, weights, like):
+        from repro.kernels import ops as kops
+        leaves, treedef = jax.tree.flatten(like)
+        out = []
+        for pl, leaf in zip(payloads, leaves):
+            flat = kops.topk_delta_reduce(pl["v"], pl["i"], weights,
+                                          int(leaf.size))
+            out.append(flat.reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, out)
+
+    def encoded_bits(self, params):
+        bits = 0
+        for leaf in jax.tree.leaves(params):
+            bits += 64 * self._k(int(leaf.size))         # f32 value + i32 idx
+        return bits
+
+    def nominal_ratio(self, bits_per_param: int = 32) -> float:
+        return bits_per_param / (64.0 * self.frac)
+
+
+def get_transport(name, *, topk_frac: float = 0.1) -> Optional[Transport]:
+    """Resolve a codec. ``None``/``"none"`` -> None: the engine keeps its
+    historical (bit-identical) param-space path. A ``Transport`` instance
+    passes through."""
+    if name is None or name == "none":
+        return None
+    if isinstance(name, Transport):
+        return name
+    if name == "int8":
+        return Int8Transport(levels=1, error_feedback=True)
+    if name == "int8x2":
+        return Int8Transport(levels=2, error_feedback=False)
+    if name == "topk":
+        return TopKTransport(frac=topk_frac, error_feedback=True)
+    raise ValueError(f"transport {name!r} not in {TRANSPORTS}")

@@ -32,34 +32,49 @@ class RoundCost:
 class RuntimeModel:
     def __init__(self, model_size_mbit: float, cfg: RuntimeModelConfig,
                  clients_per_round: int = 1, heterogeneity: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, uplink_compression: float = 1.0):
         """heterogeneity: sigma of lognormal multipliers on beta/U/D per
-        sampled client; 0 reproduces the paper's homogeneous Eq. 5."""
+        sampled client; 0 reproduces the paper's homogeneous Eq. 5.
+
+        ``uplink_compression``: ratio by which the transport codec shrinks
+        the client's uploaded delta (DESIGN.md §8); 1.0 is the paper's
+        uncompressed |x| uplink. ``FedAvgTrainer`` sets it from the
+        configured transport, so modelled wall-clock and bytes-on-wire both
+        charge the wire what the codec actually ships. Downlink stays |x|
+        (the server broadcast is uncompressed)."""
         self.size = model_size_mbit
         self.cfg = cfg
         self.n = clients_per_round
         self.het = heterogeneity
+        self.uplink_compression = float(uplink_compression)
         self._rng = np.random.default_rng(seed)
 
+    @property
+    def uplink_mbit_per_client(self) -> float:
+        """Encoded uplink size (Eq. 3's |x|/U numerator under compression)."""
+        return self.size / self.uplink_compression
+
     def comm_time(self) -> float:
-        return self.size / self.cfg.download_mbps + self.size / self.cfg.upload_mbps
+        return (self.size / self.cfg.download_mbps
+                + self.uplink_mbit_per_client / self.cfg.upload_mbps)
 
     def round_cost(self, k: int) -> RoundCost:
         """Eq. 3/4: straggler max over the round's client draws."""
+        up = self.uplink_mbit_per_client
         base = (self.size / self.cfg.download_mbps
                 + k * self.cfg.beta_seconds
-                + self.size / self.cfg.upload_mbps)
+                + up / self.cfg.upload_mbps)
         if self.het > 0:
             mult = self._rng.lognormal(0.0, self.het, size=self.n)
             per_client = (self.size / self.cfg.download_mbps
                           + k * self.cfg.beta_seconds * mult
-                          + self.size / self.cfg.upload_mbps)
+                          + up / self.cfg.upload_mbps)
             wall = float(np.max(per_client))
         else:
             wall = base
         return RoundCost(wall_clock_s=wall,
                          sgd_steps=k * self.n,
-                         uplink_mbit=self.size * self.n,
+                         uplink_mbit=up * self.n,
                          downlink_mbit=self.size * self.n)
 
     def total_time(self, ks: Sequence[int]) -> float:

@@ -1,0 +1,127 @@
+"""Pallas TPU kernels: fused decompress-reduce for compressed client deltas.
+
+The transport layer (DESIGN.md §8) ships client deltas as quantized
+payloads; the server aggregation is then  hat = sum_c w_c * dec(payload_c).
+Decoding each client to f32 before reducing would materialise the full
+(N, M) f32 stack again — exactly the buffer compression was meant to kill.
+These kernels fuse dequantisation into the weighted block-reduce of
+``fedavg_reduce``: the int8 payload is the only HBM-resident client stack,
+the f32 decode happens per (N x BM) VMEM block, and one (M,) f32 output is
+written.
+
+Per-leaf int8 payloads carry a scalar scale per level, so the per-client
+dequantise-and-weight factor folds into the weight column:
+    sum_c w_c * (q_c * s_c [+ qr_c * rs_c]) = sum_c (w_c s_c) q_c [+ ...]
+— i.e. the single-level reduce IS ``fedavg_reduce``'s block-reduce on int8
+input with effective weights, and the two-level reduce is one fused kernel
+over both int8 planes (one pass, one output write).
+
+``int8_decompress_reduce_sharded`` extends ``fedavg_reduce_sharded``'s mesh
+contract: the int8 client stack arrives sharded over the mesh client axes,
+each shard decompress-reduces its local clients into an f32 (M,) partial,
+and a single ``psum`` sums the partials — the collective moves one f32
+model-size buffer per shard while the wire/HBM payload stays int8.
+
+Top-k payloads reduce by scatter-add (``topk_scatter_reduce``): one flat
+(N*S,) scatter into an f32 (M,) zero buffer — never an (N, M) dense stack.
+A Pallas TPU scatter needs a one-hot MXU matmul formulation; recorded as a
+future optimisation (DESIGN.md §8), the XLA scatter is used on all backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.fedavg_reduce import DEFAULT_BLOCK, _block_reduce
+
+
+def _kernel2(w_ref, wr_ref, q_ref, qr_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)            # (N, BM) primary plane
+    qr = qr_ref[...].astype(jnp.float32)          # (N, BM) residual plane
+    o_ref[...] = (jnp.sum(q * w_ref[...], axis=0, keepdims=True)
+                  + jnp.sum(qr * wr_ref[...], axis=0, keepdims=True))
+
+
+def _block_reduce2(q, qr, w, wr, block, interpret):
+    """Two-plane (N, M) int8 x (N,) f32 -> (M,) f32, one fused pass."""
+    n, m = q.shape
+    pad = (-m) % block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        qr = jnp.pad(qr, ((0, 0), (0, pad)))
+    mp = m + pad
+    out = pl.pallas_call(
+        _kernel2,
+        grid=(mp // block,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),      # w * scale column
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),      # w * rscale column
+            pl.BlockSpec((n, block), lambda i: (0, i)),  # primary int8 block
+            pl.BlockSpec((n, block), lambda i: (0, i)),  # residual int8 block
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, mp), jnp.float32),
+        interpret=interpret,
+    )(w[:, None].astype(jnp.float32), wr[:, None].astype(jnp.float32), q, qr)
+    return out[0, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def int8_decompress_reduce(q, w_eff, qr=None, wr_eff=None, *,
+                           block: int = DEFAULT_BLOCK,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q (N, M) int8; w_eff (N,) = weights * per-client scales -> (M,) f32.
+
+    With the optional residual plane ``qr``/``wr_eff`` the two dequantise-
+    weight-reduce passes fuse into one kernel invocation per block.
+    """
+    if qr is None:
+        return _block_reduce(q, w_eff.astype(jnp.float32), block, interpret,
+                             out_dtype=jnp.float32)
+    return _block_reduce2(q, qr, w_eff, wr_eff, block, interpret)
+
+
+def int8_decompress_reduce_sharded(q, w_eff, qr=None, wr_eff=None, *, mesh,
+                                   client_axes, block: int = DEFAULT_BLOCK,
+                                   interpret: bool = False) -> jnp.ndarray:
+    """Mesh variant (extends ``fedavg_reduce_sharded``): the int8 stack is
+    sharded over ``client_axes``; per-shard fused decompress-reduce + one
+    all-reduce of the f32 (M,) partials. N must divide the axes' size."""
+    axes = tuple(client_axes)
+
+    if qr is None:
+        def local(x, w):
+            partial = _block_reduce(x, w.astype(jnp.float32), block,
+                                    interpret, out_dtype=jnp.float32)
+            return jax.lax.psum(partial, axes)
+
+        # check_rep=False: no replication rule for pallas_call; the psum
+        # makes the P() out_spec replication explicit (as fedavg_reduce)
+        return shard_map(local, mesh=mesh,
+                         in_specs=(P(axes, None), P(axes)),
+                         out_specs=P(), check_rep=False)(q, w_eff)
+
+    def local(x, xr, w, wr):
+        partial = _block_reduce2(x, xr, w, wr, block, interpret)
+        return jax.lax.psum(partial, axes)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes, None), P(axes, None), P(axes), P(axes)),
+                     out_specs=P(), check_rep=False)(q, qr, w_eff, wr_eff)
+
+
+def topk_scatter_reduce(vals, idx, weights, size: int) -> jnp.ndarray:
+    """vals/idx (N, S), weights (N,) -> (M,) f32 scatter-add reduction.
+
+    One flat (N*S,) scatter into a zeroed (M,) buffer — the decoded dense
+    per-client deltas are never materialised. XLA scatter on every backend;
+    a Mosaic one-hot-matmul formulation is a recorded future optimisation.
+    """
+    contrib = vals.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
+    out = jnp.zeros((size,), jnp.float32)
+    return out.at[idx.reshape(-1)].add(contrib.reshape(-1))

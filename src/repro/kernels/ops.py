@@ -16,6 +16,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import delta_codec as _dc
 from repro.kernels import fedavg_reduce as _fr
 from repro.kernels import flash_attention as _fa
 from repro.kernels import moe_gmm as _gmm
@@ -69,6 +70,34 @@ def fedavg_reduce_tree_sharded(client_params: PyTree, weights: jnp.ndarray,
                                      ).reshape(leaf.shape[1:])
 
     return jax.tree.map(one, client_params)
+
+
+# ---------------------------------------------------------------------------
+# compressed-delta transport (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def int8_delta_reduce(q, w_eff, qr=None, wr_eff=None) -> jnp.ndarray:
+    """Fused dequantise + weighted reduce of an int8 client-delta stack:
+    q (N, M) int8, w_eff (N,) = weights * per-client scales -> (M,) f32.
+    Optional residual plane (two-level codec) fuses into the same pass."""
+    return _dc.int8_decompress_reduce(q, w_eff, qr, wr_eff,
+                                      interpret=INTERPRET)
+
+
+def int8_delta_reduce_sharded(q, w_eff, qr=None, wr_eff=None, *, mesh,
+                              client_axes) -> jnp.ndarray:
+    """Mesh variant: int8 stack sharded over the client axes, per-shard
+    fused decompress-reduce + all-reduce of f32 partials (the
+    ``fedavg_reduce_sharded`` contract on compressed payloads)."""
+    return _dc.int8_decompress_reduce_sharded(q, w_eff, qr, wr_eff,
+                                              mesh=mesh,
+                                              client_axes=client_axes,
+                                              interpret=INTERPRET)
+
+
+def topk_delta_reduce(vals, idx, weights, size: int) -> jnp.ndarray:
+    """Weighted scatter-add reduction of top-k payloads -> (M,) f32."""
+    return _dc.topk_scatter_reduce(vals, idx, weights, size)
 
 
 # ---------------------------------------------------------------------------

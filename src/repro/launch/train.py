@@ -63,6 +63,15 @@ def main():
                     choices=("avg", "fedadam", "fedavgm", "fedyogi"))
     ap.add_argument("--aggregator", default="mean",
                     choices=("mean", "kernel", "median", "trimmed_mean"))
+    ap.add_argument("--transport", default="none",
+                    choices=("none", "int8", "int8x2", "topk"),
+                    help="client-delta wire codec (DESIGN.md §8): int8 = "
+                         "Q-KV int8 + server-side error feedback (~4x "
+                         "uplink); int8x2 = two-level int8 on the wire "
+                         "(~2x, no feedback state); topk = magnitude "
+                         "top-k + error feedback")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="kept coordinate fraction for --transport topk")
     ap.add_argument("--backend", default="local", choices=("local", "mesh"),
                     help="execution backend: single-device or GSPMD mesh")
     ap.add_argument("--strategy", default="parallel",
@@ -102,6 +111,7 @@ def main():
                     k_quantize=args.k_quantize,
                     server_optimizer=args.server_optimizer,
                     aggregator=args.aggregator,
+                    transport=args.transport, topk_frac=args.topk_frac,
                     bucket_rounds=args.bucket_rounds,
                     feedback_bucket_rounds=args.feedback_bucket,
                     prefetch=not args.no_prefetch, seed=args.seed)
@@ -110,6 +120,11 @@ def main():
     params = registry.init(jax.random.PRNGKey(args.seed), cfg)
     backend = make_backend(args.backend, args.strategy, args.groups)
     trainer = FedAvgTrainer(loss_fn, params, data, fed, rt, backend=backend)
+    if trainer.engine.transport is not None:
+        print(f"[train] transport={args.transport}: uplink "
+              f"{rt.uplink_compression:.2f}x compressed "
+              f"({rt.uplink_mbit_per_client:.2f} of {rt.size:.2f} mbit "
+              f"per client-round)")
     h = trainer.run(args.rounds, verbose=False)
     print(f"[train] engine[{args.backend}]: {trainer.compile_count} bucket "
           f"executable(s) compiled, {trainer.engine.dispatch_count} "
@@ -121,7 +136,8 @@ def main():
               f"simW={h.wall_clock_s[i]:.0f}s steps={h.sgd_steps[i]}")
     print(f"[train] final loss {h.train_loss[-1]:.4f} "
           f"(start {h.train_loss[0]:.4f}); total steps {h.sgd_steps[-1]}, "
-          f"simulated wall-clock {h.wall_clock_s[-1]:.0f}s")
+          f"simulated wall-clock {h.wall_clock_s[-1]:.0f}s, "
+          f"uplink {h.uplink_mbit[-1]:.0f} mbit")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, trainer.params,
                         meta={"arch": cfg.name, "rounds": args.rounds,

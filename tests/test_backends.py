@@ -145,6 +145,50 @@ def test_mesh_kernel_avg_trains_and_matches_mean(femnist_setup, host_mesh):
 
 
 # ---------------------------------------------------------------------------
+# pinned output shardings: no per-bucket canonicalising device_put
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,groups", [("parallel", 1),
+                                             ("sequential", 2)])
+def test_bucket_outputs_pinned_to_param_sharding(femnist_setup, host_mesh,
+                                                 strategy, groups):
+    """The bucket executable's params output carries the backend's param
+    sharding (constrain_update), so the next bucket's place_params is the
+    no-op fast path — not a resharding transfer (PR-2 ROADMAP item)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    task, data, loss_fn, params = femnist_setup
+    # raw PartitionSpecs on one strategy, pre-built NamedShardings on the
+    # other — constrain_update must accept both param_specs flavours
+    if strategy == "parallel":
+        specs = jax.tree.map(lambda _: P(), params)
+    else:
+        specs = jax.tree.map(lambda _: NamedSharding(host_mesh, P()), params)
+    backend = MeshBackend(host_mesh, strategy=strategy, groups=groups,
+                          param_specs=specs)
+    engine = RoundEngine(loss_fn, backend=backend)
+    state = engine.init_server_state(params)
+    rng = np.random.default_rng(0)
+    out = backend.place_params(params)
+    for _ in range(2):
+        bb = pipeline.bucket_batches(rng, data, n_rounds=2, k=3,
+                                     clients_per_round=6, batch_size=8)
+        etas = np.full(2, 0.3, np.float32)
+        out, _, _, state = engine.run_bucket(out, bb.batches, bb.weights,
+                                             etas, bb.active, state)
+    leaves = jax.tree.leaves(out)
+    spec_leaves = [P()] * len(leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        target = NamedSharding(host_mesh, spec)
+        assert leaf.sharding.is_equivalent_to(target, leaf.ndim)
+    # place_params on already-pinned outputs returns the same buffers —
+    # the per-bucket device_put is gone
+    placed = backend.place_params(out)
+    for a, b in zip(jax.tree.leaves(placed), leaves):
+        assert a is b
+
+
+# ---------------------------------------------------------------------------
 # strategies shim delegates to the backend round core
 # ---------------------------------------------------------------------------
 

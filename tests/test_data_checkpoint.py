@@ -135,6 +135,95 @@ def test_history_checkpoint_roundtrip(tmp_path):
     assert partial.rounds == [1] and partial.k == []
 
 
+@pytest.mark.parametrize("transport", ["none", "int8", "topk"])
+def test_trainer_mid_schedule_checkpoint_bitwise_continuation(tmp_path,
+                                                              transport):
+    """save_state mid-schedule + restore_state + run(resume=True) is
+    bitwise identical to the uninterrupted run — params, history (losses,
+    wall-clock, bytes-on-wire) AND the transport's error-feedback residual
+    all survive the round-trip (DESIGN.md §8 state-ownership contract)."""
+    from repro.configs import get_paper_task
+    from repro.configs.base import FedConfig
+    from repro.core import FedAvgTrainer, RuntimeModel
+    from repro.models import small
+
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=16, samples_per_client=30)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+
+    def mk():
+        # rounds K-decay: the resumed scheduler must re-plan buckets with
+        # absolute round indices for K_r to line up
+        fed = FedConfig(total_clients=16, clients_per_round=6, rounds=10,
+                        k0=6, eta0=0.3, batch_size=8, k_schedule="rounds",
+                        k_quantize=True, seed=0, transport=transport,
+                        topk_frac=0.2)
+        rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+        return FedAvgTrainer(loss_fn, params, data, fed, rt)
+
+    straight = mk()
+    straight.run(10)
+
+    first = mk()
+    first.run(6)
+    path = os.path.join(tmp_path, "mid")
+    first.save_state(path)
+
+    resumed = mk()
+    resumed.restore_state(path)
+    resumed.run(10, resume=True)
+
+    for a, b in zip(jax.tree.leaves(straight.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert straight.history.as_dict() == resumed.history.as_dict()
+    for a, b in zip(jax.tree.leaves(straight.engine.transport_state),
+                    jax.tree.leaves(resumed.engine.transport_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resume past the end is a no-op
+    before = [np.asarray(l).copy() for l in jax.tree.leaves(resumed.params)]
+    resumed.run(10, resume=True)
+    for a, b in zip(before, jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_checkpoint_preserves_straggler_rng_stream(tmp_path):
+    """With heterogeneity > 0 the runtime model consumes lognormal draws
+    every round — save/restore must continue that stream, or resumed
+    wall-clock history diverges from the uninterrupted run."""
+    from repro.configs import get_paper_task
+    from repro.configs.base import FedConfig
+    from repro.core import FedAvgTrainer, RuntimeModel
+    from repro.models import small
+
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=8, samples_per_client=20)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+
+    def mk():
+        fed = FedConfig(total_clients=8, clients_per_round=4, rounds=8,
+                        k0=3, eta0=0.3, batch_size=8, k_schedule="fixed",
+                        seed=0, transport="int8")
+        rt = RuntimeModel(task.model_size_mb, task.runtime, 4,
+                          heterogeneity=0.5, seed=7)
+        return FedAvgTrainer(loss_fn, params, data, fed, rt)
+
+    straight = mk()
+    straight.run(8)
+    first = mk()
+    first.run(5)
+    path = os.path.join(tmp_path, "het")
+    first.save_state(path)
+    resumed = mk()
+    resumed.restore_state(path)
+    resumed.run(8, resume=True)
+    assert straight.history.wall_clock_s == resumed.history.wall_clock_s
+
+
 def test_checkpoint_shape_mismatch_raises(tmp_path, rng):
     from repro.configs import get_arch
     from repro.models import registry

@@ -1,0 +1,378 @@
+"""Compressed client-delta transport tests (DESIGN.md §8).
+
+Covers: codec roundtrip error bounds, the fused Pallas decompress-reduce
+kernels against the decode-then-einsum reference (plain and client-sharded),
+server-side error-feedback exactness, transport=none bit-identity with the
+historical engine, int8/topk end-to-end parity at matched final loss, both
+execution backends, the codec signature in the compile-cache key, and the
+runtime model's encoded-uplink accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_paper_task
+from repro.configs.base import FedConfig, RuntimeModelConfig
+from repro.core import FedAvgTrainer, RuntimeModel
+from repro.core.engine import (IdentityTransport, Int8Transport, MeshBackend,
+                               RoundEngine, TopKTransport, get_transport)
+from repro.data import make_paper_task, pipeline
+from repro.kernels import ops as kops
+from repro.launch.mesh import make_host_mesh
+from repro.models import small
+
+
+@pytest.fixture(scope="module")
+def femnist_setup():
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=16, samples_per_client=30)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    return task, data, loss_fn, params
+
+
+@pytest.fixture(scope="module")
+def host_mesh():
+    return make_host_mesh()
+
+
+@pytest.fixture()
+def delta_fixture():
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(33, 7)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(500,)).astype(np.float32))}
+    deltas = jax.tree.map(
+        lambda p: jnp.asarray(rng.normal(
+            scale=0.01, size=(8,) + p.shape).astype(np.float32)), params)
+    w = jnp.asarray((rng.random(8) + 0.1).astype(np.float32))
+    return params, deltas, w / w.sum()
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def trees_close(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+def run_trainer(femnist_setup, transport, backend=None, rounds=8, **fed_kw):
+    task, data, loss_fn, params = femnist_setup
+    kw = dict(total_clients=16, clients_per_round=6, rounds=rounds, k0=4,
+              eta0=0.3, batch_size=8, k_schedule="fixed", seed=0)
+    kw.update(fed_kw)
+    fed = FedConfig(transport=transport, **kw)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt, backend=backend)
+    tr.run(rounds)
+    return tr, rt
+
+
+# ---------------------------------------------------------------------------
+# codec roundtrips
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound(delta_fixture):
+    """Single-level per-leaf int8: worst-case error one quantisation step."""
+    params, deltas, _ = delta_fixture
+    t = Int8Transport(levels=1)
+    one = jax.tree.map(lambda d: d[0], deltas)
+    dec = t.decode(t.encode(one), like=params)
+    for x, y in zip(jax.tree.leaves(dec), jax.tree.leaves(one)):
+        step = float(jnp.max(jnp.abs(y))) / 127.0
+        assert float(jnp.max(jnp.abs(x - y))) <= 0.5 * step + 1e-9
+
+
+def test_int8x2_roundtrip_tighter_by_residual_level(delta_fixture):
+    """The second Q-KV level shrinks worst-case error by another ~127x."""
+    params, deltas, _ = delta_fixture
+    one = jax.tree.map(lambda d: d[0], deltas)
+    e1 = Int8Transport(levels=1)
+    e2 = Int8Transport(levels=2)
+    d1 = e1.decode(e1.encode(one), like=params)
+    d2 = e2.decode(e2.encode(one), like=params)
+    for a, b, y in zip(jax.tree.leaves(d1), jax.tree.leaves(d2),
+                       jax.tree.leaves(one)):
+        err1 = float(jnp.max(jnp.abs(a - y)))
+        err2 = float(jnp.max(jnp.abs(b - y)))
+        assert err2 < err1 / 20.0
+
+
+def test_topk_roundtrip_keeps_largest(delta_fixture):
+    params, deltas, _ = delta_fixture
+    t = TopKTransport(frac=0.1)
+    one = jax.tree.map(lambda d: d[0], deltas)
+    dec = t.decode(t.encode(one), like=params)
+    for x, y in zip(jax.tree.leaves(dec), jax.tree.leaves(one)):
+        flat, ref = np.asarray(x).ravel(), np.asarray(y).ravel()
+        k = max(1, int(np.ceil(0.1 * ref.size)))
+        kept = np.flatnonzero(flat)
+        assert len(kept) == k
+        # kept entries are exactly the k largest |ref| entries, verbatim
+        top = np.argsort(-np.abs(ref))[:k]
+        assert set(kept) == set(top)
+        np.testing.assert_array_equal(flat[kept], ref[kept])
+
+
+# ---------------------------------------------------------------------------
+# fused decompress-reduce kernels vs decode-then-einsum reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("levels", [1, 2])
+def test_int8_fused_reduce_matches_reference(delta_fixture, levels):
+    params, deltas, w = delta_fixture
+    t = Int8Transport(levels=levels)
+    payloads = jax.vmap(t.encode)(deltas)
+    fused = t.reduce(payloads, w, like=params)
+    decoded = jax.vmap(lambda pl: t.decode(pl, like=params))(payloads)
+    ref = jax.tree.map(lambda d: jnp.einsum("c,c...->...", w, d), decoded)
+    trees_close(fused, ref, rtol=1e-6, atol=1e-7)
+
+
+def test_int8_fused_reduce_sharded_matches_plain(delta_fixture, host_mesh):
+    params, deltas, w = delta_fixture
+    t = Int8Transport(levels=2)
+    payloads = jax.vmap(t.encode)(deltas)
+    plain = t.reduce(payloads, w, like=params)
+    sharded = t.with_mesh(host_mesh, ("data",)).reduce(payloads, w,
+                                                       like=params)
+    trees_close(sharded, plain, rtol=1e-6, atol=1e-7)
+
+
+def test_topk_scatter_reduce_matches_reference(delta_fixture):
+    params, deltas, w = delta_fixture
+    t = TopKTransport(frac=0.15)
+    payloads = jax.vmap(t.encode)(deltas)
+    fused = t.reduce(payloads, w, like=params)
+    decoded = jax.vmap(lambda pl: t.decode(pl, like=params))(payloads)
+    ref = jax.tree.map(lambda d: jnp.einsum("c,c...->...", w, d), decoded)
+    trees_close(fused, ref, rtol=1e-6, atol=1e-7)
+
+
+def test_topk_duplicate_indices_accumulate():
+    """The flat (N*S,) scatter must ADD across clients hitting one slot."""
+    vals = jnp.asarray([[1.0, 2.0], [3.0, 4.0]], jnp.float32)
+    idx = jnp.asarray([[0, 2], [0, 1]], jnp.int32)
+    w = jnp.asarray([0.5, 0.5], jnp.float32)
+    out = kops.topk_delta_reduce(vals, idx, w, 4)
+    np.testing.assert_allclose(np.asarray(out), [2.0, 2.0, 1.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk", [lambda: Int8Transport(levels=1),
+                                lambda: TopKTransport(frac=0.1)])
+def test_error_feedback_residual_is_exact(delta_fixture, mk):
+    """residual' = sum_c w_c (delta_c + residual) - hat, exactly."""
+    params, deltas, w = delta_fixture
+    t = mk()
+    state = jax.tree.map(
+        lambda p: jnp.asarray(np.random.default_rng(1).normal(
+            scale=1e-3, size=p.shape).astype(np.float32)), params)
+    stack = jax.tree.map(lambda p, d: p[None] + d, params, deltas)
+    agg, new_state = jax.jit(
+        lambda p, cs, ww, s: t.aggregate(None, p, cs, ww, s))(
+            params, stack, w, state)
+    # reconstruct the corrected deltas exactly as the codec sees them
+    # ((p + d) - p != d in fp, and round-to-nearest is discontinuous)
+    corrected = jax.tree.map(lambda cp, p, r: (cp - p[None]) + r[None],
+                             stack, params, state)
+    hat = t.reduce(jax.vmap(t.encode)(corrected), w, like=params)
+    true = jax.tree.map(lambda d: jnp.einsum("c,c...->...", w, d), corrected)
+    trees_close(new_state, jax.tree.map(jnp.subtract, true, hat),
+                rtol=1e-6, atol=1e-8)
+    trees_close(agg, jax.tree.map(jnp.add, params, hat),
+                rtol=1e-6, atol=1e-8)
+
+
+def test_int8_error_feedback_recovers_loss(femnist_setup):
+    """EF keeps single-level int8 at the uncompressed final loss (the
+    'matched final loss' acceptance regime)."""
+    base, _ = run_trainer(femnist_setup, "none")
+    int8, _ = run_trainer(femnist_setup, "int8")
+    assert abs(int8.history.train_loss[-1]
+               - base.history.train_loss[-1]) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def test_transport_none_is_bitwise_identical(femnist_setup):
+    """FedConfig(transport='none') routes through the historical bucket
+    program — params and history bitwise equal to the default config."""
+    a, _ = run_trainer(femnist_setup, "none",
+                       server_optimizer="fedavgm", server_lr=0.5)
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=16, clients_per_round=6, rounds=8, k0=4,
+                    eta0=0.3, batch_size=8, k_schedule="fixed", seed=0,
+                    server_optimizer="fedavgm", server_lr=0.5)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    b = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    b.run(8)
+    assert trees_equal(a.params, b.params)
+    assert a.history.train_loss == b.history.train_loss
+
+
+def test_identity_transport_matches_engine_bitwise(femnist_setup):
+    """The explicit identity codec (through the transport-threaded bucket
+    program) reproduces the transport-less engine bitwise — the protocol
+    adds no arithmetic."""
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=16, clients_per_round=6, rounds=6, k0=4,
+                    eta0=0.3, batch_size=8, k_schedule="fixed", seed=0,
+                    aggregator="trimmed_mean")
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    base = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    base.run(6)
+    fed_t = FedConfig(total_clients=16, clients_per_round=6, rounds=6, k0=4,
+                      eta0=0.3, batch_size=8, k_schedule="fixed", seed=0,
+                      aggregator="trimmed_mean",
+                      transport=IdentityTransport())
+    ident = FedAvgTrainer(loss_fn, params, data, fed_t, rt)
+    ident.run(6)
+    assert trees_equal(base.params, ident.params)
+
+
+@pytest.mark.parametrize("transport", ["int8", "int8x2", "topk"])
+def test_transport_mesh_parallel_bitwise_parity(femnist_setup, host_mesh,
+                                                transport):
+    """Compressed paths on a degenerate mesh == local (annotations + a
+    1-shard psum only)."""
+    local, _ = run_trainer(femnist_setup, transport)
+    mesh, _ = run_trainer(femnist_setup, transport,
+                          backend=MeshBackend(host_mesh,
+                                              strategy="parallel"))
+    assert trees_equal(local.params, mesh.params)
+    assert mesh.compile_count == 1
+
+
+@pytest.mark.parametrize("transport", ["int8", "topk"])
+def test_transport_sequential_single_round_parity(femnist_setup, host_mesh,
+                                                  transport):
+    """One round of the streaming sequential codec path matches the local
+    path to sum-re-association tolerance. (Multi-round numeric parity is
+    out of contract: round-to-nearest is discontinuous, so a one-ulp sum
+    difference can flip an int8 code / top-k pick and the paths then
+    legitimately diverge — DESIGN.md §8.)"""
+    local, _ = run_trainer(femnist_setup, transport, rounds=1)
+    seq, _ = run_trainer(femnist_setup, transport, rounds=1,
+                         backend=MeshBackend(host_mesh,
+                                             strategy="sequential", groups=2))
+    trees_close(local.params, seq.params, rtol=2e-5, atol=1e-6)
+
+
+def test_identity_transport_sequential_keeps_robust_aggregator(femnist_setup,
+                                                               host_mesh):
+    """The identity codec on the sequential strategy must still run the
+    configured (robust) aggregator — not silently stream a mean."""
+    task, data, loss_fn, params = femnist_setup
+    kw = dict(total_clients=16, clients_per_round=6, rounds=4, k0=3,
+              eta0=0.3, batch_size=8, k_schedule="fixed", seed=0,
+              aggregator="median")
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    legacy = FedAvgTrainer(loss_fn, params, data, FedConfig(**kw), rt,
+                           backend=MeshBackend(host_mesh,
+                                               strategy="sequential",
+                                               groups=2))
+    legacy.run(4)
+    ident = FedAvgTrainer(loss_fn, params, data,
+                          FedConfig(transport=IdentityTransport(), **kw), rt,
+                          backend=MeshBackend(host_mesh,
+                                              strategy="sequential",
+                                              groups=2))
+    ident.run(4)
+    assert trees_equal(legacy.params, ident.params)
+
+
+@pytest.mark.parametrize("transport", ["int8", "topk"])
+def test_transport_sequential_trains(femnist_setup, host_mesh, transport):
+    tr, _ = run_trainer(femnist_setup, transport, rounds=8,
+                        backend=MeshBackend(host_mesh,
+                                            strategy="sequential", groups=2))
+    h = tr.history.train_loss
+    assert np.isfinite(h).all() and h[-1] < h[0]
+
+
+def test_transport_rejects_robust_aggregators(femnist_setup):
+    _, _, loss_fn, _ = femnist_setup
+    with pytest.raises(ValueError, match="linear"):
+        RoundEngine(loss_fn, aggregator="median", transport="int8")
+    with pytest.raises(ValueError, match="linear"):
+        RoundEngine(loss_fn, aggregator="trimmed_mean", transport="topk")
+
+
+def test_compile_key_carries_codec_signature(femnist_setup):
+    """Same input signature, different codec -> different registry keys;
+    the codec signature is the key's leading component."""
+    task, data, loss_fn, params = femnist_setup
+    state_args = {}
+    for name in ("int8", "topk"):
+        engine = RoundEngine(loss_fn, transport=name)
+        state = engine.init_server_state(params)
+        rng = np.random.default_rng(0)
+        bb = pipeline.bucket_batches(rng, data, n_rounds=2, k=3,
+                                     clients_per_round=6, batch_size=8)
+        etas = np.full(2, 0.3, np.float32)
+        engine.run_bucket(params, bb.batches, bb.weights, etas, bb.active,
+                          state)
+        assert engine.compile_count == 1
+        (key,) = engine._executables.keys()
+        assert key[0] == engine.transport.signature()
+        state_args[name] = key
+    assert state_args["int8"][0] != state_args["topk"][0]
+    # identical data signatures — only the codec component differs
+    assert state_args["int8"][2] == state_args["topk"][2]
+
+
+# ---------------------------------------------------------------------------
+# runtime model: encoded bytes on the wire
+# ---------------------------------------------------------------------------
+
+def test_runtime_model_charges_encoded_uplink():
+    cfg = RuntimeModelConfig(download_mbps=20, upload_mbps=5,
+                             beta_seconds=0.1)
+    base = RuntimeModel(40.0, cfg, clients_per_round=10)
+    comp = RuntimeModel(40.0, cfg, clients_per_round=10,
+                        uplink_compression=4.0)
+    c0, c1 = base.round_cost(8), comp.round_cost(8)
+    assert c1.uplink_mbit == pytest.approx(c0.uplink_mbit / 4.0)
+    assert c1.downlink_mbit == c0.downlink_mbit          # broadcast full |x|
+    assert c1.wall_clock_s == pytest.approx(
+        c0.wall_clock_s - (40.0 - 10.0) / 5.0)
+    # Eq. 5 totals re-derive from the same comm_time source
+    assert comp.total_time([8, 8]) == pytest.approx(
+        sum(comp.round_cost(8).wall_clock_s for _ in range(2)))
+
+
+def test_trainer_sets_uplink_compression_and_history(femnist_setup):
+    base, rt0 = run_trainer(femnist_setup, "none")
+    int8, rt8 = run_trainer(femnist_setup, "int8")
+    assert rt0.uplink_compression == 1.0
+    # the injected RuntimeModel is never mutated — the trainer owns a
+    # compressed copy, so sharing one instance across trainers is safe
+    assert rt8.uplink_compression == 1.0
+    assert 3.9 < int8.runtime.uplink_compression <= 4.0
+    ratio = base.history.uplink_mbit[-1] / int8.history.uplink_mbit[-1]
+    assert ratio == pytest.approx(int8.runtime.uplink_compression)
+    # modelled wall-clock is cheaper under compression too
+    assert int8.history.wall_clock_s[-1] < base.history.wall_clock_s[-1]
+
+
+def test_compression_ratio_accounting(delta_fixture):
+    params, _, _ = delta_fixture
+    n = sum(int(l.size) for l in jax.tree.leaves(params))
+    n_leaves = len(jax.tree.leaves(params))
+    int8 = Int8Transport(levels=1)
+    assert int8.encoded_bits(params) == 8 * n + 32 * n_leaves
+    assert int8.nominal_ratio() == 4.0
+    assert Int8Transport(levels=2).nominal_ratio() == 2.0
+    topk = TopKTransport(frac=0.05)
+    assert topk.nominal_ratio() == pytest.approx(10.0)
+    assert get_transport("none") is None
