@@ -283,6 +283,45 @@ def run_prefetch_overlap(rounds: int = 48, *, seed: int = 0,
     return out
 
 
+def run_sampler_compare(rounds: int = 30, *, task_name: str = "femnist",
+                        seed: int = 0, verbose: bool = False) -> List[Dict]:
+    """Client-sampling policies (DESIGN.md §9.3) on one task, constructed
+    through the declarative API (``build(spec)``): uniform is the paper
+    baseline, weighted biases toward data-rich clients, fixed_cohort is the
+    cross-silo regime (per-client EF when combined with an EF transport),
+    availability simulates device churn. Rows double as a facade check —
+    ``build`` must add no measurable overhead over direct construction."""
+    from repro.api import ExperimentSpec, build
+
+    base = ExperimentSpec().with_overrides(
+        "data.kind=paper", f"data.task={task_name}",
+        f"data.clients={QUICK['clients']}",
+        f"data.samples_per_client={QUICK['samples']}", f"data.seed={seed}",
+        f"fed.rounds={rounds}", "fed.clients_per_round=8",
+        f"fed.k0={QUICK['k0']}", "fed.eta0=0.3", "fed.batch_size=8",
+        "fed.k_schedule=rounds", "fed.loss_window=5", f"fed.seed={seed}",
+        "runtime.beta_seconds=0.05")
+    out = []
+    for sampler, extra in (("uniform", ()),
+                           ("weighted", ()),
+                           ("fixed_cohort", ("transport.name=int8",)),
+                           ("availability", ("sampler.availability=0.6",))):
+        spec = base.with_overrides(f"sampler.name={sampler}", *extra)
+        exp = build(spec)
+        t0 = time.time()
+        h = exp.run()
+        dt = time.time() - t0
+        ef = getattr(exp.trainer.engine.transport, "ef_slots", None)
+        out.append({"sampler": sampler, "task": task_name, "bench_s": dt,
+                    "rps": rounds / dt, "final_loss": h.train_loss[-1],
+                    "ef_slots": ef or 0})
+        if verbose:
+            print(f"  sampler[{sampler}]: {rounds / dt:.1f} rounds/s "
+                  f"loss={h.train_loss[-1]:.4f}"
+                  + (f" per-client-EF x{ef}" if ef else ""))
+    return out
+
+
 def run(tasks=("sent140", "femnist"), rounds=None,
         verbose=True) -> List[Tuple[str, float, str]]:
     rows = []
@@ -314,6 +353,12 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                      f"dloss={t['dloss']:+.4f};"
                      f"simW={t['sim_wall_clock_s']:.0f}s;"
                      f"upMbit={t['uplink_mbit']:.1f}"))
+    for s in run_sampler_compare(rounds=rounds or 30, verbose=verbose):
+        rows.append((f"sampler_{s['sampler']}_{s['task']}",
+                     s["bench_s"] * 1e6,
+                     f"rps={s['rps']:.1f};"
+                     f"loss={s['final_loss']:.4f};"
+                     f"efSlots={s['ef_slots']}"))
     p = run_prefetch_overlap(rounds=rounds or 48, verbose=verbose)
     rows.append(("engine_prefetch_overlap", p["prefetch_s"] * 1e6,
                  f"speedup={p['speedup']:.2f}x;"

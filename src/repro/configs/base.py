@@ -171,6 +171,12 @@ class FedConfig:
     # --- delta transport (DESIGN.md §8) ---
     transport: str = "none"           # none | int8 | int8x2 | topk
     topk_frac: float = 0.1            # kept fraction for transport="topk"
+    # --- client sampling (DESIGN.md §9.3) ---
+    sampler: str = "uniform"          # uniform | weighted | fixed_cohort
+                                      # | availability (plugin registry)
+    cohort: Optional[Tuple[int, ...]] = None   # fixed_cohort membership
+                                      # (None = clients 0..n-1)
+    availability: float = 0.9         # per-round online prob (availability)
     bucket_rounds: int = 8            # max rounds per jitted K-bucket scan
     feedback_bucket_rounds: int = 1   # bucket length for error/step schedules
                                       # (1 == per-round feedback, seed-exact)

@@ -13,6 +13,10 @@ from repro.core.engine.client import ClientResult, client_update, \
 from repro.core.engine.round import (RoundEngine, make_bucket_fn,
                                      make_round_core, make_round_fn,
                                      make_transport_bucket_fn)
+from repro.core.engine.sampling import (SAMPLERS, AvailabilitySampler,
+                                        ClientSampler, FixedCohortSampler,
+                                        UniformSampler, WeightedSampler,
+                                        get_sampler, make_sampler)
 from repro.core.engine.scheduler import Bucket, RoundScheduler, is_loss_free
 from repro.core.engine.server import (SERVER_OPTIMIZERS, ServerOptimizer,
                                       get_server_optimizer)
@@ -30,4 +34,6 @@ __all__ = ["AGGREGATORS", "get_aggregator", "weighted_mean",
            "ServerOptimizer", "get_server_optimizer", "FedAvgTrainer",
            "History", "make_eval_fn", "TRANSPORTS", "Transport",
            "IdentityTransport", "Int8Transport", "TopKTransport",
-           "get_transport"]
+           "get_transport", "SAMPLERS", "ClientSampler", "UniformSampler",
+           "WeightedSampler", "FixedCohortSampler", "AvailabilitySampler",
+           "get_sampler", "make_sampler"]

@@ -19,10 +19,12 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.api.registries import AGGREGATOR_REGISTRY, register_aggregator
+
 PyTree = Any
 Aggregator = Callable[[PyTree, jnp.ndarray], PyTree]
 
-AGGREGATORS = ("mean", "kernel", "median", "trimmed_mean")
+AGGREGATORS = ("mean", "kernel", "median", "trimmed_mean")   # builtins
 
 
 def weighted_mean(client_params: PyTree, weights: jnp.ndarray) -> PyTree:
@@ -71,12 +73,18 @@ def trimmed_mean(client_params: PyTree, weights: jnp.ndarray,
 
 
 def get_aggregator(name: str, *, trim_fraction: float = 0.1) -> Aggregator:
-    if name == "mean":
-        return weighted_mean
-    if name == "kernel":
-        return kernel_mean
-    if name == "median":
-        return coordinate_median
-    if name == "trimmed_mean":
-        return lambda cp, w: trimmed_mean(cp, w, trim_fraction)
-    raise ValueError(f"aggregator {name!r} not in {AGGREGATORS}")
+    """Resolve an aggregator through the plugin registry (did-you-mean on
+    unknown names); an already-callable aggregator passes through."""
+    if callable(name):
+        return name
+    return AGGREGATOR_REGISTRY.get(name)(trim_fraction=trim_fraction)
+
+
+# builtin registrations — factory signature: f(*, trim_fraction, **kw)
+register_aggregator("mean", lambda **kw: weighted_mean)
+register_aggregator("kernel", lambda **kw: kernel_mean)
+register_aggregator("median", lambda **kw: coordinate_median)
+register_aggregator(
+    "trimmed_mean",
+    lambda *, trim_fraction=0.1, **kw: (
+        lambda cp, w: trimmed_mean(cp, w, trim_fraction)))

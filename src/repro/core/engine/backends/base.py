@@ -96,11 +96,15 @@ class ExecutionBackend:
             weights=self.place_weights(bb.weights),
             active=jnp.asarray(bb.active, bool))
 
-    def place_transport_state(self, state):
-        """Transport error-feedback state is params-shaped (or ``()``), so
-        it rides the params placement (sharding specs included)."""
+    def place_transport_state(self, state, per_client: bool = False):
+        """Transport error-feedback state. Aggregate-level state is
+        params-shaped and rides the params placement (sharding specs
+        included); ``per_client`` state carries a leading cohort axis
+        (DESIGN.md §9.3) that params shardings must not be applied to."""
         if not jax.tree.leaves(state):
             return state
+        if per_client:
+            return jax.tree.map(jnp.asarray, state)
         return self.place_params(state)
 
     # ------------------------------------------------------------------
@@ -113,3 +117,13 @@ class ExecutionBackend:
         canonicalising ``device_put`` (DESIGN.md §7.3). No-op on a single
         device."""
         return tree
+
+    def constrain_transport_update(self, tree: PyTree,
+                                   per_client: bool = False) -> PyTree:
+        """``constrain_update`` for the executable's transport-state output.
+        Per-client EF state (leading cohort axis) must not take the params
+        shardings — a leading-dims PartitionSpec would silently shard the
+        cohort axis with the param's first-dim spec."""
+        if per_client:
+            return tree
+        return self.constrain_update(tree)

@@ -206,6 +206,7 @@ class MeshBackend(ExecutionBackend):
         groups = self.groups
         param_specs, axes = self.param_specs, self.client_axes
         ef = transport.error_feedback
+        per_client_ef = ef and bool(getattr(transport, "ef_slots", None))
 
         def constrain(tree):
             if param_specs is None:
@@ -224,39 +225,53 @@ class MeshBackend(ExecutionBackend):
             gb = jax.tree.map(
                 lambda x: x.reshape((groups, ng) + x.shape[1:]), batches)
             gw = weights.reshape(groups, ng)
+            # per-client EF (fixed cohorts): residual slot i rides the scan
+            # as a per-client xs/ys pair — client i reads ITS residual and
+            # writes ITS compression error; no cross-client mixing
+            gt = (jax.tree.map(
+                lambda x: x.reshape((groups, ng) + x.shape[1:]), t_state)
+                if per_client_ef else gw)   # gw = cheap dummy xs slot
 
-            def per_group(group_batches, group_w):
+            def per_group(group_batches, group_w, group_t):
                 def client(carry, inp):
                     hat_acc, true_acc = carry
-                    cb, w = inp
+                    cb, w, t_slot = inp
                     res = client_update(loss_fn, params, cb, eta)
                     delta = constrain(jax.tree.map(
                         lambda c, p: c.astype(jnp.float32)
                         - p.astype(jnp.float32), res.params, params))
                     if ef:
                         delta = constrain(jax.tree.map(
-                            jnp.add, delta, t_state))
+                            jnp.add, delta,
+                            t_slot if per_client_ef else t_state))
                     dec = transport.decode(transport.encode(delta),
                                            like=params)
                     w32 = w.astype(jnp.float32)
                     hat_acc = constrain(jax.tree.map(
                         lambda a, d: a + w32 * d, hat_acc, dec))
+                    if per_client_ef:
+                        new_slot = jax.tree.map(jnp.subtract, delta, dec)
+                        return ((hat_acc, true_acc),
+                                (new_slot, res.first_loss, res.last_loss))
                     if ef:
                         true_acc = constrain(jax.tree.map(
                             lambda a, d: a + w32 * d, true_acc, delta))
                     return ((hat_acc, true_acc),
-                            (res.first_loss, res.last_loss))
+                            ((), res.first_loss, res.last_loss))
 
                 zeros = constrain(jax.tree.map(
                     lambda p: jnp.zeros(p.shape, jnp.float32), params))
-                zeros_t = zeros if ef else ()
+                zeros_t = zeros if (ef and not per_client_ef) else ()
                 return jax.lax.scan(client, (zeros, zeros_t),
-                                    (group_batches, group_w))
+                                    (group_batches, group_w, group_t))
 
-            (hat_g, true_g), (firsts, lasts) = jax.vmap(
-                per_group, spmd_axis_name=axes)(gb, gw)
+            (hat_g, true_g), (slots_g, firsts, lasts) = jax.vmap(
+                per_group, spmd_axis_name=axes)(gb, gw, gt)
             hat = jax.tree.map(lambda a: jnp.sum(a, axis=0), hat_g)
-            if ef:
+            if per_client_ef:
+                new_t = jax.tree.map(
+                    lambda x: x.reshape((n,) + x.shape[2:]), slots_g)
+            elif ef:
                 true = jax.tree.map(lambda a: jnp.sum(a, axis=0), true_g)
                 new_t = jax.tree.map(jnp.subtract, true, hat)
             else:
@@ -316,6 +331,22 @@ class MeshBackend(ExecutionBackend):
                                   self._named(self._batch_spec(v.shape)))
                 for k, v in batches.items()}
 
+    def place_transport_state(self, state, per_client: bool = False):
+        """Aggregate-level EF state is params-shaped and rides the params
+        placement; per-client EF state (leading cohort axis, DESIGN.md
+        §9.3) must NOT take ``param_specs`` — a leading-dims PartitionSpec
+        would shard the cohort axis with the spec meant for the param's
+        first dim — so it is placed replicated (sharding the cohort axis is
+        a recorded ROADMAP item)."""
+        if not jax.tree.leaves(state):
+            return state
+        if self.mesh is None:
+            return jax.tree.map(jnp.asarray, state)
+        if per_client:
+            rep = self._named(P())
+            return jax.tree.map(lambda x: jax.device_put(x, rep), state)
+        return self.place_params(state)
+
     def place_weights(self, weights) -> jnp.ndarray:
         w = jnp.asarray(weights, jnp.float32)
         if self.mesh is None:
@@ -348,4 +379,14 @@ class MeshBackend(ExecutionBackend):
             # tree is not params-shaped (exotic server/transport state) —
             # leave its sharding to GSPMD
             return tree
+
+    def constrain_transport_update(self, tree: PyTree,
+                                   per_client: bool = False) -> PyTree:
+        if not per_client:
+            return self.constrain_update(tree)
+        if self.mesh is None or not jax.tree.leaves(tree):
+            return tree
+        rep = self._named(P())      # cohort-axis sharding: ROADMAP item
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, rep), tree)
 

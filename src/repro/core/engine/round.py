@@ -155,13 +155,16 @@ class RoundEngine:
                 return self.backend.constrain_update(p), f, l, s
         else:
             raw = make_transport_bucket_fn(self.round_core)
+            per_client = self.transport.ef_slots is not None
 
             def bucket(params, batches, weights, etas, active, server_state,
                        t_state):
                 p, f, l, s, t = raw(params, batches, weights, etas, active,
                                     server_state, t_state)
                 be = self.backend
-                return be.constrain_update(p), f, l, s, be.constrain_update(t)
+                return (be.constrain_update(p), f, l, s,
+                        be.constrain_transport_update(t,
+                                                      per_client=per_client))
         self._jitted = jax.jit(bucket)
         self._executables: Dict[Tuple, Any] = {}
         self.dispatch_count = 0
@@ -197,7 +200,9 @@ class RoundEngine:
         else:
             if self.transport_state is None:
                 self.init_transport_state(params)
-            t_state = be.place_transport_state(self.transport_state)
+            t_state = be.place_transport_state(
+                self.transport_state,
+                per_client=self.transport.ef_slots is not None)
             args = (params, batches, weights, etas, active, server_state,
                     t_state)
         key = (self._codec_sig,) + _signature(args)
@@ -219,7 +224,8 @@ class RoundEngine:
 
 
 def make_round_fn(loss_fn: LossFn, *, server: str = "avg",
-                  server_lr: float = 1.0, use_kernel_avg: bool = False):
+                  server_lr: float = 1.0, aggregator: str = "mean",
+                  use_kernel_avg: Optional[bool] = None):
     """Seed-compatible single-round builder (one jitted FedAvg round).
 
     round_fn(params, batches{(N,K,b,...)}, weights (N,), eta, server_state)
@@ -228,11 +234,21 @@ def make_round_fn(loss_fn: LossFn, *, server: str = "avg",
     Returns ``(round_fn, srv_init)`` where ``srv_init`` is None for the
     stateless ``avg`` server (its state is ``()``), matching the historical
     ``make_round_fn`` contract that `tests` and benchmarks rely on.
+
+    ``aggregator`` resolves through the plugin registry;
+    ``use_kernel_avg`` is DEPRECATED — pass ``aggregator="kernel"``.
     """
+    if use_kernel_avg is not None:
+        import warnings
+        warnings.warn(
+            "make_round_fn(use_kernel_avg=...) is deprecated and will be "
+            "removed next release; pass aggregator='kernel' instead.",
+            DeprecationWarning, stacklevel=2)
+        if use_kernel_avg:
+            aggregator = "kernel"
     srv = get_server_optimizer(server)
-    core = make_round_core(
-        loss_fn, get_aggregator("kernel" if use_kernel_avg else "mean"),
-        srv, server_lr)
+    core = make_round_core(loss_fn, get_aggregator(aggregator), srv,
+                           server_lr)
 
     def round_fn(params, batches, weights, eta, server_state):
         new_params, first_losses, last_losses, server_state = core(

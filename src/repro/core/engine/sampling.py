@@ -1,0 +1,189 @@
+"""ClientSampler — who participates in each federated round (DESIGN.md §9.3).
+
+Algorithm 1 line 3 ("sample C_r uniformly") was hard-coded in the data
+pipeline; partial-participation regimes whose convergence depends on the
+sampling scheme (Li et al., *On the Convergence of FedAvg on Non-IID
+Data*) could not be expressed. A ``ClientSampler`` owns both decisions a
+round opens with: *which* clients run, and with what aggregation *weights*.
+
+Samplers (registered in ``repro.api.registries``):
+
+  * ``uniform``      — without-replacement uniform draw. Consumes EXACTLY
+    the rng stream of the historical ``pipeline.sample_clients`` call, so
+    the default configuration is bitwise-identical to every prior PR.
+  * ``weighted``     — draw probability proportional to client dataset
+    size (importance sampling for heavy-tailed client populations).
+  * ``fixed_cohort`` — the same cohort every round, in a stable order:
+    cross-silo FL, where clients are stateful organisations. Declares
+    ``stateful_cohort``, which switches transport error feedback from the
+    server-aggregate residual to per-client residual slots
+    (``Transport.with_ef_slots``; slot j is always cohort[j]).
+  * ``availability`` — per-round participation mask: each client is online
+    with probability ``p`` this round; the cohort is drawn from the online
+    set. If fewer than ``n`` clients are online the cohort is padded with
+    offline clients at aggregation weight 0 (shape stability for the jitted
+    round; zero weight = they contribute nothing to *linear* aggregators —
+    combining availability shortfall with median/trimmed_mean is rejected
+    by spec validation).
+
+The sampler runs on the host, inside the bucket builder (possibly on the
+prefetch thread — requests are FIFO on one rng, so results depend only on
+(rng state, submission order), never on timing).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.registries import SAMPLER_REGISTRY, register_sampler
+from repro.data.pipeline import client_weights as _size_weights
+from repro.data.synthetic import FederatedData
+
+
+class ClientSampler:
+    """Protocol. ``round(rng, data, n, round_idx)`` -> (ids (n,), weights
+    (n,) f32 summing to 1). ``round_idx`` is the absolute 1-based round
+    index (schedule-stable across checkpoint resume); samplers that do not
+    depend on it must ignore it."""
+
+    name: str = "base"
+    #: True => the cohort is fixed for the whole run and slot j always maps
+    #: to the same client — per-client transport error feedback is sound.
+    stateful_cohort: bool = False
+    #: True => the sampler communicates participation through the weight
+    #: vector (zero-weight slots), so aggregation must respect weights —
+    #: the trainer rejects weight-ignoring (robust) aggregators.
+    needs_weighted_aggregation: bool = False
+
+    def sample(self, rng: np.random.Generator, data: FederatedData, n: int,
+               round_idx: Optional[int] = None) -> np.ndarray:
+        raise NotImplementedError
+
+    def weights(self, data: FederatedData, ids: np.ndarray) -> np.ndarray:
+        return _size_weights(data, ids)
+
+    def round(self, rng: np.random.Generator, data: FederatedData, n: int,
+              round_idx: Optional[int] = None
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        ids = self.sample(rng, data, n, round_idx)
+        return ids, self.weights(data, ids)
+
+
+class UniformSampler(ClientSampler):
+    """Uniform without replacement — draw-for-draw the historical stream
+    (delegates to the historical draw itself, so the bitwise contract is
+    true by construction)."""
+
+    name = "uniform"
+
+    def sample(self, rng, data, n, round_idx=None):
+        from repro.data.pipeline import sample_clients
+        return sample_clients(rng, data, n)
+
+
+class WeightedSampler(ClientSampler):
+    """Inclusion probability proportional to client dataset size."""
+
+    name = "weighted"
+
+    def sample(self, rng, data, n, round_idx=None):
+        sizes = np.array([len(y) for y in data.client_y], dtype=np.float64)
+        return rng.choice(data.num_clients, size=min(n, data.num_clients),
+                          replace=False, p=sizes / sizes.sum())
+
+
+class FixedCohortSampler(ClientSampler):
+    """The same clients, in the same slot order, every round (cross-silo).
+
+    ``cohort=None`` defaults to clients ``0..n-1``. Consumes no rng, so two
+    runs differing only in cohort membership share their batch-sampling
+    stream per slot."""
+
+    name = "fixed_cohort"
+    stateful_cohort = True
+
+    def __init__(self, cohort: Optional[Sequence[int]] = None):
+        self.cohort = None if cohort is None else tuple(int(c) for c in cohort)
+
+    def sample(self, rng, data, n, round_idx=None):
+        cohort = self.cohort if self.cohort is not None else tuple(range(n))
+        if len(cohort) != n:
+            raise ValueError(f"fixed cohort has {len(cohort)} clients, "
+                             f"round needs {n}")
+        bad = [c for c in cohort if not 0 <= c < data.num_clients]
+        if bad:
+            raise ValueError(f"cohort ids {bad} out of range "
+                             f"[0, {data.num_clients})")
+        return np.asarray(cohort, dtype=np.int64)
+
+
+class AvailabilitySampler(ClientSampler):
+    """Bernoulli(p) per-round participation mask (cross-device churn).
+
+    Shortfall policy: when fewer than ``n`` clients are online, offline
+    clients pad the cohort at weight 0 so the jitted round keeps its shape;
+    a round with nobody online degrades to a uniform draw (documented
+    deviation — the server cannot skip a round in this simulation)."""
+
+    name = "availability"
+    needs_weighted_aggregation = True   # shortfall padding rides zero weights
+
+    def __init__(self, prob: float = 0.9):
+        if not 0.0 < prob <= 1.0:
+            raise ValueError(f"availability prob must be in (0, 1]: {prob}")
+        self.prob = float(prob)
+
+    def round(self, rng, data, n, round_idx=None):
+        n = min(n, data.num_clients)
+        online = np.flatnonzero(rng.random(data.num_clients) < self.prob)
+        if len(online) == 0:
+            ids = rng.choice(data.num_clients, size=n, replace=False)
+            return ids, _size_weights(data, ids)
+        if len(online) >= n:
+            ids = rng.choice(online, size=n, replace=False)
+            return ids, _size_weights(data, ids)
+        offline = np.setdiff1d(np.arange(data.num_clients), online,
+                               assume_unique=True)
+        fill = rng.choice(offline, size=n - len(online), replace=False)
+        ids = np.concatenate([online, fill])
+        w = np.array([len(data.client_y[c]) for c in online], np.float64)
+        weights = np.zeros(n, np.float32)
+        weights[:len(online)] = (w / w.sum()).astype(np.float32)
+        return ids, weights
+
+    def sample(self, rng, data, n, round_idx=None):
+        return self.round(rng, data, n, round_idx)[0]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+register_sampler("uniform", lambda *, fed=None, **kw: UniformSampler())
+register_sampler("weighted", lambda *, fed=None, **kw: WeightedSampler())
+register_sampler(
+    "fixed_cohort",
+    lambda *, fed=None, **kw: FixedCohortSampler(
+        cohort=getattr(fed, "cohort", None)))
+register_sampler(
+    "availability",
+    lambda *, fed=None, **kw: AvailabilitySampler(
+        prob=getattr(fed, "availability", 0.9)))
+
+SAMPLERS = ("uniform", "weighted", "fixed_cohort", "availability")
+
+
+def get_sampler(name, *, fed=None, **kw) -> ClientSampler:
+    """Resolve a sampler by name (a ``ClientSampler`` instance passes
+    through). ``fed`` supplies per-sampler configuration (cohort,
+    availability)."""
+    if isinstance(name, ClientSampler):
+        return name
+    return SAMPLER_REGISTRY.get(name)(fed=fed, **kw)
+
+
+def make_sampler(fed) -> ClientSampler:
+    """The trainer's entry point: build the FedConfig's sampler."""
+    return get_sampler(getattr(fed, "sampler", "uniform") or "uniform",
+                       fed=fed)

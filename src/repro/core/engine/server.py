@@ -19,10 +19,12 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
+from repro.api.registries import (SERVER_OPTIMIZER_REGISTRY,
+                                  register_server_optimizer)
 
 PyTree = Any
 
-SERVER_OPTIMIZERS = ("avg", "fedadam", "fedavgm", "fedyogi")
+SERVER_OPTIMIZERS = ("avg", "fedadam", "fedavgm", "fedyogi")   # builtins
 
 
 class ServerOptimizer(NamedTuple):
@@ -57,13 +59,19 @@ def _from_optim(pair) -> ServerOptimizer:
     return ServerOptimizer(init, step)
 
 
-def get_server_optimizer(name: str) -> ServerOptimizer:
-    if name == "avg":
-        return _avg()
-    if name == "fedadam":
-        return _from_optim(optim.fedadam_server())
-    if name == "fedavgm":
-        return _from_optim(optim.fedavgm_server())
-    if name == "fedyogi":
-        return _from_optim(optim.fedyogi_server())
-    raise ValueError(f"server optimizer {name!r} not in {SERVER_OPTIMIZERS}")
+def get_server_optimizer(name) -> ServerOptimizer:
+    """Resolve through the plugin registry (did-you-mean on unknown names);
+    a ``ServerOptimizer`` instance passes through."""
+    if isinstance(name, ServerOptimizer):
+        return name
+    return SERVER_OPTIMIZER_REGISTRY.get(name)()
+
+
+# builtin registrations — factory signature: f(**kw) -> ServerOptimizer
+register_server_optimizer("avg", lambda **kw: _avg())
+register_server_optimizer("fedadam",
+                          lambda **kw: _from_optim(optim.fedadam_server()))
+register_server_optimizer("fedavgm",
+                          lambda **kw: _from_optim(optim.fedavgm_server()))
+register_server_optimizer("fedyogi",
+                          lambda **kw: _from_optim(optim.fedyogi_server()))

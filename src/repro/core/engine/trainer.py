@@ -19,6 +19,7 @@ Evaluation happens at bucket boundaries; the scheduler cuts buckets at
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -26,8 +27,11 @@ import jax
 import numpy as np
 
 from repro.configs.base import FedConfig
+from repro.core.engine.backends.base import LINEAR_AGGREGATORS
 from repro.core.engine.round import LossFn, RoundEngine
+from repro.core.engine.sampling import make_sampler
 from repro.core.engine.scheduler import Bucket, RoundScheduler
+from repro.core.engine.transport import get_transport
 from repro.core.runtime_model import RuntimeModel
 from repro.core.schedules import DecayController
 from repro.data import pipeline
@@ -60,6 +64,14 @@ class History:
     @classmethod
     def from_dict(cls, d: Dict[str, list]) -> "History":
         names = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - names)
+        if unknown:
+            # a checkpoint written by a different History schema: dropping
+            # fields silently would hide drift from the operator
+            warnings.warn(
+                f"History.from_dict: ignoring unknown field(s) {unknown} "
+                f"(checkpoint written by a different History schema?)",
+                stacklevel=2)
         return cls(**{k: list(v) for k, v in d.items() if k in names})
 
 
@@ -72,10 +84,19 @@ class FedAvgTrainer:
                  data: FederatedData, fed: FedConfig,
                  runtime: RuntimeModel,
                  eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
-                 use_kernel_avg: bool = False, backend=None):
+                 use_kernel_avg: Optional[bool] = None, backend=None,
+                 sampler=None):
         """``backend``: an ``engine.backends.ExecutionBackend`` deciding the
         execution geometry (default LocalBackend; pass a MeshBackend to run
-        the same schedules/aggregators/servers GSPMD-sharded)."""
+        the same schedules/aggregators/servers GSPMD-sharded).
+
+        ``sampler``: a ``ClientSampler`` instance overriding
+        ``fed.sampler`` (default: resolve ``fed.sampler`` through the
+        registry; ``uniform`` reproduces the historical stream exactly).
+
+        ``use_kernel_avg`` is DEPRECATED: use ``fed.aggregator="kernel"``
+        (it has been folded into aggregator resolution; the kwarg is a
+        one-release shim)."""
         self.loss_fn = loss_fn
         self.params = init_params
         self.data = data
@@ -83,13 +104,39 @@ class FedAvgTrainer:
         self.runtime = runtime
         self.eval_fn = eval_fn
         self.ctrl = DecayController(fed)
-        aggregator = "kernel" if use_kernel_avg else fed.aggregator
+        aggregator = fed.aggregator
+        if use_kernel_avg is not None:
+            warnings.warn(
+                "FedAvgTrainer(use_kernel_avg=...) is deprecated and will "
+                "be removed next release; use FedConfig(aggregator='kernel') "
+                "or register a custom aggregator instead.",
+                DeprecationWarning, stacklevel=2)
+            if use_kernel_avg:
+                aggregator = "kernel"
+        self.sampler = sampler if sampler is not None else make_sampler(fed)
+        if (getattr(self.sampler, "needs_weighted_aggregation", False)
+                and aggregator not in LINEAR_AGGREGATORS):
+            # e.g. availability shortfall pads the cohort at weight 0;
+            # median/trimmed_mean ignore weights and would aggregate the
+            # padded offline clients as full participants
+            raise ValueError(
+                f"sampler {self.sampler.name!r} encodes participation in "
+                f"the aggregation weights and needs a weight-respecting "
+                f"aggregator {LINEAR_AGGREGATORS}, got {aggregator!r}")
+        transport = get_transport(getattr(fed, "transport", "none"),
+                                  topk_frac=getattr(fed, "topk_frac", 0.1))
+        if (transport is not None and transport.error_feedback
+                and self.sampler.stateful_cohort):
+            # fixed cohort: slot j is the same client every round, so the
+            # codec residual moves from one server-aggregate buffer to
+            # per-client slots (DESIGN.md §9.3)
+            transport = transport.with_ef_slots(fed.clients_per_round)
         self.engine = RoundEngine(loss_fn, aggregator=aggregator,
                                   trim_fraction=fed.trim_fraction,
                                   server=fed.server_optimizer,
                                   server_lr=fed.server_lr,
                                   backend=backend,
-                                  transport=getattr(fed, "transport", "none"),
+                                  transport=transport,
                                   topk_frac=getattr(fed, "topk_frac", 0.1))
         self.server_state = self.engine.init_server_state(init_params)
         self.engine.init_transport_state(init_params)
@@ -142,7 +189,8 @@ class FedAvgTrainer:
             self.data, self.fed.clients_per_round, self.fed.batch_size,
             self._np_rng,
             background=self.fed.prefetch and sched.loss_free,
-            place_fn=self.engine.backend.place_bucket)
+            place_fn=self.engine.backend.place_bucket,
+            sampler=self.sampler)
         try:
             if sched.loss_free:
                 self._run_pipelined(sched, builder, rounds, verbose)
@@ -171,11 +219,13 @@ class FedAvgTrainer:
         pending: Optional[Tuple[Bucket, jax.Array]] = None
         nxt = next(plan, None)
         if nxt is not None:
-            builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds)
+            builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds,
+                           rounds=nxt.rounds)
         while nxt is not None:
             cur, nxt = nxt, next(plan, None)
             if nxt is not None:   # scheduler announces the upcoming K-bucket
-                builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds)
+                builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds,
+                               rounds=nxt.rounds)
             firsts = self._dispatch(cur, builder.get())
             if pending is not None:     # sync bucket r-1 while r computes
                 self._absorb(*pending)
@@ -193,7 +243,8 @@ class FedAvgTrainer:
         # plan() is lazy: each iteration consults the controller, which has
         # absorbed the previous bucket's losses by the time it is advanced
         for bucket in sched.plan():
-            builder.submit(len(bucket), bucket.k, pad_to=bucket.shape_rounds)
+            builder.submit(len(bucket), bucket.k, pad_to=bucket.shape_rounds,
+                           rounds=bucket.rounds)
             firsts = self._dispatch(bucket, builder.get())
             self._absorb(bucket, firsts)          # boundary sync
             if bucket.eval_after:
@@ -224,17 +275,23 @@ class FedAvgTrainer:
     # ------------------------------------------------------------------
     # full-state checkpointing (DESIGN.md §8: transport/EF state included)
     # ------------------------------------------------------------------
-    def save_state(self, path: str) -> None:
+    def save_state(self, path: str,
+                   extra_meta: Optional[Dict[str, Any]] = None) -> None:
         """Checkpoint everything a bitwise-identical continuation needs:
         params, server-optimizer state, transport error-feedback state, the
         numpy rng stream, controller feedback state, history and the
         simulated-cost counters. Restore with ``restore_state`` and continue
-        via ``run(rounds, resume=True)``."""
+        via ``run(rounds, resume=True)``.
+
+        ``extra_meta``: JSON-serializable entries merged into ``meta.json``
+        (``FederatedExperiment.save`` embeds the ExperimentSpec here so a
+        checkpoint alone rebuilds the exact trainer)."""
         from repro.checkpoint import save_checkpoint
         tree = {"params": self.params, "server": self.server_state,
                 "transport": self.engine.transport_state}
         ctrl = self.ctrl
         meta = {
+            **(extra_meta or {}),
             "completed_rounds": self._completed_rounds,
             "history": self.history.as_dict(),
             "rng": self._np_rng.bit_generator.state,

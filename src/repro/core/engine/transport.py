@@ -52,12 +52,13 @@ import jax.numpy as jnp
 
 # literal reuse of the Q-KV quantisation scheme (two-level int8 + per-vector
 # f32 scales — models/attention.py §Perf Q-KV); pure jnp, no layer deps
+from repro.api.registries import TRANSPORT_REGISTRY, register_transport
 from repro.core.engine.backends.base import axes_size as _axes_size
 from repro.models.attention import quantize_kv, quantize_kv_residual
 
 PyTree = Any
 
-TRANSPORTS = ("none", "int8", "int8x2", "topk")
+TRANSPORTS = ("none", "int8", "int8x2", "topk")   # builtins
 
 
 
@@ -75,11 +76,26 @@ class Transport:
 
     name: str = "base"
     error_feedback: bool = False
+    #: per-client error-feedback slot count (fixed cohorts, DESIGN.md §9.3):
+    #: None = server-aggregate residual (stateless sampled clients); an int N
+    #: = one residual slot per cohort slot, valid only when slot j maps to
+    #: the same client every round (``ClientSampler.stateful_cohort``).
+    ef_slots: Optional[int] = None
 
     # -- identity / compile-cache -------------------------------------
     def signature(self) -> Tuple:
         """Hashable codec signature, mixed into the AOT registry key."""
-        return (self.name, self.error_feedback)
+        return (self.name, self.error_feedback, self.ef_slots)
+
+    # -- cohort binding -------------------------------------------------
+    def with_ef_slots(self, n: int) -> "Transport":
+        """A copy carrying per-client error feedback for an ``n``-client
+        fixed cohort; identity for codecs without feedback state."""
+        if not self.error_feedback:
+            return self
+        t = copy.copy(self)
+        t.ef_slots = int(n)
+        return t
 
     # -- mesh binding ---------------------------------------------------
     def with_mesh(self, mesh, client_axes: Optional[Sequence[str]]):
@@ -97,7 +113,9 @@ class Transport:
     def init_state(self, params: PyTree):
         if not self.error_feedback:
             return ()
-        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        lead = (self.ef_slots,) if self.ef_slots else ()
+        return jax.tree.map(
+            lambda p: jnp.zeros(lead + tuple(p.shape), jnp.float32), params)
 
     # -- codec (per-leaf-list payloads, leaves in tree.flatten order) ----
     def encode(self, delta: PyTree):
@@ -138,16 +156,33 @@ class Transport:
         deltas = jax.tree.map(lambda cp, p: cp.astype(jnp.float32) - p[None],
                               client_stack, p32)
         if self.error_feedback:
-            deltas = jax.tree.map(lambda d, r: d + r[None], deltas, state)
+            # compensate: per-client slots carry their own residual (fixed
+            # cohorts), the aggregate residual is broadcast to every client
+            deltas = (jax.tree.map(jnp.add, deltas, state) if self.ef_slots
+                      else jax.tree.map(lambda d, r: d + r[None], deltas,
+                                        state))
         payloads = jax.vmap(self.encode)(deltas)
         hat = self.reduce(payloads, weights, like=params)
-        if self.error_feedback:
+        if not self.error_feedback:
+            new_state = state
+        elif self.ef_slots:
+            # per-client residual: each slot keeps ITS OWN compression error
+            # (Karimireddy et al. '19, the stateful-client original) — no
+            # weighted-truth term, no cross-client mixing. The residual
+            # NEEDS the per-client decode, so this mode pays decode twice
+            # (once fused inside reduce, once here); hat deliberately stays
+            # on the fused reduce so the wire-aggregation program — and its
+            # numerics — are identical across EF modes (the parity
+            # contracts in tests/test_sampling.py key on this). Decode is
+            # O(N*M) elementwise, dwarfed by the K local-SGD steps.
+            decoded = jax.vmap(lambda pl: self.decode(pl, like=params))(
+                payloads)
+            new_state = jax.tree.map(jnp.subtract, deltas, decoded)
+        else:
             true = _weighted_true_sum(jax.tree.leaves(deltas), weights)
             new_state = jax.tree.unflatten(
                 jax.tree.structure(params),
                 [t - h for t, h in zip(true, jax.tree.leaves(hat))])
-        else:
-            new_state = state
         aggregate = jax.tree.map(
             lambda p, h: (p.astype(jnp.float32) + h).astype(p.dtype),
             params, hat)
@@ -198,7 +233,7 @@ class Int8Transport(Transport):
             self.name = "int8x2"
 
     def signature(self):
-        return (self.name, self.levels, self.error_feedback)
+        return (self.name, self.levels, self.error_feedback, self.ef_slots)
 
     def encode(self, delta):
         out = []
@@ -267,7 +302,7 @@ class TopKTransport(Transport):
         self.error_feedback = error_feedback
 
     def signature(self):
-        return (self.name, self.frac, self.error_feedback)
+        return (self.name, self.frac, self.error_feedback, self.ef_slots)
 
     def _k(self, size: int) -> int:
         return max(1, int(math.ceil(self.frac * size)))
@@ -309,17 +344,24 @@ class TopKTransport(Transport):
 
 
 def get_transport(name, *, topk_frac: float = 0.1) -> Optional[Transport]:
-    """Resolve a codec. ``None``/``"none"`` -> None: the engine keeps its
-    historical (bit-identical) param-space path. A ``Transport`` instance
-    passes through."""
-    if name is None or name == "none":
+    """Resolve a codec through the plugin registry. ``None``/``"none"`` ->
+    None: the engine keeps its historical (bit-identical) param-space path.
+    A ``Transport`` instance passes through. Unknown names get did-you-mean
+    errors from the registry."""
+    if name is None:
         return None
     if isinstance(name, Transport):
         return name
-    if name == "int8":
-        return Int8Transport(levels=1, error_feedback=True)
-    if name == "int8x2":
-        return Int8Transport(levels=2, error_feedback=False)
-    if name == "topk":
-        return TopKTransport(frac=topk_frac, error_feedback=True)
-    raise ValueError(f"transport {name!r} not in {TRANSPORTS}")
+    return TRANSPORT_REGISTRY.get(name)(topk_frac=topk_frac)
+
+
+# builtin registrations — factory signature: f(*, topk_frac, **kw)
+register_transport("none", lambda **kw: None)
+register_transport("int8",
+                   lambda **kw: Int8Transport(levels=1, error_feedback=True))
+register_transport("int8x2",
+                   lambda **kw: Int8Transport(levels=2, error_feedback=False))
+register_transport(
+    "topk",
+    lambda *, topk_frac=0.1, **kw: TopKTransport(frac=topk_frac,
+                                                 error_feedback=True))

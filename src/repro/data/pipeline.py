@@ -29,7 +29,11 @@ from repro.data.synthetic import FederatedData
 
 def sample_clients(rng: np.random.Generator, data: FederatedData,
                    n: int) -> np.ndarray:
-    """Uniform client sampling without replacement (Algorithm 1, line 3)."""
+    """Uniform client sampling without replacement (Algorithm 1, line 3).
+
+    The historical draw; ``engine.sampling.UniformSampler`` consumes this
+    exact stream, and richer policies live behind the ``ClientSampler``
+    protocol (DESIGN.md §9.3)."""
     return rng.choice(data.num_clients, size=min(n, data.num_clients),
                       replace=False)
 
@@ -86,10 +90,17 @@ class BucketBatch:
 
 def bucket_batches(rng: np.random.Generator, data: FederatedData, *,
                    n_rounds: int, k: int, clients_per_round: int,
-                   batch_size: int, pad_to: Optional[int] = None) -> BucketBatch:
+                   batch_size: int, pad_to: Optional[int] = None,
+                   sampler=None,
+                   round_ids: Optional[Sequence[int]] = None) -> BucketBatch:
     """Draws EXACTLY the same rng stream as ``n_rounds`` sequential calls of
     sample_clients + round_batches + client_weights — the engine's bitwise
     parity with the seed per-round loop depends on this ordering.
+
+    ``sampler``: a ``ClientSampler`` deciding participation + aggregation
+    weights per round (None = the historical uniform draw, stream-exact);
+    ``round_ids``: the absolute 1-based round indices this bucket executes,
+    forwarded to round-indexed samplers (e.g. availability masks).
 
     Gathers sample rows directly into the preallocated ``(B, N, K, b, ...)``
     bucket arrays (``np.take(..., out=...)``): no per-round temporaries, no
@@ -98,6 +109,8 @@ def bucket_batches(rng: np.random.Generator, data: FederatedData, *,
     pad_to = pad_to or n_rounds
     if pad_to < n_rounds:
         raise ValueError(f"pad_to {pad_to} < n_rounds {n_rounds}")
+    if round_ids is not None and len(round_ids) < n_rounds:
+        raise ValueError(f"{len(round_ids)} round_ids for {n_rounds} rounds")
     n = min(clients_per_round, data.num_clients)
     feat = data.client_x[0].shape[1:]
     lead = (pad_to, n, k, batch_size)
@@ -105,7 +118,13 @@ def bucket_batches(rng: np.random.Generator, data: FederatedData, *,
     ys = np.empty(lead + data.client_y[0].shape[1:], data.client_y[0].dtype)
     weights = np.empty((pad_to, n), np.float32)
     for i in range(n_rounds):
-        ids = sample_clients(rng, data, clients_per_round)
+        if sampler is None:
+            ids = sample_clients(rng, data, clients_per_round)
+            w = client_weights(data, ids)
+        else:
+            ids, w = sampler.round(
+                rng, data, clients_per_round,
+                round_ids[i] if round_ids is not None else None)
         for j, c in enumerate(ids):
             n_c = len(data.client_y[c])
             idx = rng.integers(0, n_c, size=k * batch_size)
@@ -114,7 +133,7 @@ def bucket_batches(rng: np.random.Generator, data: FederatedData, *,
             np.take(data.client_y[c], idx, axis=0,
                     out=ys[i, j].reshape((k * batch_size,)
                                          + data.client_y[0].shape[1:]))
-        weights[i] = client_weights(data, ids)
+        weights[i] = w
     for i in range(n_rounds, pad_to):     # masked-out padding rounds
         xs[i], ys[i], weights[i] = xs[n_rounds - 1], ys[n_rounds - 1], \
             weights[n_rounds - 1]
@@ -136,28 +155,36 @@ class _BuilderBase:
     ``place_fn`` (optional): applied to each finished BucketBatch — the
     execution backend's host->device placement (``device_put`` with the
     backend's client sharding). On the threaded builder it runs on the
-    worker, so the H2D transfer of bucket r+1 overlaps bucket r's compute."""
+    worker, so the H2D transfer of bucket r+1 overlaps bucket r's compute.
+
+    ``sampler`` (optional ``ClientSampler``): participation + weight policy
+    per round; None keeps the historical uniform draw stream-exactly.
+    ``submit(..., rounds=...)`` forwards the bucket's absolute round indices
+    to round-indexed samplers."""
 
     def __init__(self, data: FederatedData, clients_per_round: int,
                  batch_size: int,
                  rng: "Union[int, np.random.Generator]",
                  place_fn: Optional[Callable[["BucketBatch"],
-                                             "BucketBatch"]] = None):
+                                             "BucketBatch"]] = None,
+                 sampler=None):
         self.data = data
         self.clients_per_round = clients_per_round
         self.batch_size = batch_size
         self._rng = np.random.default_rng(rng)
         self._place_fn = place_fn
+        self._sampler = sampler
 
-    def _build(self, n_rounds: int, k: int,
-               pad_to: Optional[int]) -> BucketBatch:
+    def _build(self, n_rounds: int, k: int, pad_to: Optional[int],
+               rounds: Optional[Sequence[int]] = None) -> BucketBatch:
         bb = bucket_batches(self._rng, self.data, n_rounds=n_rounds, k=k,
                             clients_per_round=self.clients_per_round,
-                            batch_size=self.batch_size, pad_to=pad_to)
+                            batch_size=self.batch_size, pad_to=pad_to,
+                            sampler=self._sampler, round_ids=rounds)
         return self._place_fn(bb) if self._place_fn is not None else bb
 
-    def submit(self, n_rounds: int, k: int,
-               pad_to: Optional[int] = None) -> None:
+    def submit(self, n_rounds: int, k: int, pad_to: Optional[int] = None,
+               rounds: Optional[Sequence[int]] = None) -> None:
         raise NotImplementedError
 
     def get(self) -> BucketBatch:
@@ -174,8 +201,8 @@ class SyncBatchBuilder(_BuilderBase):
         super().__init__(*args, **kw)
         self._pending: List = []
 
-    def submit(self, n_rounds, k, pad_to=None):
-        self._pending.append((n_rounds, k, pad_to))
+    def submit(self, n_rounds, k, pad_to=None, rounds=None):
+        self._pending.append((n_rounds, k, pad_to, rounds))
 
     def get(self):
         return self._build(*self._pending.pop(0))
@@ -193,9 +220,9 @@ class BatchPrefetcher(_BuilderBase):
 
     def __init__(self, data: FederatedData, clients_per_round: int,
                  batch_size: int, rng: "Union[int, np.random.Generator]",
-                 depth: int = 1, place_fn=None):
+                 depth: int = 1, place_fn=None, sampler=None):
         super().__init__(data, clients_per_round, batch_size, rng,
-                         place_fn=place_fn)
+                         place_fn=place_fn, sampler=sampler)
         self._req: "queue.Queue" = queue.Queue()
         self._out: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
@@ -219,8 +246,8 @@ class BatchPrefetcher(_BuilderBase):
                 except queue.Full:
                     continue
 
-    def submit(self, n_rounds, k, pad_to=None):
-        self._req.put((n_rounds, k, pad_to))
+    def submit(self, n_rounds, k, pad_to=None, rounds=None):
+        self._req.put((n_rounds, k, pad_to, rounds))
 
     def get(self):
         status, item = self._out.get()
@@ -241,6 +268,8 @@ class BatchPrefetcher(_BuilderBase):
 
 def make_builder(data: FederatedData, clients_per_round: int, batch_size: int,
                  rng: "Union[int, np.random.Generator]", *,
-                 background: bool = True, place_fn=None) -> _BuilderBase:
+                 background: bool = True, place_fn=None,
+                 sampler=None) -> _BuilderBase:
     cls = BatchPrefetcher if background else SyncBatchBuilder
-    return cls(data, clients_per_round, batch_size, rng, place_fn=place_fn)
+    return cls(data, clients_per_round, batch_size, rng, place_fn=place_fn,
+               sampler=sampler)

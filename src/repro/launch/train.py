@@ -1,53 +1,46 @@
-"""Production federated-training launcher.
+"""Production federated-training launcher, driven by an ExperimentSpec.
 
-Composes: an assigned architecture config (optionally reduced for CPU), the
-synthetic federated data pipeline, the FedAvg engine with the paper's decay
-schedules, the Eq. 3-5 runtime model, and checkpointing.
+Two front doors, one composition root (``repro.api.build``):
 
+  * declarative — ``--spec examples/specs/local-int8-decayK.json`` plus any
+    number of ``--set section.field=value`` dotted-path overrides;
+  * legacy flags — the historical ``--arch/--rounds/--k-schedule/...``
+    surface, now a thin translation layer that builds the SAME spec
+    (bitwise-identical runs to the pre-spec launcher).
+
+The resolved spec is printed before the run (and is itself valid ``--spec``
+input), so every invocation leaves a reproducible artifact. With
+``--checkpoint`` the final state is saved with the spec embedded —
+``FederatedExperiment.restore(path)`` rebuilds the exact trainer.
+
+    PYTHONPATH=src python -m repro.launch.train --spec run.json \\
+        --set fed.rounds=100 --set transport.name=topk
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \\
         --rounds 50 --k-schedule rounds --checkpoint /tmp/ckpt
-
-The trainer is driven through an execution backend (DESIGN.md §7):
-``--backend local`` is the single-device engine; ``--backend mesh`` runs the
-SAME FedAvgTrainer (K-bucketed scans, server optimizers, robust
-aggregators) through a ``MeshBackend`` — the client axis is placed on the
-mesh ``data`` axis, batches are ``device_put`` with the client sharding from
-the prefetch thread, and ``--aggregator kernel`` routes aggregation through
-the client-sharded Pallas reduction. On CPU the mesh is the degenerate
-(devices x 1) data x model mesh, so the identical code path that runs on a
-pod is exercised end-to-end here.
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-import numpy as np
-
-from repro.checkpoint import save_checkpoint
-from repro.configs import ARCHS, get_arch
-from repro.configs.base import FedConfig, RuntimeModelConfig
-from repro.core import FedAvgTrainer, RuntimeModel
-from repro.core.engine import MeshBackend
-from repro.data import make_lm_clients
-from repro.models import registry
+from repro.api import ExperimentSpec, build
+from repro.configs import ARCHS
 
 
-def make_backend(name: str, strategy: str, groups: int):
-    """``local`` -> None (the engine's LocalBackend default); ``mesh`` ->
-    a MeshBackend on a (devices, 1) data x model mesh."""
-    if name == "local":
-        return None
-    n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
-    return MeshBackend(mesh, strategy=strategy, groups=groups)
-
-
-def main():
-    ap = argparse.ArgumentParser()
+def make_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    # --- declarative front door -------------------------------------
+    ap.add_argument("--spec", default=None, metavar="FILE.json",
+                    help="load a full ExperimentSpec; legacy flags below "
+                         "are ignored except --rounds/--checkpoint")
+    ap.add_argument("--set", action="append", default=[], metavar="PATH=V",
+                    dest="overrides",
+                    help="dotted-path spec override, repeatable "
+                         "(e.g. --set fed.k0=4 --set transport.name=int8)")
+    # --- legacy flags (translated to a spec) ------------------------
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen1.5-0.5b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="round count (also applies on top of --spec)")
     ap.add_argument("--clients", type=int, default=24)
     ap.add_argument("--clients-per-round", type=int, default=6)
     ap.add_argument("--k0", type=int, default=8)
@@ -65,13 +58,16 @@ def main():
                     choices=("mean", "kernel", "median", "trimmed_mean"))
     ap.add_argument("--transport", default="none",
                     choices=("none", "int8", "int8x2", "topk"),
-                    help="client-delta wire codec (DESIGN.md §8): int8 = "
-                         "Q-KV int8 + server-side error feedback (~4x "
-                         "uplink); int8x2 = two-level int8 on the wire "
-                         "(~2x, no feedback state); topk = magnitude "
-                         "top-k + error feedback")
+                    help="client-delta wire codec (DESIGN.md §8)")
     ap.add_argument("--topk-frac", type=float, default=0.1,
                     help="kept coordinate fraction for --transport topk")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=("uniform", "weighted", "fixed_cohort",
+                             "availability"),
+                    help="client participation policy (DESIGN.md §9.3)")
+    ap.add_argument("--availability", type=float, default=0.9,
+                    help="per-round online probability for "
+                         "--sampler availability")
     ap.add_argument("--backend", default="local", choices=("local", "mesh"),
                     help="execution backend: single-device or GSPMD mesh")
     ap.add_argument("--strategy", default="parallel",
@@ -87,50 +83,83 @@ def main():
                     help="disable the background batch prefetch thread")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
 
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    n_params = registry.param_count(cfg)
-    print(f"[train] {cfg.name}: {n_params:,} params, "
-          f"K-schedule={args.k_schedule}, eta-schedule={args.eta_schedule}")
 
-    data = make_lm_clients(np.random.default_rng(args.seed),
-                           num_clients=args.clients, vocab=cfg.vocab_size,
-                           seq_len=args.seq)
-    model_loss = registry.loss_fn(cfg, moe_path="dense")
-    loss_fn = lambda p, b: model_loss(p, {"tokens": b["x"]})
+def spec_from_legacy_args(args) -> ExperimentSpec:
+    """Translate the historical flag surface into an ExperimentSpec.
 
-    fed = FedConfig(total_clients=args.clients,
-                    clients_per_round=args.clients_per_round,
-                    rounds=args.rounds, k0=args.k0, eta0=args.eta0,
-                    batch_size=args.batch_size,
-                    loss_window=max(args.rounds // 8, 3),
-                    k_schedule=args.k_schedule, eta_schedule=args.eta_schedule,
-                    k_quantize=args.k_quantize,
-                    server_optimizer=args.server_optimizer,
-                    aggregator=args.aggregator,
-                    transport=args.transport, topk_frac=args.topk_frac,
-                    bucket_rounds=args.bucket_rounds,
-                    feedback_bucket_rounds=args.feedback_bucket,
-                    prefetch=not args.no_prefetch, seed=args.seed)
-    rt = RuntimeModel(n_params * 32 / 1e6, RuntimeModelConfig(beta_seconds=0.05),
-                      fed.clients_per_round)
-    params = registry.init(jax.random.PRNGKey(args.seed), cfg)
-    backend = make_backend(args.backend, args.strategy, args.groups)
-    trainer = FedAvgTrainer(loss_fn, params, data, fed, rt, backend=backend)
+    The resulting build reproduces the pre-spec launcher bit-for-bit: same
+    data rng seeding, same param init, same FedConfig derivation (including
+    the ``loss_window = max(rounds // 8, 3)`` rule and the beta=0.05s
+    runtime constant)."""
+    rounds = args.rounds if args.rounds is not None else 50
+    return ExperimentSpec().with_overrides(
+        f"model.arch={args.arch}", f"model.reduced={args.reduced}",
+        f"data.clients={args.clients}", f"data.seq_len={args.seq}",
+        f"data.seed={args.seed}",
+        f"fed.rounds={rounds}",
+        f"fed.clients_per_round={args.clients_per_round}",
+        f"fed.k0={args.k0}", f"fed.eta0={args.eta0}",
+        f"fed.batch_size={args.batch_size}",
+        f"fed.loss_window={max(rounds // 8, 3)}",
+        f"fed.k_schedule={args.k_schedule}",
+        f"fed.eta_schedule={args.eta_schedule}",
+        f"fed.k_quantize={args.k_quantize}",
+        f"fed.server_optimizer={args.server_optimizer}",
+        f"fed.aggregator={args.aggregator}",
+        f"fed.bucket_rounds={args.bucket_rounds}",
+        f"fed.feedback_bucket_rounds={args.feedback_bucket}",
+        f"fed.prefetch={not args.no_prefetch}",
+        f"fed.seed={args.seed}",
+        f"sampler.name={args.sampler}",
+        f"sampler.availability={args.availability}",
+        f"transport.name={args.transport}",
+        f"transport.topk_frac={args.topk_frac}",
+        f"backend.name={args.backend}", f"backend.strategy={args.strategy}",
+        f"backend.groups={args.groups}",
+        "runtime.beta_seconds=0.05")
+
+
+def resolve_spec(args) -> ExperimentSpec:
+    if args.spec:
+        spec = ExperimentSpec.load(args.spec)
+        if args.rounds is not None:
+            spec = spec.with_overrides(f"fed.rounds={args.rounds}")
+    else:
+        spec = spec_from_legacy_args(args)
+    if args.overrides:
+        spec = spec.with_overrides(*args.overrides)
+    return spec
+
+
+def main(argv=None):
+    args = make_parser().parse_args(argv)
+    spec = resolve_spec(args).validate()
+    print("[train] resolved spec:")
+    print(spec.to_json())
+
+    exp = build(spec)
+    trainer = exp.trainer
+    rounds = spec.fed.rounds
+    print(f"[train] {exp.label}: K-schedule={spec.fed.k_schedule}, "
+          f"eta-schedule={spec.fed.eta_schedule}, "
+          f"sampler={spec.sampler.name}, backend={spec.backend.name}")
     if trainer.engine.transport is not None:
-        print(f"[train] transport={args.transport}: uplink "
+        rt = trainer.runtime
+        ef = trainer.engine.transport.ef_slots
+        print(f"[train] transport={spec.transport.name}: uplink "
               f"{rt.uplink_compression:.2f}x compressed "
               f"({rt.uplink_mbit_per_client:.2f} of {rt.size:.2f} mbit "
-              f"per client-round)")
-    h = trainer.run(args.rounds, verbose=False)
-    print(f"[train] engine[{args.backend}]: {trainer.compile_count} bucket "
-          f"executable(s) compiled, {trainer.engine.dispatch_count} "
-          f"dispatch(es) for {args.rounds} rounds")
-    step = max(args.rounds // 10, 1)
-    for i in range(0, args.rounds, step):
+              f"per client-round)"
+              + (f", per-client EF x{ef}" if ef else ""))
+
+    h = exp.run()
+    print(f"[train] engine[{spec.backend.name}]: {trainer.compile_count} "
+          f"bucket executable(s) compiled, {trainer.engine.dispatch_count} "
+          f"dispatch(es) for {rounds} rounds")
+    step = max(rounds // 10, 1)
+    for i in range(0, rounds, step):
         print(f"[train] round {h.rounds[i]:4d} K={h.k[i]:3d} "
               f"eta={h.eta[i]:.4f} loss={h.train_loss[i]:.4f} "
               f"simW={h.wall_clock_s[i]:.0f}s steps={h.sgd_steps[i]}")
@@ -139,11 +168,8 @@ def main():
           f"simulated wall-clock {h.wall_clock_s[-1]:.0f}s, "
           f"uplink {h.uplink_mbit[-1]:.0f} mbit")
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, trainer.params,
-                        meta={"arch": cfg.name, "rounds": args.rounds,
-                              "k_schedule": args.k_schedule,
-                              "final_loss": h.train_loss[-1]})
-        print(f"[train] checkpoint -> {args.checkpoint}")
+        exp.save(args.checkpoint)
+        print(f"[train] checkpoint (spec embedded) -> {args.checkpoint}")
 
 
 if __name__ == "__main__":

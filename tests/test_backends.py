@@ -131,12 +131,14 @@ def test_sharded_fedavg_reduce_matches_mean(host_mesh):
 
 
 def test_mesh_kernel_avg_trains_and_matches_mean(femnist_setup, host_mesh):
-    """use_kernel_avg through the mesh path == mean aggregation (fp tol)."""
+    """aggregator='kernel' through the mesh path == mean aggregation (fp tol)."""
+    import dataclasses
     task, data, loss_fn, params = femnist_setup
     fed = FedConfig(total_clients=16, clients_per_round=6, rounds=4, k0=3,
                     eta0=0.3, batch_size=8, k_schedule="fixed", seed=0)
     rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
-    tr_k = FedAvgTrainer(loss_fn, params, data, fed, rt, use_kernel_avg=True,
+    tr_k = FedAvgTrainer(loss_fn, params, data,
+                         dataclasses.replace(fed, aggregator="kernel"), rt,
                          backend=MeshBackend(host_mesh, strategy="parallel"))
     tr_m = FedAvgTrainer(loss_fn, params, data, fed, rt)
     tr_k.run(4)

@@ -75,8 +75,8 @@ def test_kernel_aggregation_matches_einsum():
     task = get_paper_task("femnist")
     params = small.init_task_model(jax.random.PRNGKey(1), task)
     loss_fn = lambda p, b: small.task_loss(p, task, b)
-    fn_ref, _ = make_round_fn(loss_fn, use_kernel_avg=False)
-    fn_ker, _ = make_round_fn(loss_fn, use_kernel_avg=True)
+    fn_ref, _ = make_round_fn(loss_fn, aggregator="mean")
+    fn_ker, _ = make_round_fn(loss_fn, aggregator="kernel")
     rng = jax.random.PRNGKey(2)
     batches = {"x": jax.random.normal(rng, (4, 2, 2, 784)),
                "y": jax.random.randint(rng, (4, 2, 2), 0, 62)}

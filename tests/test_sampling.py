@@ -1,0 +1,264 @@
+"""ClientSampler subsystem tests (DESIGN.md §9.3).
+
+Seed-exactness of the default sampler against the historical stream, the
+behavioural contracts of the other policies, and the per-client vs
+server-aggregate error-feedback equivalence in the single-client case."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_paper_task
+from repro.configs.base import FedConfig
+from repro.core.engine.round import RoundEngine
+from repro.core.engine.sampling import (AvailabilitySampler,
+                                        FixedCohortSampler, UniformSampler,
+                                        WeightedSampler, get_sampler,
+                                        make_sampler)
+from repro.core.engine.transport import Int8Transport, TopKTransport
+from repro.data import make_paper_task, pipeline
+from repro.models import small
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=12, samples_per_client=20)
+
+
+# ---------------------------------------------------------------------------
+# uniform: stream-exact with the historical pipeline draw
+# ---------------------------------------------------------------------------
+
+def test_uniform_sampler_seed_exact_vs_legacy_stream(data):
+    """UniformSampler must consume draw-for-draw the rng stream of the
+    historical sample_clients + client_weights pair — the bitwise parity of
+    every pre-sampler run depends on it."""
+    r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+    s = UniformSampler()
+    for _ in range(20):
+        ids_legacy = pipeline.sample_clients(r1, data, 5)
+        w_legacy = pipeline.client_weights(data, ids_legacy)
+        ids, w = s.round(r2, data, 5)
+        np.testing.assert_array_equal(ids_legacy, ids)
+        np.testing.assert_array_equal(w_legacy, w)
+        assert r1.bit_generator.state == r2.bit_generator.state
+
+
+def test_bucket_batches_sampler_none_equals_uniform(data):
+    kw = dict(n_rounds=4, k=3, clients_per_round=5, batch_size=4)
+    a = pipeline.bucket_batches(np.random.default_rng(3), data, **kw)
+    b = pipeline.bucket_batches(np.random.default_rng(3), data,
+                                sampler=UniformSampler(),
+                                round_ids=[1, 2, 3, 4], **kw)
+    np.testing.assert_array_equal(a.batches["x"], b.batches["x"])
+    np.testing.assert_array_equal(a.batches["y"], b.batches["y"])
+    np.testing.assert_array_equal(a.weights, b.weights)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def test_fixed_cohort_constant_and_ordered(data):
+    s = FixedCohortSampler(cohort=(3, 1, 8))
+    rng = np.random.default_rng(0)
+    for r in range(5):
+        ids, w = s.round(rng, data, 3, round_idx=r + 1)
+        np.testing.assert_array_equal(ids, [3, 1, 8])
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    assert s.stateful_cohort
+    # default cohort = first n clients
+    ids, _ = FixedCohortSampler().round(rng, data, 4)
+    np.testing.assert_array_equal(ids, [0, 1, 2, 3])
+    with pytest.raises(ValueError, match="cohort has 3"):
+        FixedCohortSampler(cohort=(0, 1, 2)).sample(rng, data, 4)
+    with pytest.raises(ValueError, match="out of range"):
+        FixedCohortSampler(cohort=(0, 99, 2)).sample(rng, data, 3)
+
+
+def test_weighted_sampler_prefers_large_clients():
+    # client 0 owns 10x the data of everyone else
+    counts = [200] + [20] * 9
+    rng = np.random.default_rng(0)
+
+    class D:
+        num_clients = 10
+        client_y = [np.zeros(c) for c in counts]
+
+    s = WeightedSampler()
+    hits = sum(0 in s.sample(rng, D(), 3) for _ in range(300))
+    assert hits > 250        # ~10x inclusion mass => near-certain presence
+    ids = s.sample(rng, D(), 3)
+    assert len(set(ids.tolist())) == 3          # without replacement
+
+
+def test_availability_masks_and_zero_weights_shortfall(data):
+    rng = np.random.default_rng(0)
+    s = AvailabilitySampler(prob=0.25)
+    saw_shortfall = False
+    for r in range(50):
+        ids, w = s.round(rng, data, 6, round_idx=r + 1)
+        assert len(ids) == 6 and len(set(ids.tolist())) == 6
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+        if (w == 0).any():
+            saw_shortfall = True
+    assert saw_shortfall     # p=.25 of 12 clients: shortfalls must occur
+    with pytest.raises(ValueError, match="prob"):
+        AvailabilitySampler(prob=0.0)
+
+
+def test_availability_rejects_weight_ignoring_aggregator(data):
+    """Shortfall padding encodes participation in the weights; a robust
+    aggregator would treat padded offline clients as full participants —
+    the trainer must refuse at construction (not just spec validation)."""
+    from repro.configs.base import RuntimeModelConfig
+    from repro.core import FedAvgTrainer, RuntimeModel
+    task = get_paper_task("femnist")
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    rt = RuntimeModel(task.model_size_mb, RuntimeModelConfig(), 4)
+    fed = FedConfig(total_clients=12, clients_per_round=4, rounds=2, k0=2,
+                    eta0=0.3, batch_size=4, loss_window=3,
+                    sampler="availability", aggregator="median")
+    with pytest.raises(ValueError, match="weight-respecting"):
+        FedAvgTrainer(loss_fn, params, data, fed, rt)
+
+
+def test_get_sampler_registry_and_fed_config():
+    fed = FedConfig(sampler="fixed_cohort", cohort=(2, 4), clients_per_round=2)
+    s = make_sampler(fed)
+    assert isinstance(s, FixedCohortSampler) and s.cohort == (2, 4)
+    fed = FedConfig(sampler="availability", availability=0.5)
+    s = make_sampler(fed)
+    assert isinstance(s, AvailabilitySampler) and s.prob == 0.5
+    assert isinstance(get_sampler(UniformSampler()), UniformSampler)
+    with pytest.raises(KeyError, match="Did you mean"):
+        make_sampler(FedConfig(sampler="uniformm"))
+
+
+# ---------------------------------------------------------------------------
+# per-client error feedback (fixed cohorts) vs server-aggregate EF
+# ---------------------------------------------------------------------------
+
+def _run_engine(transport, params, loss_fn, buckets):
+    eng = RoundEngine(loss_fn, transport=transport)
+    p = params
+    ss = eng.init_server_state(params)
+    eng.init_transport_state(params)
+    for bb, w, etas, act in buckets:
+        p, firsts, _, ss = eng.run_bucket(p, bb, w, etas, act, ss)
+    return p, np.asarray(firsts), eng.transport_state
+
+
+@pytest.mark.parametrize("codec", ["int8", "topk"])
+def test_per_client_ef_recursion_exact_single_client(codec):
+    """With one client at weight 1 the per-client residual recursion IS the
+    server-aggregate recursion. Evaluated un-jitted (no XLA fma fusion of
+    the aggregate path's weighted-truth einsum), the two ``aggregate``
+    formulations are bitwise identical across iterations."""
+    rng = np.random.default_rng(5)
+    params = {"w": jnp.asarray(rng.normal(size=(40,)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(8,)).astype(np.float32))}
+    w = jnp.ones((1,), jnp.float32)
+
+    def mk():
+        return (Int8Transport(levels=1, error_feedback=True) if codec == "int8"
+                else TopKTransport(frac=0.3, error_feedback=True))
+
+    t_agg, t_pc = mk(), mk().with_ef_slots(1)
+    p_agg = p_pc = params
+    s_agg, s_pc = t_agg.init_state(params), t_pc.init_state(params)
+    for _ in range(4):
+        stack = jax.tree.map(
+            lambda p: p[None]
+            + jnp.asarray(rng.normal(size=(1,) + p.shape)
+                          .astype(np.float32)), params)
+        p_agg, s_agg = t_agg.aggregate(None, p_agg, stack, w, s_agg)
+        p_pc, s_pc = t_pc.aggregate(None, p_pc, stack, w, s_pc)
+        for a, b in zip(jax.tree.leaves(p_agg), jax.tree.leaves(p_pc)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(s_agg), jax.tree.leaves(s_pc)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[0])
+
+
+@pytest.mark.parametrize("codec", ["int8", "topk"])
+def test_per_client_ef_engine_single_client_parity(codec):
+    """Through the jitted engine: round 1 (zero residuals) is bitwise; the
+    full multi-round run agrees to the quantization-discontinuity regime of
+    DESIGN.md §8.5 (XLA fuses the aggregate path's einsum-minus-hat into an
+    fma, and a one-ulp residual difference can flip an int8/top-k code)."""
+    task = get_paper_task("femnist")
+    params = small.init_task_model(jax.random.PRNGKey(1), task)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    rng = np.random.default_rng(5)
+
+    def buckets(n, B=2):
+        out = []
+        r = np.random.default_rng(5)
+        for _ in range(n):
+            k, b = 2, 3
+            out.append((
+                {"x": jnp.asarray(r.normal(size=(B, 1, k, b, 784))
+                                  .astype(np.float32)),
+                 "y": jnp.asarray(r.integers(0, 62, size=(B, 1, k, b))
+                                  .astype(np.int32))},
+                jnp.ones((B, 1), jnp.float32),
+                np.full(B, 0.2, np.float32), np.ones(B, bool)))
+        return out
+
+    def mk():
+        return (Int8Transport(levels=1, error_feedback=True) if codec == "int8"
+                else TopKTransport(frac=0.3, error_feedback=True))
+
+    # one single-round bucket, zero starting residual: bitwise equal
+    p_agg, f_agg, _ = _run_engine(mk(), params, loss_fn, buckets(1, B=1))
+    p_pc, f_pc, _ = _run_engine(mk().with_ef_slots(1), params, loss_fn,
+                                buckets(1, B=1))
+    np.testing.assert_array_equal(f_agg, f_pc)
+    for a, b in zip(jax.tree.leaves(p_agg), jax.tree.leaves(p_pc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # multi-round: training-sanity closeness only
+    p_agg, f_agg, _ = _run_engine(mk(), params, loss_fn, buckets(3))
+    p_pc, f_pc, _ = _run_engine(mk().with_ef_slots(1), params, loss_fn,
+                                buckets(3))
+    np.testing.assert_allclose(f_agg, f_pc, rtol=1e-2, atol=5e-3)
+    for a, b in zip(jax.tree.leaves(p_agg), jax.tree.leaves(p_pc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_ef_slots_state_shape_and_signature():
+    t = Int8Transport(levels=1, error_feedback=True)
+    t4 = t.with_ef_slots(4)
+    params = {"w": jnp.zeros((5, 3))}
+    assert jax.tree.leaves(t.init_state(params))[0].shape == (5, 3)
+    assert jax.tree.leaves(t4.init_state(params))[0].shape == (4, 5, 3)
+    assert t.signature() != t4.signature()     # distinct compile-cache keys
+    # no feedback state => no slots
+    t2 = Int8Transport(levels=2, error_feedback=False)
+    assert t2.with_ef_slots(4) is t2
+
+
+def test_fixed_cohort_trainer_switches_to_per_client_ef(data):
+    from repro.configs.base import RuntimeModelConfig
+    from repro.core import FedAvgTrainer, RuntimeModel
+    task = get_paper_task("femnist")
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    rt = RuntimeModel(task.model_size_mb, RuntimeModelConfig(), 4)
+    fed = FedConfig(total_clients=12, clients_per_round=4, rounds=3, k0=2,
+                    eta0=0.3, batch_size=4, loss_window=3, transport="int8",
+                    sampler="fixed_cohort")
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    assert tr.engine.transport.ef_slots == 4
+    h = tr.run(3)
+    assert np.isfinite(h.train_loss).all()
+    lead = jax.tree.leaves(tr.engine.transport_state)[0].shape[0]
+    assert lead == 4
+    # uniform sampling keeps the aggregate residual
+    tr2 = FedAvgTrainer(loss_fn, params, data,
+                        FedConfig(total_clients=12, clients_per_round=4,
+                                  rounds=3, k0=2, eta0=0.3, batch_size=4,
+                                  loss_window=3, transport="int8"), rt)
+    assert tr2.engine.transport.ef_slots is None
