@@ -8,6 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * table4_*   — Table 4: relative SGD steps + wall-clock speedup
   * roofline_* — per (arch x shape x mesh) roofline terms from the dry-run
   * kern_*     — Pallas kernel micro-benchmarks (interpret mode)
+
+Schedule/transport/downlink suites build their trainers through the
+declarative ``ExperimentSpec`` front door (``repro.api.build``) — the spec
+is the benchmark configuration, not hand-assembled trainer wiring
+(DESIGN.md §9; see ``schedules_bench._task_spec``).
 """
 import argparse
 import sys

@@ -8,6 +8,14 @@ accuracy (Fig. 2), and SGD steps relative to K-eta-fixed (Table 4).
 Also benchmarks the K-bucketed round engine against the seed per-round loop
 (``engine_*`` rows): real rounds/sec speedup and compile count vs. the
 K-quantization grid bound (DESIGN.md §6.4).
+
+Schedule, transport and downlink rows construct their trainers through the
+declarative ``ExperimentSpec`` front door (``build(spec)``), not hand-built
+``FedConfig``/``FedAvgTrainer`` wiring — the spec is the configuration
+artifact (ROADMAP: benchmarks stop hand-building trainers). The engine
+speedup/backend rows still construct directly: they measure engine
+internals (the seed parity oracle, injected backends) the facade
+deliberately does not expose.
 """
 from __future__ import annotations
 
@@ -17,6 +25,7 @@ from typing import Dict, List, Tuple
 import jax
 import numpy as np
 
+from repro.api import ExperimentSpec, build
 from repro.configs import get_paper_task
 from repro.configs.base import FedConfig
 from repro.core import (FedAvgTrainer, RuntimeModel, make_eval_fn,
@@ -39,36 +48,44 @@ SCHEDULES = [
 QUICK = dict(rounds=40, clients=30, per_round=8, k0=10, samples=30)
 
 
+def _task_spec(task_name: str, rounds: int, seed: int) -> ExperimentSpec:
+    """The CPU-scale paper-task base spec (QUICK knobs + the task's own
+    Table 1/2 runtime constants and eta0, exactly what the hand-built
+    ``FedConfig``/``RuntimeModel`` wiring used to assemble)."""
+    task = get_paper_task(task_name)
+    rt = task.runtime
+    return ExperimentSpec().with_overrides(
+        "data.kind=paper", f"data.task={task_name}",
+        f"data.clients={QUICK['clients']}",
+        f"data.samples_per_client={QUICK['samples']}", f"data.seed={seed}",
+        f"fed.clients_per_round={QUICK['per_round']}", f"fed.rounds={rounds}",
+        f"fed.k0={QUICK['k0']}", f"fed.eta0={task.fed.eta0}",
+        f"fed.batch_size={min(task.fed.batch_size, 16)}",
+        f"fed.loss_window={max(rounds // 8, 3)}", f"fed.seed={seed}",
+        f"runtime.download_mbps={rt.download_mbps}",
+        f"runtime.upload_mbps={rt.upload_mbps}",
+        f"runtime.beta_seconds={rt.beta_seconds}")
+
+
 def run_task(task_name: str, rounds: int, *, seed: int = 0,
              verbose: bool = False) -> List[Dict]:
-    task = get_paper_task(task_name)
-    data = make_paper_task(task_name, np.random.default_rng(seed),
-                           num_clients=QUICK["clients"],
-                           samples_per_client=QUICK["samples"])
-    loss_fn = lambda p, b: small.task_loss(p, task, b)
     results = []
     for name, ksch, esch in SCHEDULES:
-        fed = FedConfig(total_clients=data.num_clients,
-                        clients_per_round=QUICK["per_round"], rounds=rounds,
-                        k0=QUICK["k0"], eta0=task.fed.eta0,
-                        batch_size=min(task.fed.batch_size, 16),
-                        loss_window=max(rounds // 8, 3),
-                        plateau_patience=3,
-                        k_schedule=ksch, eta_schedule=esch, seed=seed)
-        params = small.init_task_model(jax.random.PRNGKey(seed), task)
-        rt = RuntimeModel(task.model_size_mb, task.runtime,
-                          fed.clients_per_round)
+        spec = _task_spec(task_name, rounds, seed).with_overrides(
+            f"fed.k_schedule={ksch}", f"fed.eta_schedule={esch}",
+            "fed.plateau_patience=3",
+            f"fed.eval_every={max(rounds // 8, 1)}")
+        exp = build(spec)      # data/param construction outside the clock
         t0 = time.time()
-        tr = FedAvgTrainer(loss_fn, params, data, fed, rt,
-                           eval_fn=make_eval_fn(loss_fn, data))
-        h = tr.run(rounds, eval_every=max(rounds // 8, 1))
-        rel = h.sgd_steps[-1] / (QUICK["k0"] * rounds * fed.clients_per_round)
+        h = exp.run()
+        rel = h.sgd_steps[-1] / (QUICK["k0"] * rounds * QUICK["per_round"])
         results.append({
             "task": task_name, "schedule": name,
             "min_train_loss": h.min_train_loss[-1],
             "max_val_acc": h.max_val_acc[-1] if h.max_val_acc else 0.0,
             "sim_wall_clock_s": h.wall_clock_s[-1],
             "uplink_mbit": h.uplink_mbit[-1],
+            "downlink_mbit": h.downlink_mbit[-1],
             "relative_sgd_steps": rel,
             "bench_s": time.time() - t0,
         })
@@ -200,25 +217,14 @@ def run_transport_compare(rounds: int = 30, *, task_name: str = "femnist",
     Single-level int8 rides ~1.0003 bytes/param (value plane + one f32
     scale per leaf), i.e. the full 4x vs f32 up to per-leaf metadata.
     """
-    task = get_paper_task(task_name)
-    data = make_paper_task(task_name, np.random.default_rng(seed),
-                           num_clients=QUICK["clients"],
-                           samples_per_client=QUICK["samples"])
-    loss_fn = lambda p, b: small.task_loss(p, task, b)
-    params0 = small.init_task_model(jax.random.PRNGKey(seed), task)
     out: List[Dict] = []
     for name in ("none", "int8", "topk"):
-        fed = FedConfig(total_clients=data.num_clients,
-                        clients_per_round=QUICK["per_round"], rounds=rounds,
-                        k0=QUICK["k0"], eta0=task.fed.eta0,
-                        batch_size=min(task.fed.batch_size, 16),
-                        k_schedule="rounds", k_quantize=True,
-                        transport=name, topk_frac=topk_frac, seed=seed)
-        rt = RuntimeModel(task.model_size_mb, task.runtime,
-                          fed.clients_per_round)
+        spec = _task_spec(task_name, rounds, seed).with_overrides(
+            "fed.k_schedule=rounds", "fed.k_quantize=true",
+            f"transport.name={name}", f"transport.topk_frac={topk_frac}")
+        exp = build(spec)      # data/param construction outside the clock
         t0 = time.time()
-        tr = FedAvgTrainer(loss_fn, params0, data, fed, rt)
-        h = tr.run(rounds)
+        h = exp.run()
         out.append({
             "transport": name, "task": task_name,
             "final_loss": h.train_loss[-1],
@@ -236,6 +242,47 @@ def run_transport_compare(rounds: int = 30, *, task_name: str = "femnist",
                   f"loss={r['final_loss']:.4f} (d={r['dloss']:+.4f}) "
                   f"uplink={r['uplink_mbit']:.0f}mbit "
                   f"({r['uplink_x']:.2f}x less) "
+                  f"W={r['sim_wall_clock_s']:.0f}s")
+    return out
+
+
+def run_downlink_compare(rounds: int = 30, *, task_name: str = "femnist",
+                         seed: int = 0, verbose: bool = False) -> List[Dict]:
+    """Downlink broadcast codecs on the int8-uplink decayed-K config
+    (DESIGN.md §8.6): same task/schedule/seed per row, only
+    ``transport.downlink`` varies. Reports modelled downlink bytes-on-wire,
+    the reduction vs the uncompressed broadcast (int8's delta-vs-reference
+    payload is the full ~4x, so the ≥3x acceptance bar clears with
+    metadata to spare), the Eq. 5 wall-clock, and the final-loss delta —
+    the matched-final-loss contract is |dloss| <= 2% relative (the
+    downlink EF residual recovers the quantisation error across rounds;
+    rtol documented in DESIGN.md §8.6)."""
+    out: List[Dict] = []
+    for name in ("none", "int8", "topk"):
+        spec = _task_spec(task_name, rounds, seed).with_overrides(
+            "fed.k_schedule=rounds", "fed.k_quantize=true",
+            "transport.name=int8", f"transport.downlink={name}")
+        exp = build(spec)      # data/param construction outside the clock
+        t0 = time.time()
+        h = exp.run()
+        out.append({
+            "downlink": name, "task": task_name,
+            "final_loss": h.train_loss[-1],
+            "min_train_loss": h.min_train_loss[-1],
+            "uplink_mbit": h.uplink_mbit[-1],
+            "downlink_mbit": h.downlink_mbit[-1],
+            "downlink_x": out[0]["downlink_mbit"] / h.downlink_mbit[-1]
+            if out else 1.0,
+            "dloss": h.train_loss[-1] - out[0]["final_loss"] if out else 0.0,
+            "sim_wall_clock_s": h.wall_clock_s[-1],
+            "bench_s": time.time() - t0,
+        })
+        if verbose:
+            r = out[-1]
+            print(f"  downlink[{name:5s}] {task_name}: "
+                  f"loss={r['final_loss']:.4f} (d={r['dloss']:+.4f}) "
+                  f"downlink={r['downlink_mbit']:.0f}mbit "
+                  f"({r['downlink_x']:.2f}x less) "
                   f"W={r['sim_wall_clock_s']:.0f}s")
     return out
 
@@ -333,7 +380,8 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                          f"acc={r['max_val_acc']:.3f};"
                          f"relsteps={r['relative_sgd_steps']:.3f};"
                          f"simW={r['sim_wall_clock_s']:.0f}s;"
-                         f"upMbit={r['uplink_mbit']:.1f}"))
+                         f"upMbit={r['uplink_mbit']:.1f};"
+                         f"downMbit={r['downlink_mbit']:.1f}"))
     e = run_engine_speedup(rounds=rounds or 200, verbose=verbose)
     rows.append(("engine_bucketed_vs_seed", e["engine_s"] * 1e6,
                  f"speedup={e['speedup']:.2f}x;"
@@ -353,6 +401,15 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                      f"dloss={t['dloss']:+.4f};"
                      f"simW={t['sim_wall_clock_s']:.0f}s;"
                      f"upMbit={t['uplink_mbit']:.1f}"))
+    for t in run_downlink_compare(rounds=rounds or 30, verbose=verbose):
+        rows.append((f"downlink_{t['downlink']}_{t['task']}",
+                     t["bench_s"] * 1e6,
+                     f"downlink_x={t['downlink_x']:.2f};"
+                     f"loss={t['final_loss']:.4f};"
+                     f"dloss={t['dloss']:+.4f};"
+                     f"simW={t['sim_wall_clock_s']:.0f}s;"
+                     f"upMbit={t['uplink_mbit']:.1f};"
+                     f"downMbit={t['downlink_mbit']:.1f}"))
     for s in run_sampler_compare(rounds=rounds or 30, verbose=verbose):
         rows.append((f"sampler_{s['sampler']}_{s['task']}",
                      s["bench_s"] * 1e6,
@@ -367,19 +424,23 @@ def run(tasks=("sent140", "femnist"), rounds=None,
 
 
 def write_csv(rows: List[Tuple[str, float, str]], path: str) -> None:
-    """CSV with bytes-on-wire as a first-class column (parsed back out of
-    the ``upMbit=`` derived field; empty for wire-less rows)."""
+    """CSV with bytes-on-wire as first-class columns — both legs (parsed
+    back out of the ``upMbit=``/``downMbit=`` derived fields; empty for
+    wire-less rows)."""
     import csv
 
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(["name", "us_per_call", "uplink_mbit", "derived"])
+        w.writerow(["name", "us_per_call", "uplink_mbit", "downlink_mbit",
+                    "derived"])
         for name, us, derived in rows:
-            up = ""
+            up = down = ""
             for part in derived.split(";"):
                 if part.startswith("upMbit="):
                     up = part.split("=", 1)[1]
-            w.writerow([name, f"{us:.1f}", up, derived])
+                elif part.startswith("downMbit="):
+                    down = part.split("=", 1)[1]
+            w.writerow([name, f"{us:.1f}", up, down, derived])
 
 
 if __name__ == "__main__":

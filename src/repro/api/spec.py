@@ -96,6 +96,7 @@ class SamplerSpec:
 class TransportSpec:
     name: str = "none"             # none|int8|int8x2|topk (DESIGN.md §8)
     topk_frac: float = 0.1
+    downlink: str = "none"         # broadcast codec, same names (§8.6)
 
 
 @dataclass(frozen=True)
@@ -296,6 +297,7 @@ class ExperimentSpec:
                 (SERVER_OPTIMIZER_REGISTRY, "fed.server_optimizer",
                  f.server_optimizer),
                 (TRANSPORT_REGISTRY, "transport.name", t.name),
+                (TRANSPORT_REGISTRY, "transport.downlink", t.downlink),
                 (SAMPLER_REGISTRY, "sampler.name", s.name),
                 (BACKEND_REGISTRY, "backend.name", b.name)):
             if name not in reg:

@@ -107,6 +107,26 @@ class ExecutionBackend:
             return jax.tree.map(jnp.asarray, state)
         return self.place_params(state)
 
+    def place_downlink_state(self, state):
+        """Downlink broadcast state (DESIGN.md §8.6): the reference params
+        and the downlink EF residual are both params-shaped, so each rides
+        the params placement (sharding specs included)."""
+        if not state:                       # () when downlink is off
+            return state
+        res = state["res"]
+        return {"ref": self.place_params(state["ref"]),
+                "res": self.place_params(res) if jax.tree.leaves(res)
+                else res}
+
+    # ------------------------------------------------------------------
+    # codec binding
+    # ------------------------------------------------------------------
+    def bind_downlink(self, codec):
+        """Backend hook: bind a ``DownlinkCodec`` to the execution geometry
+        (MeshBackend routes decode-apply through the sharded kernel).
+        Identity on a single device; must accept/return None."""
+        return codec
+
     # ------------------------------------------------------------------
     # output sharding pinning
     # ------------------------------------------------------------------

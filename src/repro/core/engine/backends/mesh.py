@@ -347,6 +347,15 @@ class MeshBackend(ExecutionBackend):
             return jax.tree.map(lambda x: jax.device_put(x, rep), state)
         return self.place_params(state)
 
+    def bind_downlink(self, codec):
+        """Bound copy: ``decode_apply`` routes through the client-sharded
+        decode-apply kernel — the flat parameter vector is split over the
+        mesh client axes and each shard reconstructs its slice
+        (DESIGN.md §8.6)."""
+        if codec is None or self.mesh is None:
+            return codec
+        return codec.with_mesh(self.mesh, self.client_axes)
+
     def place_weights(self, weights) -> jnp.ndarray:
         w = jnp.asarray(weights, jnp.float32)
         if self.mesh is None:

@@ -35,7 +35,7 @@ from repro.core.engine.backends.base import (ExecutionBackend,
 from repro.core.engine.backends.local import (LocalBackend,
                                               make_parallel_round_core)
 from repro.core.engine.server import ServerOptimizer, get_server_optimizer
-from repro.core.engine.transport import get_transport
+from repro.core.engine.transport import get_downlink, get_transport
 
 PyTree = Any
 LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Any]
@@ -124,13 +124,21 @@ class RoundEngine:
                  trim_fraction: float = 0.1, server: str = "avg",
                  server_lr: float = 1.0,
                  backend: Optional[ExecutionBackend] = None,
-                 transport=None, topk_frac: float = 0.1):
+                 transport=None, topk_frac: float = 0.1, downlink=None):
         """``transport``: None/"none" keeps the historical param-space
         aggregation path bit-for-bit; "int8"/"int8x2"/"topk" (or a
         ``Transport`` instance) routes aggregation through the compressed
         delta pipeline (DESIGN.md §8). Compressed codecs require a linear
         aggregator; their error-feedback state is engine-owned
-        (``transport_state``) and threads through every bucket scan."""
+        (``transport_state``) and threads through every bucket scan.
+
+        ``downlink``: None/"none" keeps the historical uncompressed server
+        broadcast bit-for-bit; a codec name (or ``DownlinkCodec``) makes
+        every round reconstruct the client model as ``params_ref +
+        decode(payload)`` before local SGD (DESIGN.md §8.6). The broadcast
+        reference + downlink residual are engine-owned
+        (``downlink_state``) and thread the bucket scan carry alongside
+        the uplink state. Orthogonal to the aggregator choice."""
         self.backend = backend if backend is not None else LocalBackend()
         self.transport = get_transport(transport, topk_frac=topk_frac)
         if self.transport is not None and \
@@ -139,21 +147,27 @@ class RoundEngine:
             raise ValueError(
                 f"transport {self.transport.name!r} requires a linear "
                 f"aggregator {LINEAR_AGGREGATORS}, got {aggregator!r}")
+        self.downlink = self.backend.bind_downlink(
+            get_downlink(downlink, topk_frac=topk_frac))
         self.server = get_server_optimizer(server)
         self.round_core = self.backend.make_round_core(
             loss_fn, aggregator=aggregator, trim_fraction=trim_fraction,
             server=self.server, server_lr=server_lr, transport=self.transport)
-        # codec signature participates in the executable-registry key
+        # codec signature participates in the executable-registry key; the
+        # downlink signature nests around it only when a downlink codec is
+        # configured, so downlink="none" keys are untouched
         self._codec_sig = (() if self.transport is None
                            else self.transport.signature())
-        if self.transport is None:
+        if self.downlink is not None:
+            self._codec_sig = (self._codec_sig, self.downlink.signature())
+        if self.transport is None and self.downlink is None:
             raw = make_bucket_fn(self.round_core)
 
             def bucket(params, batches, weights, etas, active, server_state):
                 p, f, l, s = raw(params, batches, weights, etas, active,
                                  server_state)
                 return self.backend.constrain_update(p), f, l, s
-        else:
+        elif self.downlink is None:
             raw = make_transport_bucket_fn(self.round_core)
             per_client = self.transport.ef_slots is not None
 
@@ -165,10 +179,61 @@ class RoundEngine:
                 return (be.constrain_update(p), f, l, s,
                         be.constrain_transport_update(t,
                                                       per_client=per_client))
+        else:
+            raw = make_transport_bucket_fn(
+                self._make_downlink_core(self.round_core))
+            per_client = (self.transport is not None
+                          and self.transport.ef_slots is not None)
+
+            def bucket(params, batches, weights, etas, active, server_state,
+                       extra):
+                p, f, l, s, extra = raw(params, batches, weights, etas,
+                                        active, server_state, extra)
+                be = self.backend
+                d_state = extra if self.transport is None else extra[1]
+                d_state = {
+                    "ref": be.constrain_update(d_state["ref"]),
+                    "res": be.constrain_update(d_state["res"]),
+                }
+                if self.transport is not None:
+                    t = be.constrain_transport_update(extra[0],
+                                                      per_client=per_client)
+                    extra = (t, d_state)
+                else:
+                    extra = d_state
+                return be.constrain_update(p), f, l, s, extra
         self._jitted = jax.jit(bucket)
         self._executables: Dict[Tuple, Any] = {}
         self.dispatch_count = 0
         self.transport_state: Any = None
+        self.downlink_state: Any = None
+
+    def _make_downlink_core(self, core):
+        """Wrap the backend's round core with the downlink reconstruction
+        (DESIGN.md §8.6): the carry's extra state is the downlink state
+        (no uplink transport) or an ``(uplink, downlink)`` pair. The inner
+        core runs verbatim on the reconstruction — clients train from, and
+        the server steps against, exactly what was broadcast."""
+        dl, be = self.downlink, self.backend
+
+        if self.transport is None:
+            def d_core(params, batches, weights, eta, server_state, d_state):
+                recon, d_state = dl.broadcast(params, d_state)
+                recon = be.constrain_update(recon)
+                p, f, l, s = core(recon, batches, weights, eta, server_state)
+                return p, f, l, s, d_state
+
+            return d_core
+
+        def td_core(params, batches, weights, eta, server_state, extra):
+            t_state, d_state = extra
+            recon, d_state = dl.broadcast(params, d_state)
+            recon = be.constrain_update(recon)
+            p, f, l, s, t = core(recon, batches, weights, eta, server_state,
+                                 t_state)
+            return p, f, l, s, (t, d_state)
+
+        return td_core
 
     def init_server_state(self, params: PyTree) -> Any:
         return self.server.init(params)
@@ -180,6 +245,15 @@ class RoundEngine:
         self.transport_state = (() if self.transport is None
                                 else self.transport.init_state(params))
         return self.transport_state
+
+    def init_downlink_state(self, params: PyTree) -> Any:
+        """Create (and own) the downlink broadcast state: the reference
+        params every client holds plus the downlink EF residual
+        (DESIGN.md §8.6). The trainer checkpoints it via
+        ``downlink_state``."""
+        self.downlink_state = (() if self.downlink is None
+                               else self.downlink.init_state(params))
+        return self.downlink_state
 
     def run_bucket(self, params, batches, weights, etas, active, server_state
                    ) -> Tuple[PyTree, jnp.ndarray, jnp.ndarray, Any]:
@@ -195,16 +269,24 @@ class RoundEngine:
         weights = be.place_weights(weights)
         etas, active = be.place_scalars(etas, active)
         server_state = jax.tree.map(jnp.asarray, server_state)
-        if self.transport is None:
+        has_t, has_d = self.transport is not None, self.downlink is not None
+        if not has_t and not has_d:
             args = (params, batches, weights, etas, active, server_state)
         else:
-            if self.transport_state is None:
-                self.init_transport_state(params)
-            t_state = be.place_transport_state(
-                self.transport_state,
-                per_client=self.transport.ef_slots is not None)
+            if has_t:
+                if self.transport_state is None:
+                    self.init_transport_state(params)
+                t_state = be.place_transport_state(
+                    self.transport_state,
+                    per_client=self.transport.ef_slots is not None)
+            if has_d:
+                if self.downlink_state is None:
+                    self.init_downlink_state(params)
+                d_state = be.place_downlink_state(self.downlink_state)
+            extra = ((t_state, d_state) if has_t and has_d
+                     else (t_state if has_t else d_state))
             args = (params, batches, weights, etas, active, server_state,
-                    t_state)
+                    extra)
         key = (self._codec_sig,) + _signature(args)
         exe = self._executables.get(key)
         if exe is None:
@@ -212,9 +294,15 @@ class RoundEngine:
             self._executables[key] = exe
         self.dispatch_count += 1
         out = exe(*args)
-        if self.transport is None:
+        if not has_t and not has_d:
             return out
-        params, firsts, lasts, server_state, self.transport_state = out
+        params, firsts, lasts, server_state, extra = out
+        if has_t and has_d:
+            self.transport_state, self.downlink_state = extra
+        elif has_t:
+            self.transport_state = extra
+        else:
+            self.downlink_state = extra
         return params, firsts, lasts, server_state
 
     @property

@@ -122,9 +122,16 @@ class AvailabilitySampler(ClientSampler):
     """Bernoulli(p) per-round participation mask (cross-device churn).
 
     Shortfall policy: when fewer than ``n`` clients are online, offline
-    clients pad the cohort at weight 0 so the jitted round keeps its shape;
-    a round with nobody online degrades to a uniform draw (documented
-    deviation — the server cannot skip a round in this simulation)."""
+    clients pad the cohort at weight 0 so the jitted round keeps its shape.
+
+    Degenerate-round guard: a round with NOBODY online re-draws as a plain
+    uniform round (documented deviation — the jitted schedule cannot skip
+    a round in this simulation). Padding the whole cohort at weight 0
+    instead would make the weighted mean a 0/0 and poison the params with
+    NaN, which is why the guard also covers the weight normalisation in
+    the shortfall branch (all-empty online datasets fall back to uniform
+    weights over the online set). Regression-tested at ``prob≈0`` in
+    ``tests/test_sampling.py``."""
 
     name = "availability"
     needs_weighted_aggregation = True   # shortfall padding rides zero weights
@@ -137,7 +144,7 @@ class AvailabilitySampler(ClientSampler):
     def round(self, rng, data, n, round_idx=None):
         n = min(n, data.num_clients)
         online = np.flatnonzero(rng.random(data.num_clients) < self.prob)
-        if len(online) == 0:
+        if len(online) == 0:              # all-offline: re-draw uniformly
             ids = rng.choice(data.num_clients, size=n, replace=False)
             return ids, _size_weights(data, ids)
         if len(online) >= n:
@@ -148,6 +155,8 @@ class AvailabilitySampler(ClientSampler):
         fill = rng.choice(offline, size=n - len(online), replace=False)
         ids = np.concatenate([online, fill])
         w = np.array([len(data.client_y[c]) for c in online], np.float64)
+        if w.sum() <= 0:                  # online but data-less: uniform
+            w = np.ones_like(w)
         weights = np.zeros(n, np.float32)
         weights[:len(online)] = (w / w.sum()).astype(np.float32)
         return ids, weights

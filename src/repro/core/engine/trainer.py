@@ -52,6 +52,7 @@ class History:
     wall_clock_s: List[float] = field(default_factory=list)   # cumulative, Eq. 5
     sgd_steps: List[int] = field(default_factory=list)        # cumulative
     uplink_mbit: List[float] = field(default_factory=list)    # cumulative wire
+    downlink_mbit: List[float] = field(default_factory=list)  # cumulative wire
     train_loss: List[float] = field(default_factory=list)     # Eq. 15 round mean
     min_train_loss: List[float] = field(default_factory=list) # Fig. 1 metric
     val_rounds: List[int] = field(default_factory=list)
@@ -137,11 +138,14 @@ class FedAvgTrainer:
                                   server_lr=fed.server_lr,
                                   backend=backend,
                                   transport=transport,
-                                  topk_frac=getattr(fed, "topk_frac", 0.1))
+                                  topk_frac=getattr(fed, "topk_frac", 0.1),
+                                  downlink=getattr(fed, "downlink", "none"))
         self.server_state = self.engine.init_server_state(init_params)
         self.engine.init_transport_state(init_params)
-        if self.engine.transport is not None:
-            # charge the wire what the codec ships — on a trainer-owned
+        self.engine.init_downlink_state(init_params)
+        if self.engine.transport is not None or \
+                self.engine.downlink is not None:
+            # charge the wire what the codecs ship — on a trainer-owned
             # copy (an injected RuntimeModel may be shared across trainers
             # with different transports); clone the straggler rng so the
             # copy owns its draw stream too
@@ -149,14 +153,19 @@ class FedAvgTrainer:
             rt = _copy.copy(runtime)
             rt._rng = np.random.default_rng()
             rt._rng.bit_generator.state = runtime._rng.bit_generator.state
-            rt.uplink_compression = \
-                self.engine.transport.compression_ratio(init_params)
+            if self.engine.transport is not None:
+                rt.uplink_compression = \
+                    self.engine.transport.compression_ratio(init_params)
+            if self.engine.downlink is not None:
+                rt.downlink_compression = \
+                    self.engine.downlink.compression_ratio(init_params)
             self.runtime = rt
         self.history = History()
         self._np_rng = np.random.default_rng(fed.seed)
         self._wall = 0.0
         self._steps = 0
         self._up_mbit = 0.0
+        self._down_mbit = 0.0
         self._min_loss = float("inf")
         self._max_acc = 0.0
         self._completed_rounds = 0
@@ -262,6 +271,7 @@ class FedAvgTrainer:
             self._wall += cost.wall_clock_s
             self._steps += cost.sgd_steps
             self._up_mbit += cost.uplink_mbit
+            self._down_mbit += cost.downlink_mbit
             self._min_loss = min(self._min_loss, round_loss)
             h.rounds.append(r)
             h.k.append(bucket.k)
@@ -269,6 +279,7 @@ class FedAvgTrainer:
             h.wall_clock_s.append(self._wall)
             h.sgd_steps.append(self._steps)
             h.uplink_mbit.append(self._up_mbit)
+            h.downlink_mbit.append(self._down_mbit)
             h.train_loss.append(round_loss)
             h.min_train_loss.append(self._min_loss)
 
@@ -288,7 +299,8 @@ class FedAvgTrainer:
         checkpoint alone rebuilds the exact trainer)."""
         from repro.checkpoint import save_checkpoint
         tree = {"params": self.params, "server": self.server_state,
-                "transport": self.engine.transport_state}
+                "transport": self.engine.transport_state,
+                "downlink": self.engine.downlink_state}
         ctrl = self.ctrl
         meta = {
             **(extra_meta or {}),
@@ -300,6 +312,7 @@ class FedAvgTrainer:
             "runtime_rng": self.runtime._rng.bit_generator.state,
             "wall": self._wall, "steps": self._steps,
             "up_mbit": self._up_mbit,
+            "down_mbit": self._down_mbit,
             "min_loss": self._min_loss, "max_acc": self._max_acc,
             "ctrl": {"f0": ctrl._f0, "window": list(ctrl.tracker._buf),
                      "plateau": [ctrl.plateau.best, ctrl.plateau.stale,
@@ -315,19 +328,30 @@ class FedAvgTrainer:
         like = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
             {"params": self.params, "server": self.server_state,
-             "transport": self.engine.transport_state})
+             "transport": self.engine.transport_state,
+             "downlink": self.engine.downlink_state})
         tree, meta = load_checkpoint(path, like)
         self.params = tree["params"]
         self.server_state = tree["server"]
         self.engine.transport_state = tree["transport"]
+        self.engine.downlink_state = tree["downlink"]
         self._completed_rounds = int(meta["completed_rounds"])
         self.history = History.from_dict(meta["history"])
+        h = self.history
+        if len(h.downlink_mbit) < len(h.rounds):
+            # pre-downlink checkpoint: backfill the new cumulative series
+            # (no broadcast bytes were charged then) so the per-round lists
+            # stay index-aligned for CSV writers/plots
+            h.downlink_mbit = ([0.0] * (len(h.rounds)
+                                        - len(h.downlink_mbit))
+                               + h.downlink_mbit)
         self._np_rng.bit_generator.state = meta["rng"]
         if "runtime_rng" in meta:
             self.runtime._rng.bit_generator.state = meta["runtime_rng"]
         self._wall = float(meta["wall"])
         self._steps = int(meta["steps"])
         self._up_mbit = float(meta.get("up_mbit", 0.0))
+        self._down_mbit = float(meta.get("down_mbit", 0.0))
         self._min_loss = float(meta["min_loss"])
         self._max_acc = float(meta["max_acc"])
         c = meta["ctrl"]

@@ -40,6 +40,20 @@ engine's checkpointable state (threads through the bucket scan carry and
 Compressed codecs require a *linear* aggregator (mean/kernel): the weighted
 sum distributes over decode. Robust aggregators (median/trimmed_mean) need
 the full client distribution and are rejected at engine construction.
+
+The *downlink* leg (DESIGN.md §8.6, DoubleSqueeze-style bidirectional
+compression — Tang et al. '19): ``DownlinkCodec`` wraps any of the codecs
+above around the server broadcast. The server keeps the last broadcast
+reference ``params_ref`` (exactly the model every client holds), encodes
+``params_t - params_ref [+ residual]``, and clients reconstruct
+``params_ref + decode(payload)`` through the fused decode-apply kernels
+before local SGD — every client trains on the identical reconstructed
+model, so the uplink aggregation contract is untouched (robust aggregators
+included). The downlink error-feedback residual lives server-side next to
+``params_ref``; both are engine state (``RoundEngine.downlink_state``),
+thread the K-bucket scan carry and checkpoint with ``save_state``.
+``downlink="none"`` keeps the historical broadcast (and compiled program)
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -128,6 +142,16 @@ class Transport:
         """Stacked payloads (leading client axis) -> weighted-sum delta
         pytree, via the fused decompress-reduce kernels."""
         raise NotImplementedError
+
+    def decode_apply(self, payload, ref: PyTree) -> PyTree:
+        """``ref + decode(payload)`` — the downlink reconstruction every
+        client runs (DESIGN.md §8.6). Default: decode then add; codecs
+        override with the fused decode-apply kernels so the dense f32
+        delta is never materialised."""
+        dec = self.decode(payload, like=ref)
+        return jax.tree.map(
+            lambda r, d: (r.astype(jnp.float32) + d).astype(r.dtype),
+            ref, dec)
 
     # -- wire accounting -------------------------------------------------
     def encoded_bits(self, params: PyTree) -> int:
@@ -278,6 +302,25 @@ class Int8Transport(Transport):
             out.append(flat.reshape(leaf.shape))
         return jax.tree.unflatten(treedef, out)
 
+    def decode_apply(self, payload, ref):
+        from repro.kernels import ops as kops
+        mesh, axes = self._mesh_axes()
+        leaves, treedef = jax.tree.flatten(ref)
+        out = []
+        for pl, leaf in zip(payload, leaves):
+            flat = leaf.reshape(-1)
+            qr = pl["qr"] if self.levels == 2 else None
+            rs = pl["rs"] if self.levels == 2 else None
+            if (mesh is not None and axes
+                    and flat.shape[0] % _axes_size(mesh, axes) == 0):
+                rec = kops.int8_delta_apply_sharded(flat, pl["q"], pl["s"],
+                                                    qr, rs, mesh=mesh,
+                                                    axes=axes)
+            else:
+                rec = kops.int8_delta_apply(flat, pl["q"], pl["s"], qr, rs)
+            out.append(rec.reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, out)
+
     def encoded_bits(self, params):
         bits = 0
         for leaf in jax.tree.leaves(params):
@@ -305,7 +348,11 @@ class TopKTransport(Transport):
         return (self.name, self.frac, self.error_feedback, self.ef_slots)
 
     def _k(self, size: int) -> int:
-        return max(1, int(math.ceil(self.frac * size)))
+        # clamped to [1, size]: ceil can round below 1 on tiny leaves
+        # (k == 0 would silently drop the leaf from the wire) and the index
+        # payload is invalid past the leaf itself (lax.top_k rejects
+        # k > size). Empty leaves ship an empty payload (k == 0).
+        return min(size, max(1, int(math.ceil(self.frac * size))))
 
     def encode(self, delta):
         out = []
@@ -333,6 +380,14 @@ class TopKTransport(Transport):
             out.append(flat.reshape(leaf.shape))
         return jax.tree.unflatten(treedef, out)
 
+    def decode_apply(self, payload, ref):
+        from repro.kernels import ops as kops
+        leaves, treedef = jax.tree.flatten(ref)
+        out = [kops.topk_delta_apply(leaf.reshape(-1), pl["v"], pl["i"]
+                                     ).reshape(leaf.shape)
+               for pl, leaf in zip(payload, leaves)]
+        return jax.tree.unflatten(treedef, out)
+
     def encoded_bits(self, params):
         bits = 0
         for leaf in jax.tree.leaves(params):
@@ -341,6 +396,103 @@ class TopKTransport(Transport):
 
     def nominal_ratio(self, bits_per_param: int = 32) -> float:
         return bits_per_param / (64.0 * self.frac)
+
+
+class DownlinkCodec:
+    """Server->client broadcast compression (DESIGN.md §8.6).
+
+    Wraps one of the delta codecs above around the broadcast leg. State
+    machine (all server-side, engine-owned):
+
+      * ``params_ref`` — the last broadcast reconstruction, i.e. exactly
+        the model every client currently holds (round 0: the init params,
+        which clients received at enrolment).
+      * ``residual``   — the downlink error-feedback buffer (codecs with
+        ``error_feedback``; int8's untransmitted second level, top-k's
+        dropped coordinates).
+
+    Per round: ``payload = enc(params_t - params_ref + residual)``; every
+    client reconstructs ``recon = params_ref + dec(payload)`` (the fused
+    decode-apply kernels) and runs local SGD from ``recon``; the new
+    reference IS ``recon`` and ``residual' = (delta + residual) -
+    dec(payload)``. Because all clients reconstruct identically, the
+    uplink aggregation contract is unchanged — the round core simply runs
+    on ``recon`` instead of ``params_t`` (robust aggregators included).
+
+    On EF codecs the server pays one extra decode per round to form the
+    residual (dec is recomputed next to the fused apply — same f32 ops, so
+    the residual is exact w.r.t. the shipped payload); clients only ever
+    run the fused apply. Decode is O(|x|) elementwise, dwarfed by the K
+    local-SGD steps.
+    """
+
+    def __init__(self, codec: Transport):
+        if codec is None or getattr(codec, "name", "none") == "none":
+            raise ValueError("DownlinkCodec wraps a real codec; use "
+                             "downlink='none' for the uncompressed "
+                             "broadcast")
+        self.codec = codec
+        self.name = codec.name
+        self.error_feedback = bool(codec.error_feedback)
+
+    # -- identity / compile-cache -------------------------------------
+    def signature(self) -> Tuple:
+        return ("downlink",) + tuple(self.codec.signature())
+
+    # -- mesh binding ---------------------------------------------------
+    def with_mesh(self, mesh, client_axes):
+        t = copy.copy(self)
+        t.codec = self.codec.with_mesh(mesh, client_axes)
+        return t
+
+    # -- state ----------------------------------------------------------
+    def init_state(self, params: PyTree):
+        ref = jax.tree.map(jnp.asarray, params)
+        res = (jax.tree.map(
+            lambda p: jnp.zeros(tuple(p.shape), jnp.float32), params)
+            if self.error_feedback else ())
+        return {"ref": ref, "res": res}
+
+    # -- the round entry point -------------------------------------------
+    def broadcast(self, params: PyTree, state):
+        """(server params, state) -> (client reconstruction, new state)."""
+        ref, res = state["ref"], state["res"]
+        delta = jax.tree.map(
+            lambda p, r: p.astype(jnp.float32) - r.astype(jnp.float32),
+            params, ref)
+        if self.error_feedback:
+            delta = jax.tree.map(jnp.add, delta, res)
+        payload = self.codec.encode(delta)
+        recon = self.codec.decode_apply(payload, ref)
+        if self.error_feedback:
+            dec = self.codec.decode(payload, like=params)
+            res = jax.tree.map(jnp.subtract, delta, dec)
+        return recon, {"ref": recon, "res": res}
+
+    # -- wire accounting -------------------------------------------------
+    def encoded_bits(self, params: PyTree) -> int:
+        return self.codec.encoded_bits(params)
+
+    def compression_ratio(self, params: PyTree,
+                          bits_per_param: int = 32) -> float:
+        return self.codec.compression_ratio(params, bits_per_param)
+
+    def nominal_ratio(self, bits_per_param: int = 32) -> float:
+        return self.codec.nominal_ratio(bits_per_param)
+
+
+def get_downlink(name, *, topk_frac: float = 0.1) -> Optional[DownlinkCodec]:
+    """Resolve the broadcast codec through the same transport registry
+    (any registered codec doubles as a downlink codec). ``None``/``"none"``
+    -> None: the engine keeps the historical uncompressed broadcast (and
+    its compiled program) bit-for-bit."""
+    if name is None or isinstance(name, DownlinkCodec):
+        return name
+    codec = (name if isinstance(name, Transport)
+             else TRANSPORT_REGISTRY.get(name)(topk_frac=topk_frac))
+    if codec is None:                              # registry "none"
+        return None
+    return DownlinkCodec(codec)
 
 
 def get_transport(name, *, topk_frac: float = 0.1) -> Optional[Transport]:

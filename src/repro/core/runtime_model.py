@@ -32,21 +32,25 @@ class RoundCost:
 class RuntimeModel:
     def __init__(self, model_size_mbit: float, cfg: RuntimeModelConfig,
                  clients_per_round: int = 1, heterogeneity: float = 0.0,
-                 seed: int = 0, uplink_compression: float = 1.0):
-        """heterogeneity: sigma of lognormal multipliers on beta/U/D per
-        sampled client; 0 reproduces the paper's homogeneous Eq. 5.
+                 seed: int = 0, uplink_compression: float = 1.0,
+                 downlink_compression: float = 1.0):
+        """heterogeneity: sigma of lognormal speed multipliers per sampled
+        client, applied to the client's WHOLE round time (compute beta and
+        both wire legs — a slow client is slow end to end); 0 reproduces
+        the paper's homogeneous Eq. 5.
 
-        ``uplink_compression``: ratio by which the transport codec shrinks
-        the client's uploaded delta (DESIGN.md §8); 1.0 is the paper's
-        uncompressed |x| uplink. ``FedAvgTrainer`` sets it from the
-        configured transport, so modelled wall-clock and bytes-on-wire both
-        charge the wire what the codec actually ships. Downlink stays |x|
-        (the server broadcast is uncompressed)."""
+        ``uplink_compression`` / ``downlink_compression``: ratios by which
+        the transport codecs shrink the client's uploaded delta and the
+        server's broadcast delta (DESIGN.md §8/§8.6); 1.0 is the paper's
+        uncompressed |x| on that leg. ``FedAvgTrainer`` sets both from the
+        configured codecs, so modelled wall-clock and bytes-on-wire charge
+        each wire leg what its codec actually ships."""
         self.size = model_size_mbit
         self.cfg = cfg
         self.n = clients_per_round
         self.het = heterogeneity
         self.uplink_compression = float(uplink_compression)
+        self.downlink_compression = float(downlink_compression)
         self._rng = np.random.default_rng(seed)
 
     @property
@@ -54,28 +58,42 @@ class RuntimeModel:
         """Encoded uplink size (Eq. 3's |x|/U numerator under compression)."""
         return self.size / self.uplink_compression
 
+    @property
+    def downlink_mbit_per_client(self) -> float:
+        """Encoded broadcast size (Eq. 3's |x|/D numerator; DESIGN.md
+        §8.6). The reference-delta payload is one encoding of |x|, shipped
+        to every client."""
+        return self.size / self.downlink_compression
+
     def comm_time(self) -> float:
-        return (self.size / self.cfg.download_mbps
+        """Per-round communication term, HET-FREE: the homogeneous-client
+        (Eq. 5) mean a lognormal(0, sigma) multiplier would scale. Use
+        ``round_cost`` for straggler-aware per-round draws — mixing the two
+        under heterogeneity > 0 under-reports stragglers (they are
+        reconciled by construction only at heterogeneity == 0, where
+        ``total_time(ks) == sum(round_cost(k).wall_clock_s)``)."""
+        return (self.downlink_mbit_per_client / self.cfg.download_mbps
                 + self.uplink_mbit_per_client / self.cfg.upload_mbps)
 
     def round_cost(self, k: int) -> RoundCost:
         """Eq. 3/4: straggler max over the round's client draws."""
         up = self.uplink_mbit_per_client
-        base = (self.size / self.cfg.download_mbps
+        down = self.downlink_mbit_per_client
+        base = (down / self.cfg.download_mbps
                 + k * self.cfg.beta_seconds
                 + up / self.cfg.upload_mbps)
         if self.het > 0:
+            # one speed multiplier per client, on compute AND both wire
+            # legs — keeps round_cost consistent with the documented
+            # beta/U/D spread (comm_time stays the het-free mean)
             mult = self._rng.lognormal(0.0, self.het, size=self.n)
-            per_client = (self.size / self.cfg.download_mbps
-                          + k * self.cfg.beta_seconds * mult
-                          + up / self.cfg.upload_mbps)
-            wall = float(np.max(per_client))
+            wall = float(base * np.max(mult))
         else:
             wall = base
         return RoundCost(wall_clock_s=wall,
                          sgd_steps=k * self.n,
                          uplink_mbit=up * self.n,
-                         downlink_mbit=self.size * self.n)
+                         downlink_mbit=down * self.n)
 
     def total_time(self, ks: Sequence[int]) -> float:
         """Eq. 5 (homogeneous)."""

@@ -54,8 +54,12 @@ def round_batches(rng: np.random.Generator, data: FederatedData,
 def client_weights(data: FederatedData, client_ids: Sequence[int]) -> np.ndarray:
     """Per-round aggregation weights p_c, renormalised over the round's
     participants (FedAvg, Algorithm 1 line 11 uses the uniform 1/|C_r|;
-    weighting by n_c is the Eq. 1-faithful generalisation)."""
+    weighting by n_c is the Eq. 1-faithful generalisation). A cohort of
+    all-empty datasets falls back to uniform weights — a 0/0 here would
+    poison the weighted mean (and the params) with NaN."""
     w = np.array([len(data.client_y[c]) for c in client_ids], dtype=np.float64)
+    if w.sum() <= 0:
+        w = np.ones_like(w)
     return (w / w.sum()).astype(np.float32)
 
 

@@ -26,6 +26,17 @@ Top-k payloads reduce by scatter-add (``topk_scatter_reduce``): one flat
 (N*S,) scatter into an f32 (M,) zero buffer — never an (N, M) dense stack.
 A Pallas TPU scatter needs a one-hot MXU matmul formulation; recorded as a
 future optimisation (DESIGN.md §8), the XLA scatter is used on all backends.
+
+The *downlink* leg (DESIGN.md §8.6) is the mirror image: the server ships
+one encoded delta and every client applies it to the broadcast reference.
+``int8_decode_apply`` fuses dequantise + add-to-ref in one pass — the int8
+payload is read once, the reconstruction ``ref + q*s [+ qr*rs]`` is written
+once, and no intermediate f32 delta buffer exists.
+``int8_decode_apply_sharded`` follows ``fedavg_reduce_sharded``'s per-shard
+kernel contract: the flat parameter vector is sharded over the mesh axes
+and each shard decode-applies its local slice; being elementwise (no
+contraction over clients), the psum degenerates away and the output keeps
+the input sharding.
 """
 from __future__ import annotations
 
@@ -113,6 +124,108 @@ def int8_decompress_reduce_sharded(q, w_eff, qr=None, wr_eff=None, *, mesh,
     return shard_map(local, mesh=mesh,
                      in_specs=(P(axes, None), P(axes, None), P(axes), P(axes)),
                      out_specs=P(), check_rep=False)(q, qr, w_eff, wr_eff)
+
+
+# ---------------------------------------------------------------------------
+# downlink: fused decode-apply (DESIGN.md §8.6)
+# ---------------------------------------------------------------------------
+
+def _apply_kernel1(s_ref, ref_ref, q_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)             # (1, BM) int8 plane
+    o_ref[...] = (ref_ref[...].astype(jnp.float32)
+                  + q * s_ref[...]).astype(o_ref.dtype)
+
+
+def _apply_kernel2(s_ref, rs_ref, ref_ref, q_ref, qr_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    qr = qr_ref[...].astype(jnp.float32)
+    o_ref[...] = (ref_ref[...].astype(jnp.float32)
+                  + q * s_ref[...] + qr * rs_ref[...]).astype(o_ref.dtype)
+
+
+def _block_apply(ref, q, s, qr, rs, block, interpret):
+    """(M,) ref + int8 payload -> (M,) reconstruction, one fused pass."""
+    m = ref.shape[0]
+    pad = (-m) % block
+    if pad:
+        ref = jnp.pad(ref, (0, pad))
+        q = jnp.pad(q, (0, pad))
+        if qr is not None:
+            qr = jnp.pad(qr, (0, pad))
+    mp = m + pad
+    scol = s.reshape(1, 1).astype(jnp.float32)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    row_spec = pl.BlockSpec((1, block), lambda i: (0, i))
+    if qr is None:
+        out = pl.pallas_call(
+            _apply_kernel1,
+            grid=(mp // block,),
+            in_specs=[scalar_spec, row_spec, row_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((1, mp), ref.dtype),
+            interpret=interpret,
+        )(scol, ref[None, :], q[None, :])
+    else:
+        out = pl.pallas_call(
+            _apply_kernel2,
+            grid=(mp // block,),
+            in_specs=[scalar_spec, scalar_spec, row_spec, row_spec, row_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((1, mp), ref.dtype),
+            interpret=interpret,
+        )(scol, rs.reshape(1, 1).astype(jnp.float32),
+          ref[None, :], q[None, :], qr[None, :])
+    return out[0, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def int8_decode_apply(ref, q, s, qr=None, rs=None, *,
+                      block: int = DEFAULT_BLOCK,
+                      interpret: bool = False) -> jnp.ndarray:
+    """ref (M,); q (M,) int8; s scalar scale -> (M,) ``ref + q*s [+ qr*rs]``.
+
+    The downlink reconstruction every client runs: dequantise + add-to-ref
+    fused, so the f32 delta is never materialised in HBM. Accumulates in
+    f32 and casts back to ``ref.dtype``.
+    """
+    return _block_apply(ref, q, s, qr, rs, block, interpret)
+
+
+def int8_decode_apply_sharded(ref, q, s, qr=None, rs=None, *, mesh, axes,
+                              block: int = DEFAULT_BLOCK,
+                              interpret: bool = False) -> jnp.ndarray:
+    """Mesh variant: the flat (M,) vector sharded over ``axes``; each shard
+    runs the fused decode-apply on its local slice (scales replicated).
+    Elementwise, so unlike the reduce kernels no psum is needed — the
+    output keeps the per-shard layout and GSPMD reshards as consumed.
+    The axes' size must divide M."""
+    axes = tuple(axes)
+
+    if qr is None:
+        def local(r, x, sc):
+            return _block_apply(r, x, sc, None, None, block, interpret)
+
+        return shard_map(local, mesh=mesh,
+                         in_specs=(P(axes), P(axes), P(None)),
+                         out_specs=P(axes), check_rep=False)(ref, q, s)
+
+    def local(r, x, sc, xr, rsc):
+        return _block_apply(r, x, sc, xr, rsc, block, interpret)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes), P(axes), P(None), P(axes), P(None)),
+                     out_specs=P(axes), check_rep=False)(ref, q, s, qr, rs)
+
+
+def topk_scatter_apply(ref, vals, idx) -> jnp.ndarray:
+    """ref (M,); vals/idx (S,) -> ref with the kept coordinates added.
+
+    One flat scatter-add into a copy of the reference — the dense decoded
+    delta never exists (same XLA-scatter rationale as the uplink reduce)."""
+    shape = ref.shape
+    flat = ref.astype(jnp.float32).reshape(-1)
+    out = flat.at[idx].add(vals.astype(jnp.float32))
+    return out.reshape(shape).astype(ref.dtype)
 
 
 def topk_scatter_reduce(vals, idx, weights, size: int) -> jnp.ndarray:

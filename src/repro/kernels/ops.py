@@ -100,6 +100,26 @@ def topk_delta_reduce(vals, idx, weights, size: int) -> jnp.ndarray:
     return _dc.topk_scatter_reduce(vals, idx, weights, size)
 
 
+def int8_delta_apply(ref, q, s, qr=None, rs=None) -> jnp.ndarray:
+    """Downlink reconstruction: fused dequantise + add-to-ref
+    (``ref + q*s [+ qr*rs]``), ref (M,) -> (M,) in ``ref.dtype``."""
+    return _dc.int8_decode_apply(ref, q, s, qr, rs, interpret=INTERPRET)
+
+
+def int8_delta_apply_sharded(ref, q, s, qr=None, rs=None, *, mesh,
+                             axes) -> jnp.ndarray:
+    """Mesh variant: flat vector sharded over ``axes``, per-shard fused
+    decode-apply (elementwise — no collective; DESIGN.md §8.6)."""
+    return _dc.int8_decode_apply_sharded(ref, q, s, qr, rs, mesh=mesh,
+                                         axes=axes, interpret=INTERPRET)
+
+
+def topk_delta_apply(ref, vals, idx) -> jnp.ndarray:
+    """Downlink top-k reconstruction: scatter-add the kept coordinates into
+    a copy of the broadcast reference."""
+    return _dc.topk_scatter_apply(ref, vals, idx)
+
+
 # ---------------------------------------------------------------------------
 # flash attention (model layout adapter)
 # ---------------------------------------------------------------------------

@@ -61,6 +61,10 @@ def make_parser() -> argparse.ArgumentParser:
                     help="client-delta wire codec (DESIGN.md §8)")
     ap.add_argument("--topk-frac", type=float, default=0.1,
                     help="kept coordinate fraction for --transport topk")
+    ap.add_argument("--downlink", default="none",
+                    choices=("none", "int8", "int8x2", "topk"),
+                    help="server broadcast codec: delta vs the last "
+                         "broadcast reference (DESIGN.md §8.6)")
     ap.add_argument("--sampler", default="uniform",
                     choices=("uniform", "weighted", "fixed_cohort",
                              "availability"),
@@ -116,6 +120,7 @@ def spec_from_legacy_args(args) -> ExperimentSpec:
         f"sampler.availability={args.availability}",
         f"transport.name={args.transport}",
         f"transport.topk_frac={args.topk_frac}",
+        f"transport.downlink={args.downlink}",
         f"backend.name={args.backend}", f"backend.strategy={args.strategy}",
         f"backend.groups={args.groups}",
         "runtime.beta_seconds=0.05")
@@ -153,6 +158,12 @@ def main(argv=None):
               f"({rt.uplink_mbit_per_client:.2f} of {rt.size:.2f} mbit "
               f"per client-round)"
               + (f", per-client EF x{ef}" if ef else ""))
+    if trainer.engine.downlink is not None:
+        rt = trainer.runtime
+        print(f"[train] downlink={spec.transport.downlink}: broadcast "
+              f"{rt.downlink_compression:.2f}x compressed "
+              f"({rt.downlink_mbit_per_client:.2f} of {rt.size:.2f} mbit "
+              f"per client-round)")
 
     h = exp.run()
     print(f"[train] engine[{spec.backend.name}]: {trainer.compile_count} "
@@ -166,7 +177,8 @@ def main(argv=None):
     print(f"[train] final loss {h.train_loss[-1]:.4f} "
           f"(start {h.train_loss[0]:.4f}); total steps {h.sgd_steps[-1]}, "
           f"simulated wall-clock {h.wall_clock_s[-1]:.0f}s, "
-          f"uplink {h.uplink_mbit[-1]:.0f} mbit")
+          f"uplink {h.uplink_mbit[-1]:.0f} mbit, "
+          f"downlink {h.downlink_mbit[-1]:.0f} mbit")
     if args.checkpoint:
         exp.save(args.checkpoint)
         print(f"[train] checkpoint (spec embedded) -> {args.checkpoint}")

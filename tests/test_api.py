@@ -104,6 +104,20 @@ def test_validate_transport_needs_linear_aggregator():
         spec.validate()
 
 
+def test_validate_and_override_downlink_field():
+    """transport.downlink resolves through the transport registry and rides
+    dotted-path overrides; robust aggregators stay legal (downlink only
+    changes the broadcast, DESIGN.md §8.6)."""
+    spec = ExperimentSpec().with_overrides("transport.downlink=int8",
+                                           "fed.aggregator=median")
+    assert spec.transport.downlink == "int8"
+    spec.validate()
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(SpecValidationError, match="transport.downlink"):
+        ExperimentSpec().with_overrides(
+            "transport.downlink=int9").validate()
+
+
 def test_validate_cohort_length():
     spec = ExperimentSpec().with_overrides(
         "sampler.name=fixed_cohort", "sampler.cohort=[1,2]",

@@ -189,6 +189,67 @@ def test_trainer_mid_schedule_checkpoint_bitwise_continuation(tmp_path,
         np.testing.assert_array_equal(a, np.asarray(b))
 
 
+def test_resume_continues_wire_byte_counters_bitwise(tmp_path):
+    """Mid-schedule resume must CONTINUE the cumulative
+    ``History.uplink_mbit``/``downlink_mbit`` byte counters — not re-charge
+    rounds already paid for, not reset to zero — and restore the downlink
+    broadcast state (``params_ref`` + both EF residuals) bitwise
+    (DESIGN.md §8.6 acceptance contract)."""
+    from repro.configs import get_paper_task
+    from repro.configs.base import FedConfig
+    from repro.core import FedAvgTrainer, RuntimeModel
+    from repro.models import small
+
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=16, samples_per_client=30)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+
+    def mk():
+        fed = FedConfig(total_clients=16, clients_per_round=6, rounds=10,
+                        k0=6, eta0=0.3, batch_size=8, k_schedule="rounds",
+                        k_quantize=True, seed=0, transport="int8",
+                        downlink="int8")
+        rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+        return FedAvgTrainer(loss_fn, params, data, fed, rt)
+
+    straight = mk()
+    straight.run(10)
+
+    first = mk()
+    first.run(6)
+    up_at_save = first.history.uplink_mbit[-1]
+    down_at_save = first.history.downlink_mbit[-1]
+    assert up_at_save > 0 and down_at_save > 0
+    path = os.path.join(tmp_path, "wire")
+    first.save_state(path)
+
+    resumed = mk()
+    resumed.restore_state(path)
+    resumed.run(10, resume=True)
+
+    # counters are cumulative and monotone across the seam: round 7 charges
+    # ON TOP of the restored totals (no reset, no double-charge)
+    assert resumed.history.uplink_mbit[:6] == straight.history.uplink_mbit[:6]
+    assert resumed.history.uplink_mbit[6] > up_at_save
+    assert resumed.history.downlink_mbit[6] > down_at_save
+    assert resumed.history.uplink_mbit == straight.history.uplink_mbit
+    assert resumed.history.downlink_mbit == straight.history.downlink_mbit
+    assert len(resumed.history.downlink_mbit) == 10
+    # both EF residuals + the broadcast reference survive bitwise
+    for a, b in zip(jax.tree.leaves(straight.engine.transport_state),
+                    jax.tree.leaves(resumed.engine.transport_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(straight.engine.downlink_state),
+                    jax.tree.leaves(resumed.engine.downlink_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(straight.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert straight.history.as_dict() == resumed.history.as_dict()
+
+
 def test_checkpoint_preserves_straggler_rng_stream(tmp_path):
     """With heterogeneity > 0 the runtime model consumes lognormal draws
     every round — save/restore must continue that stream, or resumed
@@ -222,6 +283,52 @@ def test_checkpoint_preserves_straggler_rng_stream(tmp_path):
     resumed.restore_state(path)
     resumed.run(8, resume=True)
     assert straight.history.wall_clock_s == resumed.history.wall_clock_s
+
+
+def test_restore_backfills_downlink_mbit_for_old_checkpoints(tmp_path):
+    """A pre-downlink checkpoint carries no ``history.downlink_mbit`` /
+    ``down_mbit``; restore must backfill the new cumulative series with
+    zeros so the per-round lists stay index-aligned."""
+    import json
+
+    from repro.configs import get_paper_task
+    from repro.configs.base import FedConfig
+    from repro.core import FedAvgTrainer, RuntimeModel
+    from repro.models import small
+
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=8, samples_per_client=20)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+
+    def mk():
+        fed = FedConfig(total_clients=8, clients_per_round=4, rounds=6,
+                        k0=2, eta0=0.3, batch_size=4, k_schedule="fixed",
+                        loss_window=3, seed=0)
+        return FedAvgTrainer(loss_fn, params, data, fed,
+                             RuntimeModel(task.model_size_mb, task.runtime,
+                                          4))
+
+    first = mk()
+    first.run(4)
+    path = os.path.join(tmp_path, "old")
+    first.save_state(path)
+    # strip the downlink fields the way a pre-§8.6 checkpoint lacks them
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["down_mbit"], meta["history"]["downlink_mbit"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+
+    resumed = mk()
+    resumed.restore_state(path)
+    h = resumed.history
+    assert h.downlink_mbit == [0.0] * 4         # backfilled, index-aligned
+    resumed.run(6, resume=True)
+    assert len(h.downlink_mbit) == len(h.rounds) == 6
+    assert h.downlink_mbit[4] > 0.0             # new rounds charge on top
 
 
 def test_checkpoint_shape_mismatch_raises(tmp_path, rng):

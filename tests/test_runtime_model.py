@@ -35,6 +35,28 @@ def test_straggler_model_is_slower():
     assert np.mean(hs) > hom.round_cost(10).wall_clock_s  # max over lognormals
 
 
+def test_comm_time_is_het_free_mean_and_round_cost_charges_het_comm():
+    """The two wall-clock paths reconcile: ``comm_time`` is the documented
+    het-free per-round mean — at heterogeneity == 0 the Eq. 5 total
+    re-derives exactly from per-round costs — while ``round_cost`` applies
+    the client's speed multiplier to the WHOLE round (compute and both
+    wire legs), so a pure-communication round still sees stragglers
+    (previously the multiplier hit beta only and beta = 0 silently erased
+    heterogeneity)."""
+    cfg = RuntimeModelConfig(download_mbps=20, upload_mbps=5, beta_seconds=0.0)
+    hom = RuntimeModel(40.0, cfg, clients_per_round=20, heterogeneity=0.0)
+    assert hom.round_cost(10).wall_clock_s == pytest.approx(hom.comm_time())
+    assert hom.total_time([10, 5, 2]) == pytest.approx(
+        sum(hom.round_cost(k).wall_clock_s for k in (10, 5, 2)))
+    het = RuntimeModel(40.0, cfg, clients_per_round=20, heterogeneity=0.8,
+                       seed=3)
+    walls = [het.round_cost(10).wall_clock_s for _ in range(20)]
+    # beta == 0: every round is pure comm — the straggler max must still
+    # exceed the het-free mean (max of 20 lognormal multipliers > 1)
+    assert min(walls) > het.comm_time()
+    assert het.comm_time() == pytest.approx(hom.comm_time())
+
+
 def test_table4_relative_sgd_steps():
     rt = RuntimeModel(1.0, RuntimeModelConfig(), 10)
     k0 = 80

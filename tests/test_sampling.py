@@ -108,6 +108,63 @@ def test_availability_masks_and_zero_weights_shortfall(data):
         AvailabilitySampler(prob=0.0)
 
 
+def test_availability_prob_near_zero_never_degenerates(data):
+    """prob≈0 regression (the all-offline round): every round hits the
+    ``np.flatnonzero(...) == []`` path, which must re-draw a uniform round
+    — never pad the whole cohort at weight 0 (a 0/0 weighted mean would
+    poison the params with NaN)."""
+    rng = np.random.default_rng(0)
+    s = AvailabilitySampler(prob=1e-12)
+    for r in range(20):
+        ids, w = s.round(rng, data, 5, round_idx=r + 1)
+        assert len(ids) == 5 and len(set(ids.tolist())) == 5
+        assert np.isfinite(w).all() and (w >= 0).all()
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+
+
+def test_availability_prob_near_zero_trains_finite(data):
+    """End to end: a short availability run at prob≈0 must keep params and
+    losses finite (the degenerate rounds ride the uniform re-draw)."""
+    from repro.configs.base import RuntimeModelConfig
+    from repro.core import FedAvgTrainer, RuntimeModel
+    task = get_paper_task("femnist")
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    rt = RuntimeModel(task.model_size_mb, RuntimeModelConfig(), 4)
+    fed = FedConfig(total_clients=12, clients_per_round=4, rounds=3, k0=2,
+                    eta0=0.3, batch_size=4, loss_window=3,
+                    sampler="availability", availability=1e-12)
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt)
+    h = tr.run(3)
+    assert np.isfinite(h.train_loss).all()
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(tr.params))
+
+
+def test_availability_zero_data_online_clients_fall_back_uniform():
+    """Shortfall weight normalisation must not divide by zero when every
+    online client owns an empty dataset."""
+    class D:
+        num_clients = 6
+        client_y = [np.zeros(0)] * 3 + [np.zeros(5)] * 3
+
+    s = AvailabilitySampler(prob=0.5)
+    rng = np.random.default_rng(2)
+    saw_shortfall = False
+    for r in range(40):
+        ids, w = s.round(rng, D(), 4, round_idx=r + 1)
+        assert np.isfinite(w).all()
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+        if (w == 0).any():
+            saw_shortfall = True
+    assert saw_shortfall
+    # the full-cohort branch (len(online) >= n) rides client_weights, whose
+    # zero-total guard must also hold for an all-empty cohort
+    w = pipeline.client_weights(D(), [0, 1, 2])
+    assert np.isfinite(w).all()
+    np.testing.assert_allclose(w, 1.0 / 3.0, rtol=1e-6)
+
+
 def test_availability_rejects_weight_ignoring_aggregator(data):
     """Shortfall padding encodes participation in the weights; a robust
     aggregator would treat padded offline clients as full participants —

@@ -15,8 +15,9 @@ import pytest
 from repro.configs import get_paper_task
 from repro.configs.base import FedConfig, RuntimeModelConfig
 from repro.core import FedAvgTrainer, RuntimeModel
-from repro.core.engine import (IdentityTransport, Int8Transport, MeshBackend,
-                               RoundEngine, TopKTransport, get_transport)
+from repro.core.engine import (DownlinkCodec, IdentityTransport,
+                               Int8Transport, MeshBackend, RoundEngine,
+                               TopKTransport, get_downlink, get_transport)
 from repro.data import make_paper_task, pipeline
 from repro.kernels import ops as kops
 from repro.launch.mesh import make_host_mesh
@@ -332,6 +333,202 @@ def test_compile_key_carries_codec_signature(femnist_setup):
 
 
 # ---------------------------------------------------------------------------
+# topk tiny-leaf edges: k clamped to [1, leaf_size]
+# ---------------------------------------------------------------------------
+
+def test_topk_k_clamped_to_leaf_bounds():
+    t = TopKTransport(frac=0.1)
+    assert t._k(1) == 1          # ceil(0.1) would keep the leaf, not drop it
+    assert t._k(3) == 1
+    assert t._k(0) == 0          # empty leaf ships an empty payload
+    full = TopKTransport(frac=1.0)
+    for size in (1, 2, 7, 1000):
+        assert full._k(size) == size     # never past the leaf itself
+
+
+@pytest.mark.parametrize("leaf", [jnp.asarray(3.5),          # scalar
+                                  jnp.asarray([2.0]),        # 1-element
+                                  jnp.asarray([[-1.5]])])    # 1-element 2d
+def test_topk_roundtrip_tiny_leaves_exact(leaf):
+    """Tiny leaves must survive the wire verbatim: k clamps to 1, so the
+    single coordinate IS the payload (frac would otherwise round k to 0
+    and silently drop the leaf)."""
+    like = {"w": leaf, "big": jnp.arange(20, dtype=jnp.float32)}
+    t = TopKTransport(frac=0.05)
+    dec = t.decode(t.encode(like), like=like)
+    np.testing.assert_array_equal(np.asarray(dec["w"]), np.asarray(leaf))
+    assert t.encoded_bits({"w": leaf}) == 64
+    # and the engine-side reduce path agrees
+    stack = jax.tree.map(lambda l: jnp.stack([l, 2 * l]), like)
+    red = t.reduce(jax.vmap(t.encode)(stack),
+                   jnp.asarray([0.5, 0.5], jnp.float32), like=like)
+    np.testing.assert_allclose(np.asarray(red["w"]),
+                               1.5 * np.asarray(leaf), rtol=1e-6)
+
+
+def test_topk_empty_leaf_roundtrip():
+    like = {"empty": jnp.zeros((0,), jnp.float32),
+            "w": jnp.asarray([1.0, -2.0])}
+    t = TopKTransport(frac=0.5)
+    payload = t.encode(like)
+    assert payload[0]["v"].shape == (0,)           # k == 0 on the empty leaf
+    dec = t.decode(payload, like=like)
+    assert dec["empty"].shape == (0,)
+    # k = ceil(.5 * 2) = 1: the largest-|.| coordinate survives verbatim
+    np.testing.assert_array_equal(np.asarray(dec["w"]), [0.0, -2.0])
+
+
+# ---------------------------------------------------------------------------
+# downlink: codec state machine, fused decode-apply, engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("levels", [1, 2])
+def test_int8_decode_apply_fused_matches_decode_then_add(delta_fixture,
+                                                         levels):
+    params, deltas, _ = delta_fixture
+    t = Int8Transport(levels=levels)
+    one = jax.tree.map(lambda d: d[0], deltas)
+    payload = t.encode(one)
+    fused = t.decode_apply(payload, params)
+    ref = jax.tree.map(jnp.add, params, t.decode(payload, like=params))
+    trees_close(fused, ref, rtol=1e-6, atol=1e-7)
+
+
+def test_int8_decode_apply_sharded_matches_plain(delta_fixture, host_mesh):
+    params, deltas, _ = delta_fixture
+    t = Int8Transport(levels=2)
+    one = jax.tree.map(lambda d: d[0], deltas)
+    payload = t.encode(one)
+    plain = t.decode_apply(payload, params)
+    sharded = t.with_mesh(host_mesh, ("data",)).decode_apply(payload, params)
+    trees_close(sharded, plain, rtol=1e-6, atol=1e-7)
+
+
+def test_topk_decode_apply_matches_decode_then_add(delta_fixture):
+    params, deltas, _ = delta_fixture
+    t = TopKTransport(frac=0.2)
+    one = jax.tree.map(lambda d: d[0], deltas)
+    payload = t.encode(one)
+    fused = t.decode_apply(payload, params)
+    ref = jax.tree.map(jnp.add, params, t.decode(payload, like=params))
+    trees_close(fused, ref, rtol=1e-6, atol=1e-7)
+
+
+def test_downlink_codec_state_machine_and_ef_exact(delta_fixture):
+    """Reference-param state machine (DESIGN.md §8.6): round 0 ships a zero
+    delta (recon bitwise == params); afterwards ref' == recon and the
+    downlink residual is exactly ``(delta + residual) - dec(payload)``."""
+    params, deltas, _ = delta_fixture
+    dl = DownlinkCodec(Int8Transport(levels=1))
+    state = dl.init_state(params)
+    assert trees_equal(state["ref"], params)
+    recon, state = dl.broadcast(params, state)
+    assert trees_equal(recon, params)              # enc(0) decodes to 0
+    assert all(not np.asarray(l).any()
+               for l in jax.tree.leaves(state["res"]))
+    new_params = jax.tree.map(lambda p, d: p + d[0], params, deltas)
+    recon2, state2 = dl.broadcast(new_params, state)
+    codec = Int8Transport(levels=1)
+    delta = jax.tree.map(
+        lambda n, r, s: (n - r) + s, new_params, recon, state["res"])
+    dec = codec.decode(codec.encode(delta), like=params)
+    trees_close(recon2, jax.tree.map(jnp.add, recon, dec),
+                rtol=1e-6, atol=1e-8)
+    trees_close(state2["res"], jax.tree.map(jnp.subtract, delta, dec),
+                rtol=1e-6, atol=1e-8)
+    assert trees_equal(state2["ref"], recon2)      # clients hold recon2 now
+    # no-EF codec carries no residual buffer
+    assert DownlinkCodec(Int8Transport(levels=2,
+                                       error_feedback=False)
+                         ).init_state(params)["res"] == ()
+    with pytest.raises(ValueError, match="none"):
+        DownlinkCodec(None)
+    assert get_downlink("none") is None and get_downlink(None) is None
+
+
+def test_downlink_none_keeps_program_bitwise(femnist_setup):
+    """FedConfig(downlink='none') must keep the PR-4 compiled round program
+    bit-for-bit: identical executable-registry keys, params and history."""
+    a, _ = run_trainer(femnist_setup, "int8")
+    b, _ = run_trainer(femnist_setup, "int8", downlink="none")
+    assert set(a.engine._executables) == set(b.engine._executables)
+    assert a.engine._codec_sig == b.engine._codec_sig
+    assert trees_equal(a.params, b.params)
+    assert a.history.as_dict() == b.history.as_dict()
+
+
+@pytest.mark.parametrize("downlink", ["int8", "int8x2", "topk"])
+def test_downlink_trains_and_charges_wire(femnist_setup, downlink):
+    base, _ = run_trainer(femnist_setup, "none")
+    comp, _ = run_trainer(femnist_setup, "none", downlink=downlink)
+    assert np.isfinite(comp.history.train_loss).all()
+    ratio = (base.history.downlink_mbit[-1]
+             / comp.history.downlink_mbit[-1])
+    assert ratio == pytest.approx(comp.runtime.downlink_compression)
+    assert ratio >= 1.9                      # int8x2 ~2x, int8 ~4x, topk 5x
+    assert comp.history.uplink_mbit[-1] == \
+        pytest.approx(base.history.uplink_mbit[-1])
+    assert comp.history.wall_clock_s[-1] < base.history.wall_clock_s[-1]
+
+
+def test_downlink_int8_error_feedback_recovers_loss(femnist_setup):
+    """The matched-final-loss acceptance regime on the broadcast leg: the
+    downlink EF residual keeps int8 at the uncompressed final loss."""
+    base, _ = run_trainer(femnist_setup, "none")
+    comp, _ = run_trainer(femnist_setup, "none", downlink="int8")
+    assert abs(comp.history.train_loss[-1]
+               - base.history.train_loss[-1]) < 2e-2
+
+
+@pytest.mark.parametrize("transport,downlink", [("none", "int8"),
+                                                ("int8", "int8"),
+                                                ("topk", "topk")])
+def test_downlink_mesh_parallel_bitwise_parity(femnist_setup, host_mesh,
+                                               transport, downlink):
+    local, _ = run_trainer(femnist_setup, transport, downlink=downlink)
+    mesh, _ = run_trainer(femnist_setup, transport, downlink=downlink,
+                          backend=MeshBackend(host_mesh,
+                                              strategy="parallel"))
+    assert trees_equal(local.params, mesh.params)
+    for a, b in zip(jax.tree.leaves(local.engine.downlink_state),
+                    jax.tree.leaves(mesh.engine.downlink_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_downlink_sequential_trains(femnist_setup, host_mesh):
+    tr, _ = run_trainer(femnist_setup, "int8", downlink="int8",
+                        backend=MeshBackend(host_mesh,
+                                            strategy="sequential", groups=2))
+    h = tr.history.train_loss
+    assert np.isfinite(h).all() and h[-1] < h[0]
+
+
+def test_downlink_works_with_robust_aggregators(femnist_setup):
+    """Downlink compression only changes the broadcast every client
+    reconstructs identically — the aggregation contract is untouched, so
+    robust aggregators stay legal (unlike compressed uplink)."""
+    tr, _ = run_trainer(femnist_setup, "none", downlink="int8",
+                        aggregator="median")
+    assert np.isfinite(tr.history.train_loss).all()
+
+
+def test_downlink_compile_key_nests_codec_signatures(femnist_setup):
+    task, data, loss_fn, params = femnist_setup
+    engine = RoundEngine(loss_fn, transport="int8", downlink="int8")
+    state = engine.init_server_state(params)
+    rng = np.random.default_rng(0)
+    bb = pipeline.bucket_batches(rng, data, n_rounds=2, k=3,
+                                 clients_per_round=6, batch_size=8)
+    etas = np.full(2, 0.3, np.float32)
+    engine.run_bucket(params, bb.batches, bb.weights, etas, bb.active, state)
+    assert engine.compile_count == 1
+    (key,) = engine._executables.keys()
+    assert key[0] == (engine.transport.signature(),
+                      engine.downlink.signature())
+    assert engine.downlink.signature()[0] == "downlink"
+
+
+# ---------------------------------------------------------------------------
 # runtime model: encoded bytes on the wire
 # ---------------------------------------------------------------------------
 
@@ -363,6 +560,21 @@ def test_trainer_sets_uplink_compression_and_history(femnist_setup):
     assert ratio == pytest.approx(int8.runtime.uplink_compression)
     # modelled wall-clock is cheaper under compression too
     assert int8.history.wall_clock_s[-1] < base.history.wall_clock_s[-1]
+
+
+def test_runtime_model_charges_encoded_downlink():
+    cfg = RuntimeModelConfig(download_mbps=20, upload_mbps=5,
+                             beta_seconds=0.1)
+    base = RuntimeModel(40.0, cfg, clients_per_round=10)
+    comp = RuntimeModel(40.0, cfg, clients_per_round=10,
+                        downlink_compression=4.0)
+    c0, c1 = base.round_cost(8), comp.round_cost(8)
+    assert c1.downlink_mbit == pytest.approx(c0.downlink_mbit / 4.0)
+    assert c1.uplink_mbit == c0.uplink_mbit            # uplink untouched
+    assert c1.wall_clock_s == pytest.approx(
+        c0.wall_clock_s - (40.0 - 10.0) / 20.0)
+    assert comp.total_time([8, 8]) == pytest.approx(
+        sum(comp.round_cost(8).wall_clock_s for _ in range(2)))
 
 
 def test_compression_ratio_accounting(delta_fixture):
