@@ -1,0 +1,110 @@
+"""CI perf gate over the kernel benchmark records (DESIGN.md §10.5).
+
+    PYTHONPATH=src python -m benchmarks.perf_gate \\
+        --current BENCH_kernels.json \\
+        --baseline benchmarks/baselines/BENCH_kernels.json
+
+Compares the current ``benchmarks.run --only kern --json`` output against
+the committed baseline and fails (exit 1, loud per-row messages) when a
+wire-path kernel regresses. Two checks per gated row:
+
+  * **correctness** — ``max_abs_delta`` vs the jnp oracle must stay within
+    ``max(delta_factor * baseline_delta, delta_floor)``. Tight: a numerics
+    regression in the fused decompress-reduce / scatter kernels is the
+    thing this gate exists to catch.
+  * **timing** — the kernel/oracle wall-time *ratio* must stay within
+    ``ratio_factor`` of the baseline ratio. Ratios, not microseconds: CI
+    runners differ in absolute speed but kernel and oracle shift together,
+    so the ratio is machine-robust; the generous factor absorbs scheduler
+    noise while still catching order-of-magnitude regressions (e.g. a
+    fused kernel silently falling back to a dense path).
+
+Only wire-path rows (fedavg reduce, int8 delta reduce, top-k scatter) are
+gated — attention/SSD/MoE rows have no oracle contract here. A gated row
+missing from the current records is itself a failure: silently dropping a
+kernel from the bench must not turn the gate green.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+#: rows the gate enforces (name prefixes)
+GATED_PREFIXES = ("kern_fedavg_reduce", "kern_int8_delta_reduce",
+                  "kern_topk_scatter")
+
+#: timing: current kernel/oracle ratio may be at most this factor above the
+#: baseline ratio (floored — tiny baseline ratios would gate on noise)
+RATIO_FACTOR = 4.0
+RATIO_FLOOR = 0.05
+
+#: correctness: current delta may be at most max(factor * baseline, floor)
+DELTA_FACTOR = 2.0
+DELTA_FLOOR = 1e-4
+
+
+def load_records(path: str) -> List[dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return data["records"] if isinstance(data, dict) else data
+
+
+def check(current: List[dict], baseline: List[dict], *,
+          ratio_factor: float = RATIO_FACTOR,
+          delta_factor: float = DELTA_FACTOR,
+          delta_floor: float = DELTA_FLOOR) -> List[str]:
+    """Returns human-readable failure messages; empty list == gate passes."""
+    failures: List[str] = []
+    cur = {r["name"]: r for r in current}
+    for b in baseline:
+        name = b["name"]
+        if not name.startswith(GATED_PREFIXES):
+            continue
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"{name}: gated kernel missing from current "
+                            f"records")
+            continue
+        limit = max(delta_factor * (b.get("max_abs_delta") or 0.0),
+                    delta_floor)
+        d = c.get("max_abs_delta")
+        if d is None or d > limit:
+            failures.append(f"{name}: max_abs_delta {d} exceeds {limit:.3g} "
+                            f"(baseline {b.get('max_abs_delta')})")
+        if b.get("oracle_us") and c.get("oracle_us"):
+            base_ratio = b["kernel_us"] / b["oracle_us"]
+            cur_ratio = c["kernel_us"] / c["oracle_us"]
+            limit = ratio_factor * max(base_ratio, RATIO_FLOOR)
+            if cur_ratio > limit:
+                failures.append(
+                    f"{name}: kernel/oracle time ratio {cur_ratio:.3f} "
+                    f"exceeds {limit:.3f} (baseline {base_ratio:.3f} "
+                    f"x factor {ratio_factor})")
+    return failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True,
+                    help="BENCH_kernels.json from this run "
+                         "(benchmarks.run --only kern --json)")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_kernels.json",
+                    help="committed baseline records")
+    ap.add_argument("--ratio-factor", type=float, default=RATIO_FACTOR)
+    args = ap.parse_args(argv)
+    failures = check(load_records(args.current),
+                     load_records(args.baseline),
+                     ratio_factor=args.ratio_factor)
+    if failures:
+        print("perf gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("perf gate passed")
+
+
+if __name__ == "__main__":
+    main()

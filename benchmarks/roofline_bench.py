@@ -33,12 +33,22 @@ def format_row(r: dict) -> str:
             f"hbm={gb:6.1f}GB")
 
 
-def run(verbose=True) -> List[Tuple[str, float, str]]:
+def run(verbose=True, strict=False,
+        dirname: Optional[str] = None) -> List[Tuple[str, float, str]]:
+    """``strict``: an empty record set is an error (SystemExit) instead of
+    a quietly-green empty table — used when the roofline suite was asked
+    for explicitly. Non-strict runs still emit an explicit SKIPPED row so
+    the absence is visible in the output, never silent."""
     rows = []
-    recs = load_records()
+    recs = load_records(dirname)
     if not recs:
         print("  (no dry-run records found — run "
               "`python -m repro.launch.dryrun --all` first)")
+        if strict:
+            raise SystemExit("roofline: no dry-run records under "
+                             f"{dirname or DRYRUN_DIR} — refusing to "
+                             "report an empty roofline as success")
+        rows.append(("roofline_all", 0.0, "SKIPPED:no-dryrun-records"))
         return rows
     for r in recs:
         if r["status"] == "skipped":

@@ -1,6 +1,7 @@
 """Benchmark harness — one benchmark per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+                                            [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * fig12_*    — Fig. 1/2 analogue: schedule comparison on synthetic
@@ -9,12 +10,22 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * roofline_* — per (arch x shape x mesh) roofline terms from the dry-run
   * kern_*     — Pallas kernel micro-benchmarks (interpret mode)
 
+``--json PATH`` additionally writes the kernel suite's machine-readable
+records (kernel/oracle µs + max-abs-delta vs the jnp oracle) — the file the
+CI perf gate (``benchmarks.perf_gate``) diffs against the committed baseline
+``benchmarks/baselines/BENCH_kernels.json``.
+
+An explicitly requested roofline suite (``--only roofline``) with no
+dry-run records exits non-zero instead of green-lighting an empty table;
+in a combined run the empty suite emits an explicit SKIPPED row.
+
 Schedule/transport/downlink suites build their trainers through the
 declarative ``ExperimentSpec`` front door (``repro.api.build``) — the spec
 is the benchmark configuration, not hand-assembled trainer wiring
 (DESIGN.md §9; see ``schedules_bench._task_spec``).
 """
 import argparse
+import json
 import sys
 
 
@@ -24,12 +35,25 @@ def main() -> None:
                     help="all 4 paper tasks, more rounds")
     ap.add_argument("--only", default=None,
                     help="substring filter: fig12|table4|roofline|kern")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the kern suite's machine-readable records "
+                         "(perf-gate input) to this file")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
     verbose = not args.quiet
 
     from benchmarks import (kernels_bench, roofline_bench, schedules_bench,
                             table4_bench)
+
+    # --only roofline is an explicit ask: an empty table must fail loudly,
+    # not pass silently (the CI-green-on-no-data failure mode)
+    roofline_strict = bool(args.only and "roofline" in args.only)
+
+    kern_records = []
+
+    def run_kern():
+        kern_records.extend(kernels_bench.run_records())
+        return kernels_bench.run(verbose=verbose, records=kern_records)
 
     suites = []
     if not args.only or "table4" in args.only:
@@ -41,9 +65,10 @@ def main() -> None:
         suites.append(("fig12", lambda: schedules_bench.run(
             tasks=tasks, rounds=rounds, verbose=verbose)))
     if not args.only or "roofline" in args.only:
-        suites.append(("roofline", lambda: roofline_bench.run(verbose=verbose)))
+        suites.append(("roofline", lambda: roofline_bench.run(
+            verbose=verbose, strict=roofline_strict)))
     if not args.only or "kern" in args.only:
-        suites.append(("kern", lambda: kernels_bench.run(verbose=verbose)))
+        suites.append(("kern", run_kern))
 
     rows = []
     for name, fn in suites:
@@ -54,6 +79,20 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for n, us, d in rows:
         print(f"{n},{us:.1f},{d}")
+
+    if args.json:
+        if not kern_records:
+            print(f"--json {args.json}: kern suite did not run "
+                  f"(check --only filter)", file=sys.stderr)
+            sys.exit(1)
+        import jax
+        payload = {"jax": jax.__version__,
+                   "backend": jax.default_backend(),
+                   "records": kern_records}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        if verbose:
+            print(f"wrote {len(kern_records)} kernel records to {args.json}")
 
 
 if __name__ == "__main__":

@@ -256,33 +256,46 @@ def run_downlink_compare(rounds: int = 30, *, task_name: str = "femnist",
     metadata to spare), the Eq. 5 wall-clock, and the final-loss delta —
     the matched-final-loss contract is |dloss| <= 2% relative (the
     downlink EF residual recovers the quantisation error across rounds;
-    rtol documented in DESIGN.md §8.6)."""
+    rtol documented in DESIGN.md §8.6).
+
+    The ``adaptive`` row exercises the per-round skip/int8/int8x2 policy
+    (DESIGN.md §10) and the ``int8+q8ref`` row the quantised server-side
+    reference store — ``state_mb`` reports the server bytes held for the
+    broadcast state, the quantity q8 halves."""
     out: List[Dict] = []
-    for name in ("none", "int8", "topk"):
+    cases = (("none", ()), ("int8", ()), ("topk", ()), ("adaptive", ()),
+             ("int8+q8ref", ("transport.ref_store=q8",)))
+    for label, extra in cases:
+        name = label.split("+")[0]
         spec = _task_spec(task_name, rounds, seed).with_overrides(
             "fed.k_schedule=rounds", "fed.k_quantize=true",
-            "transport.name=int8", f"transport.downlink={name}")
+            "transport.name=int8", f"transport.downlink={name}", *extra)
         exp = build(spec)      # data/param construction outside the clock
         t0 = time.time()
         h = exp.run()
+        dl = exp.trainer.engine.downlink
+        state_mb = (dl.state_bytes(exp.trainer.engine.downlink_state) / 1e6
+                    if dl is not None else 0.0)
         out.append({
-            "downlink": name, "task": task_name,
+            "downlink": label, "task": task_name,
             "final_loss": h.train_loss[-1],
             "min_train_loss": h.min_train_loss[-1],
             "uplink_mbit": h.uplink_mbit[-1],
             "downlink_mbit": h.downlink_mbit[-1],
             "downlink_x": out[0]["downlink_mbit"] / h.downlink_mbit[-1]
-            if out else 1.0,
+            if out and h.downlink_mbit[-1] else 1.0,
             "dloss": h.train_loss[-1] - out[0]["final_loss"] if out else 0.0,
+            "state_mb": state_mb,
             "sim_wall_clock_s": h.wall_clock_s[-1],
             "bench_s": time.time() - t0,
         })
         if verbose:
             r = out[-1]
-            print(f"  downlink[{name:5s}] {task_name}: "
+            print(f"  downlink[{label:10s}] {task_name}: "
                   f"loss={r['final_loss']:.4f} (d={r['dloss']:+.4f}) "
                   f"downlink={r['downlink_mbit']:.0f}mbit "
                   f"({r['downlink_x']:.2f}x less) "
+                  f"state={r['state_mb']:.2f}MB "
                   f"W={r['sim_wall_clock_s']:.0f}s")
     return out
 
@@ -407,6 +420,7 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                      f"downlink_x={t['downlink_x']:.2f};"
                      f"loss={t['final_loss']:.4f};"
                      f"dloss={t['dloss']:+.4f};"
+                     f"stateMB={t['state_mb']:.2f};"
                      f"simW={t['sim_wall_clock_s']:.0f}s;"
                      f"upMbit={t['uplink_mbit']:.1f};"
                      f"downMbit={t['downlink_mbit']:.1f}"))

@@ -40,6 +40,7 @@ def _make_fed_config(spec: ExperimentSpec) -> FedConfig:
         server_lr=f.server_lr, seed=f.seed,
         aggregator=f.aggregator, trim_fraction=f.trim_fraction,
         transport=t.name, topk_frac=t.topk_frac, downlink=t.downlink,
+        downlink_ref=t.ref_store,
         sampler=s.name, cohort=s.cohort, availability=s.availability,
         bucket_rounds=f.bucket_rounds,
         feedback_bucket_rounds=f.feedback_bucket_rounds,

@@ -96,7 +96,10 @@ class SamplerSpec:
 class TransportSpec:
     name: str = "none"             # none|int8|int8x2|topk (DESIGN.md §8)
     topk_frac: float = 0.1
-    downlink: str = "none"         # broadcast codec, same names (§8.6)
+    downlink: str = "none"         # broadcast codec: same names plus
+                                   # "adaptive" (§8.6, §10)
+    ref_store: str = "f32"         # server-held downlink ref/residual
+                                   # store: f32 | q8 (§10.3)
 
 
 @dataclass(frozen=True)
@@ -312,6 +315,17 @@ class ExperimentSpec:
         if not 0.0 < t.topk_frac <= 1.0:
             errors.append(f"transport.topk_frac: must be in (0, 1], got "
                           f"{t.topk_frac}")
+        if t.name == "adaptive":
+            errors.append("transport.name: 'adaptive' is a downlink-only "
+                          "codec — set transport.downlink='adaptive' "
+                          "instead")
+        if t.ref_store not in ("f32", "q8"):
+            errors.append(f"transport.ref_store: must be 'f32' or 'q8', "
+                          f"got {t.ref_store!r}")
+        elif t.ref_store != "f32" and t.downlink == "none":
+            errors.append("transport.ref_store: a quantised ref store "
+                          "requires a downlink codec "
+                          "(transport.downlink != 'none')")
         if not 0.0 < s.availability <= 1.0:
             errors.append(f"sampler.availability: must be in (0, 1], got "
                           f"{s.availability}")

@@ -171,8 +171,10 @@ class FedConfig:
     # --- delta transport (DESIGN.md §8) ---
     transport: str = "none"           # none | int8 | int8x2 | topk
     topk_frac: float = 0.1            # kept fraction for transport="topk"
-    downlink: str = "none"            # server broadcast codec (same names;
-                                      # DESIGN.md §8.6)
+    downlink: str = "none"            # server broadcast codec (same names
+                                      # plus "adaptive"; DESIGN.md §8.6/§10)
+    downlink_ref: str = "f32"         # server-held ref/residual store:
+                                      # f32 | q8 (DESIGN.md §10.3)
     # --- client sampling (DESIGN.md §9.3) ---
     sampler: str = "uniform"          # uniform | weighted | fixed_cohort
                                       # | availability (plugin registry)

@@ -21,10 +21,11 @@ from repro.core.engine.scheduler import Bucket, RoundScheduler, is_loss_free
 from repro.core.engine.server import (SERVER_OPTIMIZERS, ServerOptimizer,
                                       get_server_optimizer)
 from repro.core.engine.trainer import FedAvgTrainer, History, make_eval_fn
-from repro.core.engine.transport import (TRANSPORTS, DownlinkCodec,
-                                         IdentityTransport, Int8Transport,
-                                         TopKTransport, Transport,
-                                         get_downlink, get_transport)
+from repro.core.engine.transport import (TRANSPORTS, AdaptiveDownlinkCodec,
+                                         DownlinkCodec, IdentityTransport,
+                                         Int8Transport, TopKTransport,
+                                         Transport, get_downlink,
+                                         get_transport)
 
 __all__ = ["AGGREGATORS", "get_aggregator", "weighted_mean",
            "ExecutionBackend", "LocalBackend", "MeshBackend", "ClientResult",
@@ -34,6 +35,7 @@ __all__ = ["AGGREGATORS", "get_aggregator", "weighted_mean",
            "RoundScheduler", "is_loss_free", "SERVER_OPTIMIZERS",
            "ServerOptimizer", "get_server_optimizer", "FedAvgTrainer",
            "History", "make_eval_fn", "TRANSPORTS", "Transport",
+           "AdaptiveDownlinkCodec",
            "DownlinkCodec", "IdentityTransport", "Int8Transport",
            "TopKTransport", "get_downlink",
            "get_transport", "SAMPLERS", "ClientSampler", "UniformSampler",

@@ -60,7 +60,8 @@ class ExecutionBackend:
     # ------------------------------------------------------------------
     def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
                         trim_fraction: float = 0.1, server=None,
-                        server_lr: float = 1.0, transport=None):
+                        server_lr: float = 1.0, transport=None,
+                        downlink=None):
         """Return round_core(params, batches{(N,K,b,...)}, weights(N,), eta,
         server_state) -> (new_params, first_losses(N,), last_losses(N,),
         server_state).
@@ -68,7 +69,13 @@ class ExecutionBackend:
         With a non-None ``transport`` (DESIGN.md §8) the core gains a
         trailing transport-state argument/result: round_core(params,
         batches, weights, eta, server_state, t_state) -> (new_params,
-        first_losses, last_losses, server_state, t_state)."""
+        first_losses, last_losses, server_state, t_state).
+
+        With a non-None ``downlink`` (DESIGN.md §10) the trailing slot is
+        the downlink state — or the ``(t_state, d_state)`` pair when both
+        codecs run — the broadcast is decoded lazily inside the client
+        step, and the core returns one more element: the per-round
+        adaptive-level int32 scalar (-1 for fixed-rate codecs)."""
         raise NotImplementedError
 
     # ------------------------------------------------------------------
@@ -109,14 +116,23 @@ class ExecutionBackend:
 
     def place_downlink_state(self, state):
         """Downlink broadcast state (DESIGN.md §8.6): the reference params
-        and the downlink EF residual are both params-shaped, so each rides
-        the params placement (sharding specs included)."""
+        and the downlink EF residual are params-shaped under the default
+        f32 store, so each rides the params placement (sharding specs
+        included). Under the quantised q8 store (DESIGN.md §10.3) the
+        leaves are int8/scale dicts that params shardings don't apply to —
+        those fall back to a plain transfer."""
         if not state:                       # () when downlink is off
             return state
-        res = state["res"]
-        return {"ref": self.place_params(state["ref"]),
-                "res": self.place_params(res) if jax.tree.leaves(res)
-                else res}
+
+        def place(tree):
+            if not jax.tree.leaves(tree):
+                return tree
+            try:
+                return self.place_params(tree)
+            except (ValueError, TypeError, KeyError):
+                return jax.tree.map(jnp.asarray, tree)
+
+        return {"ref": place(state["ref"]), "res": place(state["res"])}
 
     # ------------------------------------------------------------------
     # codec binding

@@ -11,16 +11,29 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.engine.aggregators import Aggregator, get_aggregator
 from repro.core.engine.backends.base import ExecutionBackend, LossFn
 from repro.core.engine.client import make_client_update
 
 
+def encode_broadcast(downlink, params, d_state):
+    """Uniform downlink-core entry point: every downlink round core emits
+    ``(ref, payload, recon, new_state, level)`` — codecs without a
+    per-round level (everything but ``adaptive``) get the sentinel -1,
+    which the trainer reads as "charge the configured ratio"."""
+    out = downlink.encode_broadcast(params, d_state)
+    if len(out) == 5:
+        return out
+    ref, payload, recon, new_state = out
+    return ref, payload, recon, new_state, jnp.int32(-1)
+
+
 def make_parallel_round_core(loss_fn: LossFn, aggregator: Aggregator,
                              server, server_lr: float, *,
                              client_spmd_axes: Optional[Sequence[str]] = None,
-                             transport=None):
+                             transport=None, downlink=None, constrain=None):
     """The vmap-over-clients round core shared by Local and Mesh-parallel.
 
     ``client_spmd_axes``: mesh axes the vmapped client dim is sharded over
@@ -33,33 +46,78 @@ def make_parallel_round_core(loss_fn: LossFn, aggregator: Aggregator,
     the codec's delta pipeline (encode -> fused decompress-reduce) instead
     of the aggregator, and the core threads the transport state:
     round_core(..., server_state, t_state) -> (..., server_state, t_state).
-    """
-    client = make_client_update(loss_fn)
 
-    if transport is None:
-        def round_core(params, batches, weights, eta, server_state):
+    With ``downlink`` (DESIGN.md §10) the broadcast is *fused into the
+    client forward*: the core's extra carry slot is the downlink state (or
+    an ``(uplink, downlink)`` pair), the server encodes once, and each
+    vmapped client reconstructs ``ref + dec(payload)`` lazily inside its
+    own first step (``client.reconstruct``) — the decoded f32 tree is
+    never a separate engine-materialised round input. The server-side
+    reconstruction (aggregate target, next reference) is the identical
+    elementwise program, so XLA CSEs the two decodes under jit. Downlink
+    cores additionally return the per-round adaptive level scalar.
+    ``constrain`` pins the server-side reconstruction to the backend's
+    param sharding (mesh); None on a single device.
+    """
+    if downlink is None:
+        client = make_client_update(loss_fn)
+
+        if transport is None:
+            def round_core(params, batches, weights, eta, server_state):
+                client_params, first_losses, last_losses = jax.vmap(
+                    client, in_axes=(None, 0, None),
+                    spmd_axis_name=client_spmd_axes)(params, batches, eta)
+                aggregate = aggregator(client_params, weights)
+                new_params, server_state = server.step(params, aggregate,
+                                                       server_state,
+                                                       server_lr)
+                return new_params, first_losses, last_losses, server_state
+
+            return round_core
+
+        def round_core(params, batches, weights, eta, server_state, t_state):
             client_params, first_losses, last_losses = jax.vmap(
                 client, in_axes=(None, 0, None),
                 spmd_axis_name=client_spmd_axes)(params, batches, eta)
-            aggregate = aggregator(client_params, weights)
+            aggregate, t_state = transport.aggregate(
+                aggregator, params, client_params, weights, t_state)
             new_params, server_state = server.step(params, aggregate,
                                                    server_state, server_lr)
-            return new_params, first_losses, last_losses, server_state
+            return (new_params, first_losses, last_losses, server_state,
+                    t_state)
 
         return round_core
 
-    def round_core(params, batches, weights, eta, server_state, t_state):
+    # fused downlink path: the vmapped "params" argument is the broadcast
+    # bundle (ref, payload), unbatched (in_axes=None) so the decode traces
+    # once and is shared across clients
+    fused = make_client_update(
+        loss_fn, reconstruct=lambda b: downlink.decode_into(b[1], b[0]))
+
+    def d_core(params, batches, weights, eta, server_state, extra):
+        t_state, d_state = (extra if transport is not None
+                            else (None, extra))
+        ref, payload, recon, d_state, level = encode_broadcast(
+            downlink, params, d_state)
+        if constrain is not None:
+            recon = constrain(recon)
         client_params, first_losses, last_losses = jax.vmap(
-            client, in_axes=(None, 0, None),
-            spmd_axis_name=client_spmd_axes)(params, batches, eta)
+            fused, in_axes=(None, 0, None),
+            spmd_axis_name=client_spmd_axes)((ref, payload), batches, eta)
+        if transport is None:
+            aggregate = aggregator(client_params, weights)
+            new_params, server_state = server.step(recon, aggregate,
+                                                   server_state, server_lr)
+            return (new_params, first_losses, last_losses, server_state,
+                    d_state, level)
         aggregate, t_state = transport.aggregate(
-            aggregator, params, client_params, weights, t_state)
-        new_params, server_state = server.step(params, aggregate,
+            aggregator, recon, client_params, weights, t_state)
+        new_params, server_state = server.step(recon, aggregate,
                                                server_state, server_lr)
         return (new_params, first_losses, last_losses, server_state,
-                t_state)
+                (t_state, d_state), level)
 
-    return round_core
+    return d_core
 
 
 class LocalBackend(ExecutionBackend):
@@ -67,7 +125,9 @@ class LocalBackend(ExecutionBackend):
 
     def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
                         trim_fraction: float = 0.1, server=None,
-                        server_lr: float = 1.0, transport=None):
+                        server_lr: float = 1.0, transport=None,
+                        downlink=None):
         agg = get_aggregator(aggregator, trim_fraction=trim_fraction)
         return make_parallel_round_core(loss_fn, agg, server, server_lr,
-                                        transport=transport)
+                                        transport=transport,
+                                        downlink=downlink)

@@ -39,7 +39,8 @@ from repro.core.engine.aggregators import get_aggregator
 from repro.core.engine.backends.base import (ExecutionBackend,
                                              LINEAR_AGGREGATORS, LossFn,
                                              axes_size as _axes_size)
-from repro.core.engine.backends.local import make_parallel_round_core
+from repro.core.engine.backends.local import (encode_broadcast,
+                                              make_parallel_round_core)
 from repro.core.engine.client import client_update
 
 PyTree = Any
@@ -75,7 +76,8 @@ class MeshBackend(ExecutionBackend):
     # ------------------------------------------------------------------
     def make_round_core(self, loss_fn: LossFn, *, aggregator: str = "mean",
                         trim_fraction: float = 0.1, server=None,
-                        server_lr: float = 1.0, transport=None):
+                        server_lr: float = 1.0, transport=None,
+                        downlink=None):
         if transport is not None and self.mesh is not None:
             # bound copy: reduce() routes through the client-sharded
             # decompress-reduce kernel (delta_codec, DESIGN.md §8)
@@ -84,24 +86,62 @@ class MeshBackend(ExecutionBackend):
             agg = self._resolve_aggregator(aggregator, trim_fraction)
             return make_parallel_round_core(
                 loss_fn, agg, server, server_lr,
-                client_spmd_axes=self.client_axes, transport=transport)
+                client_spmd_axes=self.client_axes, transport=transport,
+                downlink=downlink,
+                constrain=(self.constrain_update if downlink is not None
+                           else None))
         if transport is not None and transport.name == "none":
             # identity codec: keep the legacy sequential core (streaming
             # linear / stacking robust aggregators) and thread the empty
             # transport state through unchanged
-            core = self._make_sequential_core(loss_fn, aggregator,
-                                              trim_fraction, server,
-                                              server_lr)
+            inner = self._make_sequential_core(loss_fn, aggregator,
+                                               trim_fraction, server,
+                                               server_lr)
 
             def identity_core(params, batches, weights, eta, server_state,
                               t_state):
-                p, f, l, s = core(params, batches, weights, eta,
-                                  server_state)
+                p, f, l, s = inner(params, batches, weights, eta,
+                                   server_state)
                 return p, f, l, s, t_state
 
-            return identity_core
-        return self._make_sequential_core(loss_fn, aggregator, trim_fraction,
-                                          server, server_lr, transport)
+            core = identity_core
+        else:
+            core = self._make_sequential_core(loss_fn, aggregator,
+                                              trim_fraction, server,
+                                              server_lr, transport)
+        if downlink is None:
+            return core
+        return self._wrap_sequential_downlink(core, transport, downlink)
+
+    def _wrap_sequential_downlink(self, core, transport, downlink):
+        """Downlink around a sequential core (DESIGN.md §10): the scan
+        reuses ONE reconstruction per round — decode happens at the core
+        top, not per client-scan step — so the per-client work is
+        unchanged while ref/payload stay the only broadcast-sized state."""
+        constrain = self.constrain_update
+
+        if transport is None:
+            def d_core(params, batches, weights, eta, server_state,
+                       d_state):
+                _, _, recon, d_state, level = encode_broadcast(
+                    downlink, params, d_state)
+                recon = constrain(recon)
+                p, f, l, s = core(recon, batches, weights, eta,
+                                  server_state)
+                return p, f, l, s, d_state, level
+
+            return d_core
+
+        def td_core(params, batches, weights, eta, server_state, extra):
+            t_state, d_state = extra
+            _, _, recon, d_state, level = encode_broadcast(
+                downlink, params, d_state)
+            recon = constrain(recon)
+            p, f, l, s, t = core(recon, batches, weights, eta,
+                                 server_state, t_state)
+            return p, f, l, s, (t, d_state), level
+
+        return td_core
 
     def _resolve_aggregator(self, name: str, trim_fraction: float):
         if name == "kernel" and self.mesh is not None:

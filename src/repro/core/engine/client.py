@@ -28,13 +28,23 @@ class ClientResult(NamedTuple):
 
 def client_update(loss_fn: LossFn, params: PyTree,
                   client_batches: Dict[str, jnp.ndarray],
-                  eta: jnp.ndarray) -> ClientResult:
+                  eta: jnp.ndarray,
+                  reconstruct: Any = None) -> ClientResult:
     """K steps of SGD from the round-start params.
 
     Leaves of ``client_batches`` have leading K axis; ``eta`` is a scalar.
     Updates are cast back to each weight's dtype so mixed-precision params
     stay in their storage dtype across the scan carry.
+
+    ``reconstruct``: optional callable applied to ``params`` before the
+    first step — the downlink lazy decode (DESIGN.md §10): ``params`` is
+    then the (ref, payload) broadcast bundle and the client reconstructs
+    its own round-start model inside its own trace, so the engine never
+    materialises the decoded f32 tree as a separate round input.
     """
+    if reconstruct is not None:
+        params = reconstruct(params)
+
     def step(p, batch):
         (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
         p = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype), p, grads)
@@ -44,9 +54,11 @@ def client_update(loss_fn: LossFn, params: PyTree,
     return ClientResult(final, losses[0], losses[-1])
 
 
-def make_client_update(loss_fn: LossFn):
-    """Bind ``loss_fn``: returns update(params, batches, eta) -> ClientResult."""
+def make_client_update(loss_fn: LossFn, reconstruct: Any = None):
+    """Bind ``loss_fn`` (and the optional downlink ``reconstruct`` hook):
+    returns update(params, batches, eta) -> ClientResult."""
     def update(params, client_batches, eta):
-        return client_update(loss_fn, params, client_batches, eta)
+        return client_update(loss_fn, params, client_batches, eta,
+                             reconstruct)
 
     return update

@@ -103,6 +103,41 @@ def make_transport_bucket_fn(round_core):
     return bucket_fn
 
 
+def make_downlink_bucket_fn(round_core):
+    """Multi-round scan for a downlink-fused core (DESIGN.md §10): the
+    carry's trailing slot is the downlink state (or the ``(uplink,
+    downlink)`` pair) and the core emits one extra per-round output — the
+    adaptive codec level — stacked as a ``(B,)`` int32 ys alongside the
+    losses. Padding rounds mask the state with the bitwise-transparent
+    ``jnp.where`` select and report level -1 (the "not a real round"
+    sentinel the trainer skips when charging the wire).
+
+    bucket_fn(params, batches, weights, etas, active, server_state, extra)
+        -> (new_params, first_losses, last_losses, server_state, extra,
+            levels (B,) int32)
+    """
+    def bucket_fn(params, batches, weights, etas, active, server_state,
+                  extra):
+        def body(carry, xs):
+            params, state, ex = carry
+            b, w, eta, act = xs
+            new_p, first, last, new_s, new_e, level = round_core(
+                params, b, w, eta, state, ex)
+            sel = lambda n, o: jnp.where(act, n, o)
+            new_p = jax.tree.map(sel, new_p, params)
+            new_s = jax.tree.map(sel, new_s, state)
+            new_e = jax.tree.map(sel, new_e, ex)
+            level = jnp.where(act, level, jnp.int32(-1))
+            return (new_p, new_s, new_e), (first, last, level)
+
+        (params, server_state, extra), (firsts, lasts, levels) = jax.lax.scan(
+            body, (params, server_state, extra),
+            (batches, weights, etas, active))
+        return params, firsts, lasts, server_state, extra, levels
+
+    return bucket_fn
+
+
 def _signature(args) -> Tuple:
     """Hashable (treedef, leaf shapes/dtypes) key for the AOT registry."""
     leaves, treedef = jax.tree.flatten(args)
@@ -124,7 +159,8 @@ class RoundEngine:
                  trim_fraction: float = 0.1, server: str = "avg",
                  server_lr: float = 1.0,
                  backend: Optional[ExecutionBackend] = None,
-                 transport=None, topk_frac: float = 0.1, downlink=None):
+                 transport=None, topk_frac: float = 0.1, downlink=None,
+                 downlink_ref: str = "f32"):
         """``transport``: None/"none" keeps the historical param-space
         aggregation path bit-for-bit; "int8"/"int8x2"/"topk" (or a
         ``Transport`` instance) routes aggregation through the compressed
@@ -135,10 +171,16 @@ class RoundEngine:
         ``downlink``: None/"none" keeps the historical uncompressed server
         broadcast bit-for-bit; a codec name (or ``DownlinkCodec``) makes
         every round reconstruct the client model as ``params_ref +
-        decode(payload)`` before local SGD (DESIGN.md §8.6). The broadcast
+        decode(payload)`` before local SGD (DESIGN.md §8.6) — decoded
+        lazily inside the client step (DESIGN.md §10). The broadcast
         reference + downlink residual are engine-owned
         (``downlink_state``) and thread the bucket scan carry alongside
-        the uplink state. Orthogonal to the aggregator choice."""
+        the uplink state. Orthogonal to the aggregator choice.
+
+        ``downlink_ref``: storage for the engine-owned broadcast reference
+        and residual — "f32" (default, bit-exact PR-5 behaviour) or "q8"
+        (int8+scale leaves, ~2x less server-held state, DESIGN.md §10.3).
+        Requires a configured downlink codec."""
         self.backend = backend if backend is not None else LocalBackend()
         self.transport = get_transport(transport, topk_frac=topk_frac)
         if self.transport is not None and \
@@ -148,11 +190,16 @@ class RoundEngine:
                 f"transport {self.transport.name!r} requires a linear "
                 f"aggregator {LINEAR_AGGREGATORS}, got {aggregator!r}")
         self.downlink = self.backend.bind_downlink(
-            get_downlink(downlink, topk_frac=topk_frac))
+            get_downlink(downlink, topk_frac=topk_frac,
+                         ref_store=downlink_ref))
+        if self.downlink is None and downlink_ref != "f32":
+            raise ValueError(
+                f"downlink_ref={downlink_ref!r} requires a downlink codec")
         self.server = get_server_optimizer(server)
         self.round_core = self.backend.make_round_core(
             loss_fn, aggregator=aggregator, trim_fraction=trim_fraction,
-            server=self.server, server_lr=server_lr, transport=self.transport)
+            server=self.server, server_lr=server_lr,
+            transport=self.transport, downlink=self.downlink)
         # codec signature participates in the executable-registry key; the
         # downlink signature nests around it only when a downlink codec is
         # configured, so downlink="none" keys are untouched
@@ -180,15 +227,18 @@ class RoundEngine:
                         be.constrain_transport_update(t,
                                                       per_client=per_client))
         else:
-            raw = make_transport_bucket_fn(
-                self._make_downlink_core(self.round_core))
+            # downlink-fused core (built by the backend, DESIGN.md §10):
+            # the bucket scan threads the downlink state and stacks the
+            # per-round adaptive levels
+            raw = make_downlink_bucket_fn(self.round_core)
             per_client = (self.transport is not None
                           and self.transport.ef_slots is not None)
 
             def bucket(params, batches, weights, etas, active, server_state,
                        extra):
-                p, f, l, s, extra = raw(params, batches, weights, etas,
-                                        active, server_state, extra)
+                p, f, l, s, extra, levels = raw(params, batches, weights,
+                                                etas, active, server_state,
+                                                extra)
                 be = self.backend
                 d_state = extra if self.transport is None else extra[1]
                 d_state = {
@@ -201,39 +251,17 @@ class RoundEngine:
                     extra = (t, d_state)
                 else:
                     extra = d_state
-                return be.constrain_update(p), f, l, s, extra
+                return be.constrain_update(p), f, l, s, extra, levels
         self._jitted = jax.jit(bucket)
         self._executables: Dict[Tuple, Any] = {}
         self.dispatch_count = 0
         self.transport_state: Any = None
         self.downlink_state: Any = None
-
-    def _make_downlink_core(self, core):
-        """Wrap the backend's round core with the downlink reconstruction
-        (DESIGN.md §8.6): the carry's extra state is the downlink state
-        (no uplink transport) or an ``(uplink, downlink)`` pair. The inner
-        core runs verbatim on the reconstruction — clients train from, and
-        the server steps against, exactly what was broadcast."""
-        dl, be = self.downlink, self.backend
-
-        if self.transport is None:
-            def d_core(params, batches, weights, eta, server_state, d_state):
-                recon, d_state = dl.broadcast(params, d_state)
-                recon = be.constrain_update(recon)
-                p, f, l, s = core(recon, batches, weights, eta, server_state)
-                return p, f, l, s, d_state
-
-            return d_core
-
-        def td_core(params, batches, weights, eta, server_state, extra):
-            t_state, d_state = extra
-            recon, d_state = dl.broadcast(params, d_state)
-            recon = be.constrain_update(recon)
-            p, f, l, s, t = core(recon, batches, weights, eta, server_state,
-                                 t_state)
-            return p, f, l, s, (t, d_state)
-
-        return td_core
+        # (B,) int32 adaptive levels of the most recent bucket (-1 entries:
+        # padding rounds / fixed-rate codecs); None until a downlink bucket
+        # has run. The trainer reads this right after each dispatch to
+        # charge the wire per level (DESIGN.md §10.4).
+        self.last_downlink_levels = None
 
     def init_server_state(self, params: PyTree) -> Any:
         return self.server.init(params)
@@ -296,7 +324,11 @@ class RoundEngine:
         out = exe(*args)
         if not has_t and not has_d:
             return out
-        params, firsts, lasts, server_state, extra = out
+        if has_d:
+            params, firsts, lasts, server_state, extra, levels = out
+            self.last_downlink_levels = levels
+        else:
+            params, firsts, lasts, server_state, extra = out
         if has_t and has_d:
             self.transport_state, self.downlink_state = extra
         elif has_t:

@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
@@ -139,7 +140,9 @@ class FedAvgTrainer:
                                   backend=backend,
                                   transport=transport,
                                   topk_frac=getattr(fed, "topk_frac", 0.1),
-                                  downlink=getattr(fed, "downlink", "none"))
+                                  downlink=getattr(fed, "downlink", "none"),
+                                  downlink_ref=getattr(fed, "downlink_ref",
+                                                       "f32"))
         self.server_state = self.engine.init_server_state(init_params)
         self.engine.init_transport_state(init_params)
         self.engine.init_downlink_state(init_params)
@@ -159,6 +162,12 @@ class FedAvgTrainer:
             if self.engine.downlink is not None:
                 rt.downlink_compression = \
                     self.engine.downlink.compression_ratio(init_params)
+                # adaptive codec: per-level ratios so each round's wire
+                # charge follows the level it actually shipped (§10.4)
+                level_ratios = getattr(self.engine.downlink, "level_ratios",
+                                       None)
+                if level_ratios is not None:
+                    rt.downlink_level_ratios = level_ratios(init_params)
             self.runtime = rt
         self.history = History()
         self._np_rng = np.random.default_rng(fed.seed)
@@ -211,21 +220,26 @@ class FedAvgTrainer:
         return self.history
 
     # ------------------------------------------------------------------
-    def _dispatch(self, bucket: Bucket,
-                  bb: pipeline.BucketBatch) -> jax.Array:
-        """Run one bucket on device; returns the (B, N) first-loss futures."""
+    def _dispatch(self, bucket: Bucket, bb: pipeline.BucketBatch):
+        """Run one bucket on device; returns the (B, N) first-loss futures
+        and the bucket's (B,) adaptive downlink levels (None without an
+        adaptive codec) — captured immediately because the engine attribute
+        is overwritten by the next pipelined dispatch."""
         pad = bucket.shape_rounds - len(bucket)
         etas = np.asarray(list(bucket.etas) + [bucket.etas[-1]] * pad,
                           np.float32)
         self.params, firsts, _lasts, self.server_state = \
             self.engine.run_bucket(self.params, bb.batches, bb.weights,
                                    etas, bb.active, self.server_state)
-        return firsts
+        levels = (self.engine.last_downlink_levels
+                  if getattr(self.runtime, "downlink_level_ratios", None)
+                  is not None else None)
+        return firsts, levels
 
     def _run_pipelined(self, sched: RoundScheduler, builder, rounds: int,
                        verbose: bool) -> None:
         plan = sched.plan()
-        pending: Optional[Tuple[Bucket, jax.Array]] = None
+        pending: Optional[Tuple[Bucket, jax.Array, Any]] = None
         nxt = next(plan, None)
         if nxt is not None:
             builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds,
@@ -235,15 +249,15 @@ class FedAvgTrainer:
             if nxt is not None:   # scheduler announces the upcoming K-bucket
                 builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds,
                                rounds=nxt.rounds)
-            firsts = self._dispatch(cur, builder.get())
+            firsts, levels = self._dispatch(cur, builder.get())
             if pending is not None:     # sync bucket r-1 while r computes
                 self._absorb(*pending)
                 pending = None
             if cur.eval_after:
-                self._absorb(cur, firsts)
+                self._absorb(cur, firsts, levels)
                 self._eval(cur.rounds[-1], verbose)
             else:
-                pending = (cur, firsts)
+                pending = (cur, firsts, levels)
         if pending is not None:
             self._absorb(*pending)
 
@@ -254,20 +268,28 @@ class FedAvgTrainer:
         for bucket in sched.plan():
             builder.submit(len(bucket), bucket.k, pad_to=bucket.shape_rounds,
                            rounds=bucket.rounds)
-            firsts = self._dispatch(bucket, builder.get())
-            self._absorb(bucket, firsts)          # boundary sync
+            firsts, levels = self._dispatch(bucket, builder.get())
+            self._absorb(bucket, firsts, levels)  # boundary sync
             if bucket.eval_after:
                 self._eval(bucket.rounds[-1], verbose)
 
     # ------------------------------------------------------------------
-    def _absorb(self, bucket: Bucket, firsts: jax.Array) -> None:
-        """Materialise a finished bucket into controller + history state."""
+    def _absorb(self, bucket: Bucket, firsts: jax.Array,
+                levels=None) -> None:
+        """Materialise a finished bucket into controller + history state.
+
+        ``levels``: the bucket's (B,) adaptive downlink levels — only
+        supplied (by ``_dispatch``) when the runtime carries per-level
+        ratios, so fixed-rate codecs keep the historical charge exactly."""
         losses = np.asarray(firsts)               # device sync
+        lv = None if levels is None else np.asarray(levels)
         h = self.history
         for i, r in enumerate(bucket.rounds):
             round_loss = float(np.mean(losses[i]))
             self.ctrl.observe_round_losses(round_loss)
-            cost = self.runtime.round_cost(bucket.k)
+            cost = self.runtime.round_cost(
+                bucket.k,
+                downlink_level=None if lv is None else int(lv[i]))
             self._wall += cost.wall_clock_s
             self._steps += cost.sgd_steps
             self._up_mbit += cost.uplink_mbit
@@ -325,12 +347,36 @@ class FedAvgTrainer:
         configuration (templates for every state tree come from the live
         trainer)."""
         from repro.checkpoint import load_checkpoint
-        like = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
-            {"params": self.params, "server": self.server_state,
-             "transport": self.engine.transport_state,
-             "downlink": self.engine.downlink_state})
-        tree, meta = load_checkpoint(path, like)
+
+        def spec(tree):
+            return jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(np.shape(x),
+                                               np.asarray(x).dtype), tree)
+
+        like = spec({"params": self.params, "server": self.server_state,
+                     "transport": self.engine.transport_state,
+                     "downlink": self.engine.downlink_state})
+        try:
+            tree, meta = load_checkpoint(path, like)
+        except KeyError:
+            # pre-q8 checkpoint into a ref_store="q8" trainer: the stored
+            # downlink trees are f32 params-shaped, so load against the f32
+            # template and re-quantise into the live store (DESIGN.md
+            # §10.3). The quantised ref then round-trips bitwise from here
+            # on; only this one legacy conversion is lossy (~6e-5).
+            dl = self.engine.downlink
+            if dl is None or dl.ref_store == "f32":
+                raise
+            f32 = jax.tree.map(
+                lambda p: jnp.zeros(np.shape(p), jnp.float32), self.params)
+            like["downlink"] = spec(
+                {"ref": self.params,
+                 "res": f32 if dl.error_feedback else ()})
+            tree, meta = load_checkpoint(path, like)
+            d = tree["downlink"]
+            tree["downlink"] = {"ref": dl.store_tree(d["ref"]),
+                                "res": (dl.store_tree(d["res"])
+                                        if dl.error_feedback else ())}
         self.params = tree["params"]
         self.server_state = tree["server"]
         self.engine.transport_state = tree["transport"]

@@ -372,11 +372,24 @@ class TopKTransport(Transport):
 
     def reduce(self, payloads, weights, like):
         from repro.kernels import ops as kops
+        mesh, axes = self._mesh_axes()
+        n = weights.shape[0]
         leaves, treedef = jax.tree.flatten(like)
         out = []
         for pl, leaf in zip(payloads, leaves):
-            flat = kops.topk_delta_reduce(pl["v"], pl["i"], weights,
-                                          int(leaf.size))
+            size = int(leaf.size)
+            # sharded only where the Mosaic formulation itself applies:
+            # the per-shard partial IS the one-hot kernel (ops gates it
+            # off for large payloads in interpret mode)
+            if (mesh is not None and axes
+                    and n % _axes_size(mesh, axes) == 0
+                    and kops.mosaic_scatter_ok(int(pl["v"].size), size)):
+                flat = kops.topk_delta_reduce_sharded(
+                    pl["v"], pl["i"], weights, size, mesh=mesh,
+                    client_axes=axes)
+            else:
+                flat = kops.topk_delta_reduce(pl["v"], pl["i"], weights,
+                                              size)
             out.append(flat.reshape(leaf.shape))
         return jax.tree.unflatten(treedef, out)
 
@@ -396,6 +409,30 @@ class TopKTransport(Transport):
 
     def nominal_ratio(self, bits_per_param: int = 32) -> float:
         return bits_per_param / (64.0 * self.frac)
+
+
+REF_STORES = ("f32", "q8")
+
+
+def _q8_encode(x) -> dict:
+    """Params-shaped f32-equivalent leaf -> two-level int8 store leaf
+    (DESIGN.md §10): Q-KV primary + residual planes over the flattened
+    leaf, per-leaf f32 scales. ~2 bytes/param held instead of 4, worst-case
+    value error ~max|x|/127^2 (~6e-5 relative) — the key names are
+    prefixed so a store leaf can never be confused with a params subtree.
+    """
+    q, s, qr, rs = quantize_kv_residual(x.astype(jnp.float32).reshape(-1))
+    return {"q8_q": q, "q8_s": s, "q8_qr": qr, "q8_rs": rs}
+
+
+def _q8_decode(d: dict, like) -> jnp.ndarray:
+    x = (d["q8_q"].astype(jnp.float32) * d["q8_s"]
+         + d["q8_qr"].astype(jnp.float32) * d["q8_rs"])
+    return x.reshape(like.shape).astype(like.dtype)
+
+
+def _is_q8(x) -> bool:
+    return isinstance(x, dict) and "q8_q" in x
 
 
 class DownlinkCodec:
@@ -419,6 +456,20 @@ class DownlinkCodec:
     uplink aggregation contract is unchanged — the round core simply runs
     on ``recon`` instead of ``params_t`` (robust aggregators included).
 
+    ``encode_broadcast`` is the split-phase entry point the fused round
+    cores use (DESIGN.md §10): it returns the wire payload next to the f32
+    reference view so clients can reconstruct *lazily* inside their own
+    first forward (``decode_into``) instead of the engine materialising the
+    recon tree up front; ``broadcast`` composes the two for callers that
+    want the eager tree (tests, sequential cores).
+
+    ``ref_store="q8"`` keeps ``params_ref``/``residual`` as two-level-int8
+    store leaves (``_q8_encode``) instead of f32-equivalent trees — half
+    the server-side bytes held; the reference is dequantised on demand and
+    the next reference re-quantises the reconstruction. The quantisation
+    error lives *inside* the ref/recon pair coherently (clients and server
+    see the same dequantised view), so the EF algebra is unchanged.
+
     On EF codecs the server pays one extra decode per round to form the
     residual (dec is recomputed next to the fused apply — same f32 ops, so
     the residual is exact w.r.t. the shipped payload); clients only ever
@@ -426,37 +477,81 @@ class DownlinkCodec:
     local-SGD steps.
     """
 
-    def __init__(self, codec: Transport):
+    def __init__(self, codec: Transport, ref_store: str = "f32"):
         if codec is None or getattr(codec, "name", "none") == "none":
             raise ValueError("DownlinkCodec wraps a real codec; use "
                              "downlink='none' for the uncompressed "
                              "broadcast")
+        if ref_store not in REF_STORES:
+            raise ValueError(f"downlink ref_store must be one of "
+                             f"{REF_STORES}: {ref_store!r}")
         self.codec = codec
         self.name = codec.name
         self.error_feedback = bool(codec.error_feedback)
+        self.ref_store = ref_store
 
     # -- identity / compile-cache -------------------------------------
     def signature(self) -> Tuple:
-        return ("downlink",) + tuple(self.codec.signature())
+        sig = ("downlink",) + tuple(self.codec.signature())
+        if self.ref_store != "f32":
+            sig = sig + ("ref:" + self.ref_store,)
+        return sig
 
     # -- mesh binding ---------------------------------------------------
     def with_mesh(self, mesh, client_axes):
         t = copy.copy(self)
+        # the server-side eager decode (encode_broadcast) routes through
+        # the mesh-sharded decode-apply kernel; the client-side lazy decode
+        # (decode_into) runs inside the vmapped client trace where a
+        # shard_map cannot nest — it keeps the unbound elementwise kernel
+        # (bitwise-identical output) and GSPMD places it
+        t._unbound = self.codec
         t.codec = self.codec.with_mesh(mesh, client_axes)
         return t
 
+    # -- quantised ref store -------------------------------------------
+    def store_tree(self, tree: PyTree) -> PyTree:
+        """Params-shaped f32-equivalent tree -> stored representation."""
+        if self.ref_store == "f32":
+            return tree
+        return jax.tree.map(_q8_encode, tree)
+
+    def load_tree(self, stored: PyTree, like: PyTree) -> PyTree:
+        """Stored representation -> params-shaped tree (dequantise on
+        demand; ``like`` supplies shapes/dtypes)."""
+        if self.ref_store == "f32":
+            return stored
+        return jax.tree.map(_q8_decode, stored, like,
+                            is_leaf=lambda x: _is_q8(x))
+
+    def state_bytes(self, state) -> int:
+        """Server-side bytes held by ref + residual (bench accounting)."""
+        return sum(int(l.size) * l.dtype.itemsize
+                   for l in jax.tree.leaves(state))
+
     # -- state ----------------------------------------------------------
     def init_state(self, params: PyTree):
-        ref = jax.tree.map(jnp.asarray, params)
-        res = (jax.tree.map(
-            lambda p: jnp.zeros(tuple(p.shape), jnp.float32), params)
+        ref = self.store_tree(jax.tree.map(
+            lambda p: jnp.asarray(p), params))
+        res = (self.store_tree(jax.tree.map(
+            lambda p: jnp.zeros(tuple(p.shape), jnp.float32), params))
             if self.error_feedback else ())
         return {"ref": ref, "res": res}
 
-    # -- the round entry point -------------------------------------------
-    def broadcast(self, params: PyTree, state):
-        """(server params, state) -> (client reconstruction, new state)."""
-        ref, res = state["ref"], state["res"]
+    # -- the round entry points ------------------------------------------
+    def encode_broadcast(self, params: PyTree, state):
+        """(server params, state) -> (ref, payload, recon, new state).
+
+        ``ref`` is the f32-equivalent reference view (dequantised for q8
+        stores) and ``payload`` the encoded delta — together the lazy
+        client-side reconstruction input (``decode_into``); ``recon`` is
+        the same reconstruction computed eagerly for the server side
+        (aggregate target + next reference). Under jit the eager and lazy
+        decodes are identical elementwise programs, so XLA CSEs them when
+        both land in one round core."""
+        ref = self.load_tree(state["ref"], like=params)
+        res = (self.load_tree(state["res"], like=params)
+               if self.error_feedback else ())
         delta = jax.tree.map(
             lambda p, r: p.astype(jnp.float32) - r.astype(jnp.float32),
             params, ref)
@@ -466,8 +561,21 @@ class DownlinkCodec:
         recon = self.codec.decode_apply(payload, ref)
         if self.error_feedback:
             dec = self.codec.decode(payload, like=params)
-            res = jax.tree.map(jnp.subtract, delta, dec)
-        return recon, {"ref": recon, "res": res}
+            res = self.store_tree(jax.tree.map(jnp.subtract, delta, dec))
+        return ref, payload, recon, {"ref": self.store_tree(recon),
+                                     "res": res}
+
+    def decode_into(self, payload, ref: PyTree) -> PyTree:
+        """Client-side lazy reconstruction: ``ref + dec(payload)`` through
+        the fused decode-apply kernels, run inside ClientUpdate's own
+        trace (DESIGN.md §10) instead of on an engine-materialised tree."""
+        return getattr(self, "_unbound", self.codec).decode_apply(payload,
+                                                                  ref)
+
+    def broadcast(self, params: PyTree, state):
+        """(server params, state) -> (client reconstruction, new state)."""
+        _, _, recon, new_state = self.encode_broadcast(params, state)
+        return recon, new_state
 
     # -- wire accounting -------------------------------------------------
     def encoded_bits(self, params: PyTree) -> int:
@@ -481,30 +589,167 @@ class DownlinkCodec:
         return self.codec.nominal_ratio(bits_per_param)
 
 
-def get_downlink(name, *, topk_frac: float = 0.1) -> Optional[DownlinkCodec]:
+class AdaptiveDownlinkCodec(DownlinkCodec):
+    """Per-round adaptive broadcast codec (DESIGN.md §10).
+
+    Wraps the two-level int8 quantiser with a traced per-round policy on
+    the EF-corrected delta:
+
+      * level 0 — *skip*: ``|delta|`` is near zero relative to ``|ref|``
+        (plateaued schedule, converged model): ship nothing; the whole
+        delta folds into the EF residual and clients keep training on the
+        previous reconstruction.
+      * level 2 — *boost*: the EF residual norm spikes relative to the
+        delta norm (compression error piling up faster than the model
+        moves): ship both int8 planes (``int8x2``) to drain the residual.
+      * level 1 — the default single-plane ``int8`` broadcast.
+
+    The decision is data-dependent but shape-static: all planes are always
+    computed, levels select via ``jnp.where`` masks so one compiled
+    program covers every round. The chosen level rides out of the round
+    core as an int32 scalar per round; ``FedAvgTrainer`` charges
+    ``RuntimeModel`` per-level (level 0 pays zero broadcast bits).
+    Error feedback is structural here — a skipped round's delta *must*
+    survive in the residual — so the codec always runs with EF on.
+    """
+
+    def __init__(self, *, skip_rtol: float = 1e-3, boost_rtol: float = 0.5,
+                 ref_store: str = "f32"):
+        super().__init__(Int8Transport(levels=2, error_feedback=True),
+                         ref_store=ref_store)
+        self.name = "adaptive"
+        self.skip_rtol = float(skip_rtol)
+        self.boost_rtol = float(boost_rtol)
+
+    def signature(self) -> Tuple:
+        sig = ("downlink", "adaptive", self.skip_rtol, self.boost_rtol)
+        if self.ref_store != "f32":
+            sig = sig + ("ref:" + self.ref_store,)
+        return sig
+
+    @staticmethod
+    def _norm(tree) -> jnp.ndarray:
+        leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+                  for l in jax.tree.leaves(tree)]
+        return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+    def _level(self, delta, ref, res) -> jnp.ndarray:
+        nd, nref, nres = self._norm(delta), self._norm(ref), self._norm(res)
+        ship = nd > self.skip_rtol * (nref + 1e-12)
+        boost = nres > self.boost_rtol * (nd + 1e-12)
+        return jnp.where(ship, jnp.where(boost, 2, 1), 0).astype(jnp.int32)
+
+    def encode_broadcast(self, params: PyTree, state):
+        """Returns ``(ref, payload, recon, new_state, level)`` — one more
+        element than the base codec: the traced per-round level."""
+        ref = self.load_tree(state["ref"], like=params)
+        res32 = self.load_tree(state["res"], like=params)
+        delta = jax.tree.map(
+            lambda p, r: p.astype(jnp.float32) - r.astype(jnp.float32),
+            params, ref)
+        # policy inputs: the raw round delta vs the accumulated residual
+        level = self._level(delta, ref, res32)
+        delta = jax.tree.map(jnp.add, delta, res32)
+        payload = self.codec.encode(delta)   # both planes, always computed
+        payload = [dict(pl, lvl=level) for pl in payload]
+        recon = self.decode_into(payload, ref)
+        dec = self._decode(payload, like=params)
+        res = self.store_tree(jax.tree.map(jnp.subtract, delta, dec))
+        return ref, payload, recon, {"ref": self.store_tree(recon),
+                                     "res": res}, level
+
+    def _decode(self, payload, like: PyTree) -> PyTree:
+        """Level-masked dequantise: level 0 decodes to zero (nothing on
+        the wire), level 1 the primary plane, level 2 both planes."""
+        leaves, treedef = jax.tree.flatten(like)
+        dec = []
+        for pl, leaf in zip(payload, leaves):
+            lvl = pl["lvl"]
+            x = jnp.where(lvl >= 1,
+                          pl["q"].astype(jnp.float32) * pl["s"], 0.0)
+            x = x + jnp.where(lvl >= 2,
+                              pl["qr"].astype(jnp.float32) * pl["rs"], 0.0)
+            dec.append(x.reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, dec)
+
+    def decode_into(self, payload, ref: PyTree) -> PyTree:
+        dec = self._decode(payload, like=ref)
+        return jax.tree.map(
+            lambda r, d: (r.astype(jnp.float32) + d).astype(r.dtype),
+            ref, dec)
+
+    def broadcast(self, params: PyTree, state):
+        _, _, recon, new_state, _ = self.encode_broadcast(params, state)
+        return recon, new_state
+
+    # -- wire accounting: nominal = the default level-1 broadcast ---------
+    def _level_bits(self, params: PyTree, level: int) -> int:
+        if level <= 0:
+            return 0
+        bits = 0
+        for leaf in jax.tree.leaves(params):
+            bits += level * (8 * int(leaf.size) + 32)    # planes + scales
+        return bits
+
+    def encoded_bits(self, params: PyTree) -> int:
+        return self._level_bits(params, 1)
+
+    def compression_ratio(self, params: PyTree,
+                          bits_per_param: int = 32) -> float:
+        full = bits_per_param * sum(int(l.size)
+                                    for l in jax.tree.leaves(params))
+        return full / float(self.encoded_bits(params))
+
+    def level_ratios(self, params: PyTree,
+                     bits_per_param: int = 32) -> dict:
+        """{level: compression ratio} for RuntimeModel's per-level wire
+        charging (level 0 ships nothing and is charged as such)."""
+        full = bits_per_param * sum(int(l.size)
+                                    for l in jax.tree.leaves(params))
+        return {lvl: full / float(self._level_bits(params, lvl))
+                for lvl in (1, 2)}
+
+    def nominal_ratio(self, bits_per_param: int = 32) -> float:
+        return bits_per_param / 8.0
+
+
+def get_downlink(name, *, topk_frac: float = 0.1,
+                 ref_store: str = "f32") -> Optional[DownlinkCodec]:
     """Resolve the broadcast codec through the same transport registry
-    (any registered codec doubles as a downlink codec). ``None``/``"none"``
+    (any registered codec doubles as a downlink codec; downlink-only
+    codecs like ``adaptive`` resolve here exclusively). ``None``/``"none"``
     -> None: the engine keeps the historical uncompressed broadcast (and
     its compiled program) bit-for-bit."""
     if name is None or isinstance(name, DownlinkCodec):
         return name
     codec = (name if isinstance(name, Transport)
-             else TRANSPORT_REGISTRY.get(name)(topk_frac=topk_frac))
+             else TRANSPORT_REGISTRY.get(name)(topk_frac=topk_frac,
+                                               ref_store=ref_store))
     if codec is None:                              # registry "none"
         return None
-    return DownlinkCodec(codec)
+    if isinstance(codec, DownlinkCodec):           # e.g. "adaptive"
+        return codec
+    return DownlinkCodec(codec, ref_store=ref_store)
 
 
 def get_transport(name, *, topk_frac: float = 0.1) -> Optional[Transport]:
     """Resolve a codec through the plugin registry. ``None``/``"none"`` ->
     None: the engine keeps its historical (bit-identical) param-space path.
     A ``Transport`` instance passes through. Unknown names get did-you-mean
-    errors from the registry."""
+    errors from the registry; downlink-only codecs are rejected."""
     if name is None:
         return None
+    if isinstance(name, DownlinkCodec):
+        raise ValueError(f"{name.name!r} is a downlink-only codec; it is "
+                         f"valid for transport.downlink, not "
+                         f"transport.name")
     if isinstance(name, Transport):
         return name
-    return TRANSPORT_REGISTRY.get(name)(topk_frac=topk_frac)
+    codec = TRANSPORT_REGISTRY.get(name)(topk_frac=topk_frac)
+    if isinstance(codec, DownlinkCodec):
+        raise ValueError(f"{name!r} is a downlink-only codec; it is valid "
+                         f"for transport.downlink, not transport.name")
+    return codec
 
 
 # builtin registrations — factory signature: f(*, topk_frac, **kw)
@@ -517,3 +762,7 @@ register_transport(
     "topk",
     lambda *, topk_frac=0.1, **kw: TopKTransport(frac=topk_frac,
                                                  error_feedback=True))
+register_transport(
+    "adaptive",
+    lambda *, ref_store="f32", **kw: AdaptiveDownlinkCodec(
+        ref_store=ref_store))

@@ -51,6 +51,11 @@ class RuntimeModel:
         self.het = heterogeneity
         self.uplink_compression = float(uplink_compression)
         self.downlink_compression = float(downlink_compression)
+        #: optional {level: ratio} map for the adaptive downlink codec
+        #: (DESIGN.md §10.4): set by the trainer, consulted by
+        #: ``round_cost(..., downlink_level=...)``. None -> the fixed
+        #: ``downlink_compression`` ratio charges every round.
+        self.downlink_level_ratios = None
         self._rng = np.random.default_rng(seed)
 
     @property
@@ -75,10 +80,25 @@ class RuntimeModel:
         return (self.downlink_mbit_per_client / self.cfg.download_mbps
                 + self.uplink_mbit_per_client / self.cfg.upload_mbps)
 
-    def round_cost(self, k: int) -> RoundCost:
-        """Eq. 3/4: straggler max over the round's client draws."""
+    def round_cost(self, k: int, downlink_level: Optional[int] = None
+                   ) -> RoundCost:
+        """Eq. 3/4: straggler max over the round's client draws.
+
+        ``downlink_level``: the adaptive codec's per-round level
+        (DESIGN.md §10.4) — consulted only when ``downlink_level_ratios``
+        is set. Level 0 ships no broadcast (zero downlink mbit/time);
+        levels in the map charge that level's ratio; -1/None (fixed-rate
+        codec or padding round) charges the configured ratio."""
         up = self.uplink_mbit_per_client
         down = self.downlink_mbit_per_client
+        if self.downlink_level_ratios is not None and \
+                downlink_level is not None and downlink_level >= 0:
+            if downlink_level == 0:
+                down = 0.0
+            else:
+                ratio = self.downlink_level_ratios.get(
+                    downlink_level, self.downlink_compression)
+                down = self.size / float(ratio)
         base = (down / self.cfg.download_mbps
                 + k * self.cfg.beta_seconds
                 + up / self.cfg.upload_mbps)

@@ -24,8 +24,23 @@ model-size buffer per shard while the wire/HBM payload stays int8.
 
 Top-k payloads reduce by scatter-add (``topk_scatter_reduce``): one flat
 (N*S,) scatter into an f32 (M,) zero buffer — never an (N, M) dense stack.
-A Pallas TPU scatter needs a one-hot MXU matmul formulation; recorded as a
-future optimisation (DESIGN.md §8), the XLA scatter is used on all backends.
+The XLA scatter is kept as the oracle; ``topk_scatter_reduce_mosaic`` /
+``topk_scatter_apply_mosaic`` are the Mosaic formulation (DESIGN.md §10):
+a TPU has no fast random scatter, but the scatter-add is exactly
+
+    out[m] = sum_t contrib[t] * [idx[t] == m]
+
+— a (1, BS) x (BS, BM) matmul against a one-hot matrix built in-register
+from an iota compare, accumulated over payload blocks with the output tile
+resident in VMEM. Duplicate indices accumulate through the matmul
+contraction (scatter-add semantics for free); padded payload slots carry
+``idx == -1``, which matches no column. The work is dense T x M, which the
+MXU streams far faster than a serialised scatter; ``kernels.ops`` picks the
+formulation per call site (XLA scatter stays the oracle and the
+interpret-mode fallback for large payloads, where dense T x M work is real
+scalar FLOPs). ``topk_scatter_reduce_sharded`` follows
+``fedavg_reduce_sharded``'s contract: payloads sharded over the mesh client
+axes, per-shard one-hot partials, one psum.
 
 The *downlink* leg (DESIGN.md §8.6) is the mirror image: the server ships
 one encoded delta and every client applies it to the broadcast reference.
@@ -221,7 +236,8 @@ def topk_scatter_apply(ref, vals, idx) -> jnp.ndarray:
     """ref (M,); vals/idx (S,) -> ref with the kept coordinates added.
 
     One flat scatter-add into a copy of the reference — the dense decoded
-    delta never exists (same XLA-scatter rationale as the uplink reduce)."""
+    delta never exists (same XLA-scatter rationale as the uplink reduce).
+    The XLA-scatter oracle for ``topk_scatter_apply_mosaic``."""
     shape = ref.shape
     flat = ref.astype(jnp.float32).reshape(-1)
     out = flat.at[idx].add(vals.astype(jnp.float32))
@@ -232,9 +248,142 @@ def topk_scatter_reduce(vals, idx, weights, size: int) -> jnp.ndarray:
     """vals/idx (N, S), weights (N,) -> (M,) f32 scatter-add reduction.
 
     One flat (N*S,) scatter into a zeroed (M,) buffer — the decoded dense
-    per-client deltas are never materialised. XLA scatter on every backend;
-    a Mosaic one-hot-matmul formulation is a recorded future optimisation.
+    per-client deltas are never materialised. The XLA-scatter oracle for
+    ``topk_scatter_reduce_mosaic`` (and the large-payload interpret-mode
+    fallback — see ``kernels.ops``).
     """
     contrib = vals.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
     out = jnp.zeros((size,), jnp.float32)
     return out.at[idx.reshape(-1)].add(contrib.reshape(-1))
+
+
+# ---------------------------------------------------------------------------
+# top-k scatter: Mosaic one-hot-matmul formulation (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+#: MXU-aligned defaults: BM output columns stay VMEM-resident across the
+#: payload-block loop; BS payload entries per one-hot matmul step.
+TOPK_BLOCK_M = 512
+TOPK_BLOCK_S = 256
+
+
+def _one_hot_block(idx, block_m, base):
+    """(BS,) int32 indices -> (BS, BM) f32 one-hot columns for the output
+    tile starting at ``base``. Built from a 2D iota compare (TPU-legal);
+    padded slots (idx == -1) match no column."""
+    cols = base + jax.lax.broadcasted_iota(jnp.int32,
+                                           (idx.shape[0], block_m), 1)
+    return (idx[:, None] == cols).astype(jnp.float32)
+
+
+def _scatter_kernel(idx_ref, c_ref, o_ref, *, block_m):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    oh = _one_hot_block(idx_ref[0, :], block_m, pl.program_id(0) * block_m)
+    o_ref[...] += jnp.dot(c_ref[...].astype(jnp.float32), oh,
+                          preferred_element_type=jnp.float32)
+
+
+def _scatter_apply_kernel(ref_ref, idx_ref, c_ref, o_ref, *, block_m):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = ref_ref[...].astype(jnp.float32)
+
+    oh = _one_hot_block(idx_ref[0, :], block_m, pl.program_id(0) * block_m)
+    o_ref[...] += jnp.dot(c_ref[...].astype(jnp.float32), oh,
+                          preferred_element_type=jnp.float32)
+
+
+def _pad_flat(x, mult, value=0):
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, (0, pad), constant_values=value) if pad else x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("size", "block_m", "block_s", "interpret"))
+def topk_scatter_reduce_mosaic(vals, idx, weights, size: int, *,
+                               block_m: int = TOPK_BLOCK_M,
+                               block_s: int = TOPK_BLOCK_S,
+                               interpret: bool = False) -> jnp.ndarray:
+    """One-hot-matmul ``topk_scatter_reduce``: vals/idx (N, S), weights (N,)
+    -> (M,) f32. The per-client weight folds into the payload values before
+    flattening, so the kernel reduces one flat (T,) contribution stream;
+    grid (M/BM, T/BS) with the output tile innermost-resident."""
+    contrib = (vals.astype(jnp.float32)
+               * weights.astype(jnp.float32)[:, None]).reshape(-1)
+    if size == 0 or contrib.shape[0] == 0:      # empty leaf / k == 0 payload
+        return jnp.zeros((size,), jnp.float32)
+    c = _pad_flat(contrib, block_s)
+    ix = _pad_flat(idx.reshape(-1).astype(jnp.int32), block_s, value=-1)
+    mp = size + ((-size) % block_m)
+    out = pl.pallas_call(
+        functools.partial(_scatter_kernel, block_m=block_m),
+        grid=(mp // block_m, c.shape[0] // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s), lambda i, j: (0, j)),   # idx block
+            pl.BlockSpec((1, block_s), lambda i, j: (0, j)),   # contrib block
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, mp), jnp.float32),
+        interpret=interpret,
+    )(ix[None, :], c[None, :])
+    return out[0, :size]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_s", "interpret"))
+def topk_scatter_apply_mosaic(ref, vals, idx, *,
+                              block_m: int = TOPK_BLOCK_M,
+                              block_s: int = TOPK_BLOCK_S,
+                              interpret: bool = False) -> jnp.ndarray:
+    """One-hot-matmul ``topk_scatter_apply``: the output tile initialises
+    from the reference block instead of zeros, so dequantise + add-to-ref
+    stay one fused pass (downlink reconstruction, DESIGN.md §8.6)."""
+    shape, dtype = ref.shape, ref.dtype
+    flat = ref.astype(jnp.float32).reshape(-1)
+    m = flat.shape[0]
+    if m == 0 or vals.shape[0] == 0:            # empty leaf / empty payload
+        return ref
+    r = _pad_flat(flat, block_m)
+    c = _pad_flat(vals.astype(jnp.float32).reshape(-1), block_s)
+    ix = _pad_flat(idx.reshape(-1).astype(jnp.int32), block_s, value=-1)
+    mp = r.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_scatter_apply_kernel, block_m=block_m),
+        grid=(mp // block_m, c.shape[0] // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_m), lambda i, j: (0, i)),   # ref tile
+            pl.BlockSpec((1, block_s), lambda i, j: (0, j)),   # idx block
+            pl.BlockSpec((1, block_s), lambda i, j: (0, j)),   # vals block
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, mp), jnp.float32),
+        interpret=interpret,
+    )(r[None, :], ix[None, :], c[None, :])
+    return out[0, :m].reshape(shape).astype(dtype)
+
+
+def topk_scatter_reduce_sharded(vals, idx, weights, size: int, *, mesh,
+                                client_axes,
+                                block_m: int = TOPK_BLOCK_M,
+                                block_s: int = TOPK_BLOCK_S,
+                                interpret: bool = False) -> jnp.ndarray:
+    """Mesh variant (the ``fedavg_reduce_sharded`` contract): payload rows
+    sharded over ``client_axes``, each shard one-hot-reduces its local
+    clients into an f32 (M,) partial, one psum sums the partials. N must
+    divide the axes' size."""
+    axes = tuple(client_axes)
+
+    def local(v, ix, w):
+        partial = topk_scatter_reduce_mosaic(
+            v, ix, w, size, block_m=block_m, block_s=block_s,
+            interpret=interpret)
+        # check_rep=False: no replication rule for pallas_call; the psum
+        # makes the P() out_spec replication explicit (as fedavg_reduce)
+        return jax.lax.psum(partial, axes)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes, None), P(axes, None), P(axes)),
+                     out_specs=P(), check_rep=False)(vals, idx, weights)

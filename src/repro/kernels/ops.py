@@ -95,9 +95,39 @@ def int8_delta_reduce_sharded(q, w_eff, qr=None, wr_eff=None, *, mesh,
                                               interpret=INTERPRET)
 
 
+#: Interpret-mode ceiling for the Mosaic one-hot scatter: its dense T x M
+#: formulation is what makes the MXU fast on TPU, but in interpret mode
+#: (CPU) those are real scalar FLOPs — large payloads fall back to the XLA
+#: scatter oracle there. On TPU the Mosaic path is always taken.
+MOSAIC_SCATTER_MAX_INTERPRET_WORK = 1 << 20
+
+
+def mosaic_scatter_ok(payload_entries: int, size: int) -> bool:
+    """Whether the one-hot Mosaic formulation is the right scatter for a
+    ``payload_entries x size`` dense work volume on this backend."""
+    return ((not INTERPRET)
+            or payload_entries * size <= MOSAIC_SCATTER_MAX_INTERPRET_WORK)
+
+
 def topk_delta_reduce(vals, idx, weights, size: int) -> jnp.ndarray:
-    """Weighted scatter-add reduction of top-k payloads -> (M,) f32."""
+    """Weighted scatter-add reduction of top-k payloads -> (M,) f32:
+    Mosaic one-hot matmul (DESIGN.md §10), XLA scatter as the
+    large-payload interpret fallback/oracle."""
+    if mosaic_scatter_ok(int(vals.shape[0]) * int(vals.shape[1]), size):
+        return _dc.topk_scatter_reduce_mosaic(vals, idx, weights, size,
+                                              interpret=INTERPRET)
     return _dc.topk_scatter_reduce(vals, idx, weights, size)
+
+
+def topk_delta_reduce_sharded(vals, idx, weights, size: int, *, mesh,
+                              client_axes) -> jnp.ndarray:
+    """Mesh variant: payload rows sharded over the client axes, per-shard
+    one-hot partials + all-reduce (the ``fedavg_reduce_sharded`` contract
+    on sparse payloads)."""
+    return _dc.topk_scatter_reduce_sharded(vals, idx, weights, size,
+                                           mesh=mesh,
+                                           client_axes=client_axes,
+                                           interpret=INTERPRET)
 
 
 def int8_delta_apply(ref, q, s, qr=None, rs=None) -> jnp.ndarray:
@@ -116,7 +146,12 @@ def int8_delta_apply_sharded(ref, q, s, qr=None, rs=None, *, mesh,
 
 def topk_delta_apply(ref, vals, idx) -> jnp.ndarray:
     """Downlink top-k reconstruction: scatter-add the kept coordinates into
-    a copy of the broadcast reference."""
+    a copy of the broadcast reference — Mosaic one-hot matmul with the
+    output tile initialised from the reference block; XLA scatter as the
+    large-payload interpret fallback/oracle."""
+    if mosaic_scatter_ok(int(vals.shape[0]), int(ref.size)):
+        return _dc.topk_scatter_apply_mosaic(ref, vals, idx,
+                                             interpret=INTERPRET)
     return _dc.topk_scatter_apply(ref, vals, idx)
 
 

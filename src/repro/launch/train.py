@@ -62,9 +62,13 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--topk-frac", type=float, default=0.1,
                     help="kept coordinate fraction for --transport topk")
     ap.add_argument("--downlink", default="none",
-                    choices=("none", "int8", "int8x2", "topk"),
+                    choices=("none", "int8", "int8x2", "topk", "adaptive"),
                     help="server broadcast codec: delta vs the last "
-                         "broadcast reference (DESIGN.md §8.6)")
+                         "broadcast reference (DESIGN.md §8.6; 'adaptive' "
+                         "picks skip/int8/int8x2 per round, §10)")
+    ap.add_argument("--ref-store", default="f32", choices=("f32", "q8"),
+                    help="server-held downlink reference/residual store "
+                         "(q8: two-level int8, ~2x less state, §10.3)")
     ap.add_argument("--sampler", default="uniform",
                     choices=("uniform", "weighted", "fixed_cohort",
                              "availability"),
@@ -121,6 +125,7 @@ def spec_from_legacy_args(args) -> ExperimentSpec:
         f"transport.name={args.transport}",
         f"transport.topk_frac={args.topk_frac}",
         f"transport.downlink={args.downlink}",
+        f"transport.ref_store={args.ref_store}",
         f"backend.name={args.backend}", f"backend.strategy={args.strategy}",
         f"backend.groups={args.groups}",
         "runtime.beta_seconds=0.05")

@@ -1,0 +1,126 @@
+"""CI perf-gate + roofline bench plumbing (DESIGN.md §10.5).
+
+The gate's job is to fail loudly: on a numerics regression vs the jnp
+oracles, on an order-of-magnitude kernel/oracle timing-ratio shift, and on
+a gated row silently vanishing from the bench. The roofline runner's job
+is never to green-light an empty table.
+"""
+import json
+
+import pytest
+
+from benchmarks import perf_gate, roofline_bench
+
+
+def _rec(name, kernel_us, oracle_us, delta):
+    return {"name": name, "kernel_us": kernel_us, "oracle_us": oracle_us,
+            "max_abs_delta": delta}
+
+
+BASELINE = [
+    _rec("kern_fedavg_reduce", 100.0, 120.0, 4e-7),
+    _rec("kern_topk_scatter_reduce_mosaic", 500.0, 100.0, 0.0),
+    _rec("kern_flash_attention", 50.0, None, 1e-3),      # ungated row
+]
+
+
+# ---------------------------------------------------------------------------
+# perf_gate.check
+# ---------------------------------------------------------------------------
+
+def test_gate_passes_on_identical_records():
+    assert perf_gate.check(BASELINE, BASELINE) == []
+
+
+def test_gate_flags_timing_ratio_regression():
+    cur = [dict(r) for r in BASELINE]
+    cur[1]["kernel_us"] = 500.0 * 100          # mosaic path fell off a cliff
+    msgs = perf_gate.check(cur, BASELINE)
+    assert len(msgs) == 1
+    assert "kern_topk_scatter_reduce_mosaic" in msgs[0]
+    assert "ratio" in msgs[0]
+
+
+def test_gate_flags_numerics_regression():
+    cur = [dict(r) for r in BASELINE]
+    cur[0]["max_abs_delta"] = 0.5
+    msgs = perf_gate.check(cur, BASELINE)
+    assert len(msgs) == 1
+    assert "kern_fedavg_reduce" in msgs[0] and "max_abs_delta" in msgs[0]
+
+
+def test_gate_missing_gated_row_fails():
+    cur = [r for r in BASELINE if r["name"] != "kern_fedavg_reduce"]
+    msgs = perf_gate.check(cur, BASELINE)
+    assert msgs and "missing" in msgs[0]
+
+
+def test_gate_ignores_ungated_rows():
+    """Attention/SSD/MoE rows carry no oracle contract here — an extra or
+    regressed ungated row must not trip the wire-path gate."""
+    cur = [dict(r) for r in BASELINE]
+    cur[2]["kernel_us"] = 1e9
+    cur[2]["max_abs_delta"] = 1e9
+    assert perf_gate.check(cur, BASELINE) == []
+    assert perf_gate.check(BASELINE, BASELINE + [
+        _rec("kern_ssd_scan", 1.0, None, 0.0)]) == []
+
+
+def test_gate_timing_floor_absorbs_fast_oracle_noise():
+    """A kernel far *faster* than its oracle gates on the ratio floor, not
+    on a noise-scale baseline ratio."""
+    base = [_rec("kern_topk_scatter_reduce_xla", 1.0, 10000.0, 0.0)]
+    cur = [_rec("kern_topk_scatter_reduce_xla", 3.0, 10000.0, 0.0)]
+    assert perf_gate.check(cur, base) == []    # 3x jitter under the floor
+
+
+def test_gate_load_records_wrapped_and_bare(tmp_path):
+    wrapped = tmp_path / "wrapped.json"
+    wrapped.write_text(json.dumps({"jax": "0.0", "records": BASELINE}))
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps(BASELINE))
+    assert perf_gate.load_records(str(wrapped)) == BASELINE
+    assert perf_gate.load_records(str(bare)) == BASELINE
+
+
+def test_gate_cli_exit_codes(tmp_path, capsys):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps({"records": BASELINE}))
+    bad = tmp_path / "bad.json"
+    regressed = [dict(r) for r in BASELINE]
+    regressed[0]["max_abs_delta"] = 0.5
+    bad.write_text(json.dumps({"records": regressed}))
+    perf_gate.main(["--current", str(good), "--baseline", str(good)])
+    with pytest.raises(SystemExit) as e:
+        perf_gate.main(["--current", str(bad), "--baseline", str(good)])
+    assert e.value.code == 1
+    assert "perf gate FAILED" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# roofline_bench: empty record sets must be loud, never silently green
+# ---------------------------------------------------------------------------
+
+def test_roofline_load_records_empty_and_populated(tmp_path):
+    assert roofline_bench.load_records(str(tmp_path)) == []
+    rec = {"status": "skipped", "case": "a1", "reason": "no-tpu:host"}
+    (tmp_path / "a1.json").write_text(json.dumps(rec))
+    assert roofline_bench.load_records(str(tmp_path)) == [rec]
+
+
+def test_roofline_strict_raises_on_empty(tmp_path):
+    with pytest.raises(SystemExit, match="no dry-run records"):
+        roofline_bench.run(verbose=False, strict=True,
+                           dirname=str(tmp_path))
+
+
+def test_roofline_nonstrict_emits_explicit_skip_row(tmp_path):
+    rows = roofline_bench.run(verbose=False, dirname=str(tmp_path))
+    assert rows == [("roofline_all", 0.0, "SKIPPED:no-dryrun-records")]
+
+
+def test_roofline_rows_from_records(tmp_path):
+    rec = {"status": "skipped", "case": "a1", "reason": "no-tpu:host"}
+    (tmp_path / "a1.json").write_text(json.dumps(rec))
+    rows = roofline_bench.run(verbose=False, dirname=str(tmp_path))
+    assert rows == [("roofline_a1", 0.0, "skipped:no-tpu")]

@@ -157,3 +157,102 @@ def test_moe_ffn_kernel_matches_oracle():
         np.asarray(ops.moe_gmm(x, gate, up, down)),
         np.asarray(ref.moe_ffn_ref(x, gate, up, down)),
         rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# top-k scatter (Mosaic one-hot matmul, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import delta_codec as dc          # noqa: E402
+from repro.launch.mesh import make_host_mesh         # noqa: E402
+
+
+def _topk_payload(seed, n, k, m):
+    """Random (N, S) payload; indices drawn WITH replacement so duplicate
+    coordinates (several clients keeping the same weight) are the common
+    case, not the edge case."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    vals = jax.random.normal(ks[0], (n, k))
+    idx = jax.random.randint(ks[1], (n, k), 0, max(m, 1), dtype=jnp.int32)
+    w = jax.nn.softmax(jax.random.normal(ks[2], (n,)))
+    return vals, idx, w
+
+
+@pytest.mark.parametrize("n,k,m", [(3, 5, 17), (8, 64, 1000), (1, 1, 1),
+                                   (2, 7, 1), (5, 130, 4099)])
+def test_topk_scatter_reduce_mosaic_sweep(n, k, m):
+    vals, idx, w = _topk_payload(n * 1000 + k, n, k, m)
+    want = dc.topk_scatter_reduce(vals, idx, w, m)
+    got = dc.topk_scatter_reduce_mosaic(vals, idx, w, m, interpret=True)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_topk_scatter_reduce_mosaic_duplicates_accumulate():
+    """Colliding coordinates must sum, exactly as the XLA scatter-add."""
+    vals = jnp.array([[1.0, 2.0, 4.0], [8.0, 16.0, 32.0]])
+    idx = jnp.array([[0, 0, 3], [3, 1, 0]], jnp.int32)
+    w = jnp.array([1.0, 0.5])
+    got = dc.topk_scatter_reduce_mosaic(vals, idx, w, 5, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.array([1 + 2 + 16, 8, 0, 4 + 4, 0], np.float32))
+
+
+def test_topk_scatter_reduce_mosaic_empty_payload():
+    """k == 0 (codec kept nothing) must yield an exact zero reduction."""
+    vals = jnp.zeros((2, 0))
+    idx = jnp.zeros((2, 0), jnp.int32)
+    w = jnp.array([0.5, 0.5])
+    got = dc.topk_scatter_reduce_mosaic(vals, idx, w, 37, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(37, np.float32))
+
+
+@pytest.mark.parametrize("s,m", [(6, 40), (1, 1), (130, 4099)])
+def test_topk_scatter_apply_mosaic_matches_xla_bitwise(s, m):
+    """Unique indices: the one-hot matmul adds exactly one f32 term per
+    output slot, so reconstruction is bit-identical to the XLA scatter."""
+    ks = jax.random.split(jax.random.PRNGKey(s * m), 3)
+    refv = jax.random.normal(ks[0], (m,))
+    vals = jax.random.normal(ks[1], (s,))
+    idx = jax.random.permutation(ks[2], m)[:s].astype(jnp.int32)
+    got = dc.topk_scatter_apply_mosaic(refv, vals, idx, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(dc.topk_scatter_apply(refv, vals, idx)))
+
+
+def test_topk_scatter_apply_mosaic_duplicates_and_empty():
+    refv = jnp.array([10.0, 20.0, 30.0])
+    vals = jnp.array([1.0, 2.0, 4.0])
+    idx = jnp.array([2, 2, 0], jnp.int32)
+    got = dc.topk_scatter_apply_mosaic(refv, vals, idx, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), [14.0, 20.0, 33.0],
+                               rtol=1e-6)
+    # empty payload: the reference passes through untouched
+    empty = dc.topk_scatter_apply_mosaic(
+        refv, jnp.zeros((0,)), jnp.zeros((0,), jnp.int32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(empty), np.asarray(refv))
+
+
+def test_topk_scatter_sharded_matches_unsharded():
+    mesh = make_host_mesh()
+    vals, idx, w = _topk_payload(11, 4, 16, 513)
+    want = dc.topk_scatter_reduce_mosaic(vals, idx, w, 513, interpret=True)
+    got = dc.topk_scatter_reduce_sharded(vals, idx, w, 513, mesh=mesh,
+                                         client_axes=("data",),
+                                         interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_mosaic_scatter_dispatch_gate():
+    """ops.topk_delta_reduce picks Mosaic for small dense work volumes and
+    the XLA oracle beyond the interpret-mode ceiling — both must agree."""
+    assert ops.mosaic_scatter_ok(8, 100)
+    if ops.INTERPRET:
+        assert not ops.mosaic_scatter_ok(1 << 12, 1 << 12)
+    vals, idx, w = _topk_payload(0, 4, 16, 333)
+    out = ops.topk_delta_reduce(vals, idx, w, 333)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(dc.topk_scatter_reduce(vals, idx, w, 333)),
+        rtol=1e-6, atol=1e-6)

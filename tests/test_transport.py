@@ -588,3 +588,150 @@ def test_compression_ratio_accounting(delta_fixture):
     topk = TopKTransport(frac=0.05)
     assert topk.nominal_ratio() == pytest.approx(10.0)
     assert get_transport("none") is None
+
+
+# ---------------------------------------------------------------------------
+# quantised params_ref store + adaptive downlink (DESIGN.md §10.3-10.4)
+# ---------------------------------------------------------------------------
+
+from repro.core.engine import AdaptiveDownlinkCodec  # noqa: E402
+
+
+def test_q8_ref_store_roundtrip_and_bytes(delta_fixture):
+    """ref_store='q8' holds params_ref/residual as two-level int8 + scales:
+    ~2 bytes/param held server-side, reconstruction error one second-level
+    quantisation step, and the codec signature (compile key) changes."""
+    params, _, _ = delta_fixture
+    f32 = DownlinkCodec(Int8Transport(levels=1))
+    q8 = DownlinkCodec(Int8Transport(levels=1), ref_store="q8")
+    assert q8.signature() != f32.signature()
+    assert q8.signature()[-1] == "ref:q8"
+    st = q8.init_state(params)
+    assert any(l.dtype == jnp.int8 for l in jax.tree.leaves(st["ref"]))
+    back = q8.load_tree(st["ref"], like=params)
+    for x, y in zip(jax.tree.leaves(back), jax.tree.leaves(params)):
+        bound = float(jnp.max(jnp.abs(y))) / 127.0 ** 2
+        assert float(jnp.max(jnp.abs(x - y))) <= bound
+    assert q8.state_bytes(st) < 0.6 * f32.state_bytes(f32.init_state(params))
+    with pytest.raises(ValueError):
+        DownlinkCodec(Int8Transport(levels=1), ref_store="fp8")
+
+
+def test_q8_ref_store_trains_matched_loss(femnist_setup):
+    """|dloss| <= 2e-2 vs the f32 ref store, with ~2x less state held."""
+    base, _ = run_trainer(femnist_setup, "none", downlink="int8")
+    q8, _ = run_trainer(femnist_setup, "none", downlink="int8",
+                        downlink_ref="q8")
+    assert np.isfinite(q8.history.train_loss).all()
+    assert abs(q8.history.train_loss[-1]
+               - base.history.train_loss[-1]) < 2e-2
+    held_f32 = base.engine.downlink.state_bytes(base.engine.downlink_state)
+    held_q8 = q8.engine.downlink.state_bytes(q8.engine.downlink_state)
+    assert held_q8 < 0.6 * held_f32
+    # same wire bytes: the ref store is a server-memory knob, not a codec
+    assert q8.history.downlink_mbit[-1] == \
+        pytest.approx(base.history.downlink_mbit[-1])
+
+
+def test_q8_ref_requires_downlink(femnist_setup):
+    task, data, loss_fn, params = femnist_setup
+    with pytest.raises(ValueError, match="downlink_ref"):
+        RoundEngine(loss_fn, downlink=None, downlink_ref="q8")
+
+
+def test_adaptive_is_downlink_only():
+    assert isinstance(get_downlink("adaptive"), AdaptiveDownlinkCodec)
+    with pytest.raises(ValueError, match="downlink-only"):
+        get_transport("adaptive")
+
+
+def test_adaptive_level_policy(delta_fixture):
+    """Traced level policy: zero delta skips (0), a real delta ships int8
+    (1), a spiked EF residual boosts to int8x2 (2); the lazy decode_into
+    matches the server-side eager reconstruction bitwise."""
+    params, _, _ = delta_fixture
+    dl = AdaptiveDownlinkCodec()
+    state = dl.init_state(params)
+    ref, payload, recon, state, lvl = dl.encode_broadcast(params, state)
+    assert int(lvl) == 0                     # delta == 0 -> ship nothing
+    assert trees_equal(recon, params)        # clients keep the old ref
+    p2 = jax.tree.map(lambda x: x + 0.05, params)
+    ref, payload, recon, st2, lvl = dl.encode_broadcast(p2, state)
+    assert int(lvl) == 1
+    assert trees_equal(dl.decode_into(payload, ref), recon)
+    spiked = {"ref": state["ref"],
+              "res": jax.tree.map(jnp.ones_like, params)}
+    *_, lvl = dl.encode_broadcast(p2, spiked)
+    assert int(lvl) == 2
+    assert dl.level_ratios(params)[1] > dl.level_ratios(params)[2] > 1.9
+
+
+def test_adaptive_downlink_trains_and_charges_per_level(femnist_setup):
+    """End-to-end: finite matched loss, per-round levels in {0,1,2}, and
+    the skipped first broadcast (ref == init params) charged zero bits."""
+    base, _ = run_trainer(femnist_setup, "none")
+    tr, _ = run_trainer(femnist_setup, "none", downlink="adaptive")
+    assert np.isfinite(tr.history.train_loss).all()
+    assert abs(tr.history.train_loss[-1]
+               - base.history.train_loss[-1]) < 2e-2
+    lv = np.asarray(tr.engine.last_downlink_levels)
+    assert set(np.unique(lv)) <= {0, 1, 2}
+    assert tr.runtime.downlink_level_ratios is not None
+    assert set(tr.runtime.downlink_level_ratios) == {1, 2}
+    # round 1: ref == init params -> level 0 -> zero broadcast bits charged
+    assert tr.history.downlink_mbit[0] == 0.0
+    assert base.history.downlink_mbit[0] > 0.0
+    assert tr.history.downlink_mbit[-1] < base.history.downlink_mbit[-1]
+    assert tr.history.uplink_mbit[-1] == \
+        pytest.approx(base.history.uplink_mbit[-1])
+
+
+def _mk_trainer(femnist_setup, rounds=6, **fed_kw):
+    task, data, loss_fn, params = femnist_setup
+    fed = FedConfig(total_clients=16, clients_per_round=6, rounds=rounds,
+                    k0=4, eta0=0.3, batch_size=8, k_schedule="fixed",
+                    seed=0, transport="none", **fed_kw)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 6)
+    return FedAvgTrainer(loss_fn, params, data, fed, rt)
+
+
+def test_q8_checkpoint_resume_bitwise(femnist_setup, tmp_path):
+    """save/restore with a quantised ref store resumes bitwise: the q8
+    leaves round-trip as stored int8 planes, no de/re-quantise cycle."""
+    straight = _mk_trainer(femnist_setup, downlink="int8",
+                           downlink_ref="q8")
+    straight.run(6)
+    first = _mk_trainer(femnist_setup, downlink="int8", downlink_ref="q8")
+    first.run(3)
+    path = str(tmp_path / "q8ck")
+    first.save_state(path)
+    resumed = _mk_trainer(femnist_setup, downlink="int8",
+                          downlink_ref="q8")
+    resumed.restore_state(path)
+    for a, b in zip(jax.tree.leaves(first.engine.downlink_state),
+                    jax.tree.leaves(resumed.engine.downlink_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    resumed.run(6, resume=True)
+    assert trees_equal(straight.params, resumed.params)
+    assert straight.history.as_dict() == resumed.history.as_dict()
+
+
+def test_f32_checkpoint_converts_into_q8_trainer(femnist_setup, tmp_path):
+    """A pre-q8 (f32 ref store) checkpoint restores into a ref_store='q8'
+    trainer: the stored f32 trees re-quantise on load and training
+    continues — the one legacy conversion that is allowed to be lossy."""
+    f32tr = _mk_trainer(femnist_setup, downlink="int8")
+    f32tr.run(3)
+    path = str(tmp_path / "f32ck")
+    f32tr.save_state(path)
+    q8tr = _mk_trainer(femnist_setup, downlink="int8", downlink_ref="q8")
+    q8tr.restore_state(path)
+    st = q8tr.engine.downlink_state
+    assert any(l.dtype == jnp.int8 for l in jax.tree.leaves(st["ref"]))
+    back = q8tr.engine.downlink.load_tree(st["ref"], like=q8tr.params)
+    f32ref = f32tr.engine.downlink_state["ref"]
+    for x, y in zip(jax.tree.leaves(back), jax.tree.leaves(f32ref)):
+        bound = float(jnp.max(jnp.abs(y))) / 127.0 ** 2 + 1e-9
+        assert float(jnp.max(jnp.abs(x - y))) <= bound
+    q8tr.run(6, resume=True)
+    assert np.isfinite(q8tr.history.train_loss).all()
