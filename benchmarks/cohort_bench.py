@@ -1,0 +1,94 @@
+"""Cohort-scaling records for the CI perf gate (DESIGN.md §11).
+
+Chunked streaming cohorts must stay equivalent to the dense round they
+replace — in params AND in cost. Three gated records, in the same schema as
+the kernel records (``kernel_us``/``oracle_us``/``max_abs_delta``) so
+``benchmarks.perf_gate`` applies the identical machine-robust checks:
+
+  * ``cohort_scaling_round_c2`` — chunked (C=2) vs dense per-round wall
+    time; ``max_abs_delta`` is the params divergence after the run (the
+    streaming tolerance: only f32 partial-sum reorder).
+  * ``cohort_scaling_bitwise_cU`` — chunk == U vs dense: the single slab
+    preserves the dense summation order, so the delta must be exactly 0.
+  * ``cohort_scaling_peak_mb`` — chunked vs dense executable peak device
+    MB (``repro.core.mem``); the "timing" ratio check then gates the
+    memory ratio, catching a chunked path that silently rematerialises the
+    full cohort.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import jax
+
+ROUNDS = 3
+COHORT = 16
+CHUNK = 2
+
+
+def _spec(chunk=None):
+    from repro.api import ExperimentSpec
+    spec = ExperimentSpec().with_overrides(
+        "data.kind=paper", "data.task=femnist", "data.clients=32",
+        "data.samples_per_client=16", "data.seed=0",
+        f"fed.clients_per_round={COHORT}", f"fed.rounds={ROUNDS}",
+        "fed.k0=4", "fed.eta0=0.3", "fed.batch_size=8",
+        "fed.k_schedule=fixed", "fed.bucket_rounds=1", "fed.eval_every=0",
+        "fed.seed=0")
+    if chunk:
+        spec = spec.with_overrides(f"fed.cohort_chunk={chunk}")
+    return spec
+
+
+def _run(spec):
+    from repro.api import build
+    from repro.core import trainer_peak_mb
+    exp = build(spec)
+    exp.run()                                                   # warm-up
+    t0 = time.time()
+    exp.run()
+    return exp, time.time() - t0, trainer_peak_mb(exp.trainer)
+
+
+def _delta(a, b) -> float:
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def run_records() -> List[dict]:
+    dense, dense_s, dense_peak = _run(_spec())
+    c2, c2_s, c2_peak = _run(_spec(CHUNK))
+    cu, cu_s, _ = _run(_spec(COHORT))
+    per_round = 1e6 / ROUNDS
+    return [
+        {"name": "cohort_scaling_round_c2",
+         "kernel_us": c2_s * per_round, "oracle_us": dense_s * per_round,
+         "max_abs_delta": _delta(c2.params, dense.params)},
+        {"name": "cohort_scaling_bitwise_cU",
+         "kernel_us": cu_s * per_round, "oracle_us": dense_s * per_round,
+         "max_abs_delta": _delta(cu.params, dense.params)},
+        {"name": "cohort_scaling_peak_mb",
+         "kernel_us": c2_peak, "oracle_us": dense_peak,
+         "max_abs_delta": 0.0},
+    ]
+
+
+def rows_from_records(recs: List[dict]) -> List[Tuple[str, float, str]]:
+    return [(r["name"], r["kernel_us"],
+             f"oracle_us={r['oracle_us']:.1f};"
+             f"ratio={r['kernel_us'] / r['oracle_us']:.3f};"
+             f"max_abs_delta={r['max_abs_delta']:.3g}")
+            for r in recs]
+
+
+def run(verbose=True, records: List[dict] = None
+        ) -> List[Tuple[str, float, str]]:
+    rows = rows_from_records(records if records is not None
+                             else run_records())
+    if verbose:
+        for n, us, d in rows:
+            print(f"  {n:32s} {us:12.0f}us  {d}")
+    return rows

@@ -19,8 +19,9 @@ wire-path kernel regresses. Two checks per gated row:
     noise while still catching order-of-magnitude regressions (e.g. a
     fused kernel silently falling back to a dense path).
 
-Only wire-path rows (fedavg reduce, int8 delta reduce, top-k scatter) are
-gated — attention/SSD/MoE rows have no oracle contract here. A gated row
+Only wire-path rows (fedavg reduce, int8 delta reduce, top-k scatter) and
+the cohort_scaling rows (chunked-vs-dense round equivalence, DESIGN.md §11)
+are gated — attention/SSD/MoE rows have no oracle contract here. A gated row
 missing from the current records is itself a failure: silently dropping a
 kernel from the bench must not turn the gate green.
 """
@@ -31,9 +32,13 @@ import json
 import sys
 from typing import List
 
-#: rows the gate enforces (name prefixes)
+#: rows the gate enforces (name prefixes). cohort_scaling rows reuse the
+#: schema for the chunked-streaming contract (DESIGN.md §11): "kernel" is
+#: the chunked round (time / peak MB), "oracle" the dense round, and the
+#: delta is the params divergence — so the same ratio/delta checks gate a
+#: chunked path that slows down, diverges, or rematerialises the cohort.
 GATED_PREFIXES = ("kern_fedavg_reduce", "kern_int8_delta_reduce",
-                  "kern_topk_scatter")
+                  "kern_topk_scatter", "cohort_scaling")
 
 #: timing: current kernel/oracle ratio may be at most this factor above the
 #: baseline ratio (floored — tiny baseline ratios would gate on noise)

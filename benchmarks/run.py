@@ -10,9 +10,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * roofline_* — per (arch x shape x mesh) roofline terms from the dry-run
   * kern_*     — Pallas kernel micro-benchmarks (interpret mode)
 
-``--json PATH`` additionally writes the kernel suite's machine-readable
-records (kernel/oracle µs + max-abs-delta vs the jnp oracle) — the file the
-CI perf gate (``benchmarks.perf_gate``) diffs against the committed baseline
+``--json PATH`` additionally writes the machine-readable gate records —
+the kernel suite's (kernel/oracle µs + max-abs-delta vs the jnp oracle)
+plus the cohort_scaling suite's (chunked vs dense round time, params delta
+and executable peak MB, DESIGN.md §11) — the file the CI perf gate
+(``benchmarks.perf_gate``) diffs against the committed baseline
 ``benchmarks/baselines/BENCH_kernels.json``.
 
 An explicitly requested roofline suite (``--only roofline``) with no
@@ -34,7 +36,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="all 4 paper tasks, more rounds")
     ap.add_argument("--only", default=None,
-                    help="substring filter: fig12|table4|roofline|kern")
+                    help="substring filter: fig12|table4|roofline|kern|"
+                         "cohort")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the kern suite's machine-readable records "
                          "(perf-gate input) to this file")
@@ -42,18 +45,23 @@ def main() -> None:
     args = ap.parse_args()
     verbose = not args.quiet
 
-    from benchmarks import (kernels_bench, roofline_bench, schedules_bench,
-                            table4_bench)
+    from benchmarks import (cohort_bench, kernels_bench, roofline_bench,
+                            schedules_bench, table4_bench)
 
     # --only roofline is an explicit ask: an empty table must fail loudly,
     # not pass silently (the CI-green-on-no-data failure mode)
     roofline_strict = bool(args.only and "roofline" in args.only)
 
     kern_records = []
+    cohort_records = []
 
     def run_kern():
         kern_records.extend(kernels_bench.run_records())
         return kernels_bench.run(verbose=verbose, records=kern_records)
+
+    def run_cohort():
+        cohort_records.extend(cohort_bench.run_records())
+        return cohort_bench.run(verbose=verbose, records=cohort_records)
 
     suites = []
     if not args.only or "table4" in args.only:
@@ -69,6 +77,8 @@ def main() -> None:
             verbose=verbose, strict=roofline_strict)))
     if not args.only or "kern" in args.only:
         suites.append(("kern", run_kern))
+    if not args.only or "cohort" in args.only:
+        suites.append(("cohort", run_cohort))
 
     rows = []
     for name, fn in suites:
@@ -81,18 +91,19 @@ def main() -> None:
         print(f"{n},{us:.1f},{d}")
 
     if args.json:
-        if not kern_records:
-            print(f"--json {args.json}: kern suite did not run "
+        gate_records = kern_records + cohort_records
+        if not gate_records:
+            print(f"--json {args.json}: neither kern nor cohort suite ran "
                   f"(check --only filter)", file=sys.stderr)
             sys.exit(1)
         import jax
         payload = {"jax": jax.__version__,
                    "backend": jax.default_backend(),
-                   "records": kern_records}
+                   "records": gate_records}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         if verbose:
-            print(f"wrote {len(kern_records)} kernel records to {args.json}")
+            print(f"wrote {len(gate_records)} gate records to {args.json}")
 
 
 if __name__ == "__main__":

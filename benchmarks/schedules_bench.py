@@ -343,6 +343,59 @@ def run_prefetch_overlap(rounds: int = 48, *, seed: int = 0,
     return out
 
 
+def run_cohort_stream(rounds: int = 6, *, task_name: str = "femnist",
+                      clients: int = 64, clients_per_round: int = 32,
+                      chunk: int = 4, seed: int = 0,
+                      verbose: bool = False) -> List[Dict]:
+    """Streaming cohorts vs the dense round (DESIGN.md §11).
+
+    Same task/schedule/seed; the dense row runs the whole U-client cohort
+    as one executable (bucket_rounds=1 so both rows hold exactly one
+    round's tensors — the comparison is round-shape vs slab-shape, not
+    bucket amortisation), the chunked row streams it as U/C slabs. Rows
+    report warm rounds/sec and ``peakMB`` — the engine executables' live
+    device bytes (arguments + outputs + XLA temp high-water mark, measured
+    from ``memory_analysis``, ``repro.core.mem``). The chunked row's peak
+    must sit >= 4x under dense at U/C = 8 (the CI cohort_scaling gate rides
+    the same measurement). The population row runs the identical chunked
+    config against 10^6 virtual client ids (population sampler +
+    PopulationView) — O(cohort) host state, same slab-bounded device peak.
+    """
+    from repro.core import trainer_peak_mb
+
+    base = _task_spec(task_name, rounds, seed).with_overrides(
+        f"data.clients={clients}", "fed.k_schedule=rounds",
+        "fed.k_quantize=true", f"fed.clients_per_round={clients_per_round}",
+        "fed.bucket_rounds=1", "fed.eval_every=0")
+    cases = (
+        ("dense", ()),
+        (f"chunk{chunk}", (f"fed.cohort_chunk={chunk}",)),
+        ("population", (f"fed.cohort_chunk={chunk}",
+                        "sampler.name=population",
+                        "sampler.population=1000000")),
+    )
+    out: List[Dict] = []
+    for label, extra in cases:
+        exp = build(base.with_overrides(*extra))
+        exp.run()                                               # warm-up
+        t0 = time.time()
+        h = exp.run()
+        dt = time.time() - t0
+        peak = trainer_peak_mb(exp.trainer)
+        out.append({
+            "case": label, "task": task_name, "rounds": rounds,
+            "bench_s": dt, "rps": rounds / dt, "peak_mb": peak,
+            "peak_x": out[0]["peak_mb"] / peak if out and peak else 1.0,
+            "final_loss": h.train_loss[-1],
+        })
+        if verbose:
+            r = out[-1]
+            print(f"  cohort_stream[{label:10s}] {task_name}: "
+                  f"{r['rps']:.1f} rounds/s peak={peak:.2f}MB "
+                  f"({r['peak_x']:.2f}x less) loss={r['final_loss']:.4f}")
+    return out
+
+
 def run_sampler_compare(rounds: int = 30, *, task_name: str = "femnist",
                         seed: int = 0, verbose: bool = False) -> List[Dict]:
     """Client-sampling policies (DESIGN.md §9.3) on one task, constructed
@@ -430,6 +483,13 @@ def run(tasks=("sent140", "femnist"), rounds=None,
                      f"rps={s['rps']:.1f};"
                      f"loss={s['final_loss']:.4f};"
                      f"efSlots={s['ef_slots']}"))
+    for c in run_cohort_stream(rounds=min(rounds or 6, 6), verbose=verbose):
+        rows.append((f"cohort_stream_{c['case']}_{c['task']}",
+                     c["bench_s"] * 1e6,
+                     f"rps={c['rps']:.1f};"
+                     f"peakMB={c['peak_mb']:.2f};"
+                     f"peak_x={c['peak_x']:.2f};"
+                     f"loss={c['final_loss']:.4f}"))
     p = run_prefetch_overlap(rounds=rounds or 48, verbose=verbose)
     rows.append(("engine_prefetch_overlap", p["prefetch_s"] * 1e6,
                  f"speedup={p['speedup']:.2f}x;"
@@ -438,23 +498,25 @@ def run(tasks=("sent140", "femnist"), rounds=None,
 
 
 def write_csv(rows: List[Tuple[str, float, str]], path: str) -> None:
-    """CSV with bytes-on-wire as first-class columns — both legs (parsed
-    back out of the ``upMbit=``/``downMbit=`` derived fields; empty for
-    wire-less rows)."""
+    """CSV with bytes-on-wire and peak device memory as first-class columns
+    (parsed back out of the ``upMbit=``/``downMbit=``/``peakMB=`` derived
+    fields; empty for rows that don't measure them)."""
     import csv
 
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(["name", "us_per_call", "uplink_mbit", "downlink_mbit",
-                    "derived"])
+                    "peak_mb", "derived"])
         for name, us, derived in rows:
-            up = down = ""
+            up = down = peak = ""
             for part in derived.split(";"):
                 if part.startswith("upMbit="):
                     up = part.split("=", 1)[1]
                 elif part.startswith("downMbit="):
                     down = part.split("=", 1)[1]
-            w.writerow([name, f"{us:.1f}", up, down, derived])
+                elif part.startswith("peakMB="):
+                    peak = part.split("=", 1)[1]
+            w.writerow([name, f"{us:.1f}", up, down, peak, derived])
 
 
 if __name__ == "__main__":

@@ -42,15 +42,18 @@ def _make_fed_config(spec: ExperimentSpec) -> FedConfig:
         transport=t.name, topk_frac=t.topk_frac, downlink=t.downlink,
         downlink_ref=t.ref_store,
         sampler=s.name, cohort=s.cohort, availability=s.availability,
+        population=s.population, day_rounds=s.day_rounds,
+        base_availability=s.base_availability,
         bucket_rounds=f.bucket_rounds,
         feedback_bucket_rounds=f.feedback_bucket_rounds,
-        prefetch=f.prefetch)
+        prefetch=f.prefetch, cohort_chunk=f.cohort_chunk)
 
 
 def _make_backend(spec: ExperimentSpec):
     from repro.core.engine.backends import get_backend
     b = spec.backend
-    return get_backend(b.name, strategy=b.strategy, groups=b.groups)
+    return get_backend(b.name, strategy=b.strategy, groups=b.groups,
+                       reduce=b.reduce)
 
 
 def _build_task(spec: ExperimentSpec):
@@ -165,6 +168,12 @@ def build(spec: ExperimentSpec) -> FederatedExperiment:
 
     spec.validate()
     data, loss_fn, params, size_mbit, label = _build_task(spec)
+    if (spec.sampler.name == "population" and spec.sampler.population
+            and spec.sampler.population != data.num_clients):
+        # virtual 10^6+ id space over the materialised clients — the
+        # sampler draws O(cohort) ids, the view resolves them lazily
+        from repro.data import PopulationView
+        data = PopulationView(data, spec.sampler.population)
     fed = _make_fed_config(spec)
     r = spec.runtime
     runtime = RuntimeModel(

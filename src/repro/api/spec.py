@@ -82,14 +82,22 @@ class FedSpec:
     feedback_bucket_rounds: int = 1
     prefetch: bool = True
     eval_every: int = 0            # 0 = no evaluation pass
+    cohort_chunk: Optional[int] = None   # streaming slab size C (§11);
+                                         # None = dense vmapped cohort
     seed: int = 0
 
 
 @dataclass(frozen=True)
 class SamplerSpec:
-    name: str = "uniform"          # uniform|weighted|fixed_cohort|availability
-    availability: float = 0.9      # Bernoulli online prob (availability)
+    name: str = "uniform"          # uniform|weighted|fixed_cohort|
+                                   # availability|population (§11)
+    availability: float = 0.9      # Bernoulli online prob (availability);
+                                   # peak diurnal prob (population)
     cohort: Optional[Tuple[int, ...]] = None   # fixed_cohort membership
+    population: int = 0            # population sampler: virtual client-id
+                                   # space (10^6+); 0 = data.clients
+    day_rounds: int = 24           # population: diurnal period in rounds
+    base_availability: float = 0.05  # population: trough diurnal prob
 
 
 @dataclass(frozen=True)
@@ -107,6 +115,7 @@ class BackendSpec:
     name: str = "local"            # local|mesh (DESIGN.md §7)
     strategy: str = "parallel"     # mesh client fan-out
     groups: int = 1                # sequential-strategy client groups
+    reduce: str = "flat"           # flat | grouped two-tier psum (§11)
 
 
 @dataclass(frozen=True)
@@ -344,9 +353,54 @@ class ExperimentSpec:
             elif any(not 0 <= c < d.clients for c in s.cohort):
                 errors.append(f"sampler.cohort: ids must be in "
                               f"[0, {d.clients})")
+        if s.name == "population":
+            if f.aggregator not in LINEAR_AGGREGATORS:
+                errors.append("sampler.name: population sampling weights "
+                              "the diurnal cohort — needs a linear "
+                              f"aggregator, got {f.aggregator!r}")
+            pop = s.population if s.population else d.clients
+            if f.clients_per_round > pop:
+                errors.append(f"fed.clients_per_round: "
+                              f"{f.clients_per_round} exceeds the "
+                              f"population ({pop})")
+        if s.population < 0:
+            errors.append(f"sampler.population: must be >= 0, got "
+                          f"{s.population}")
+        elif s.population and s.name != "population":
+            errors.append("sampler.population: only meaningful for "
+                          f"sampler.name='population', got {s.name!r}")
+        if s.day_rounds < 1:
+            errors.append(f"sampler.day_rounds: must be >= 1, got "
+                          f"{s.day_rounds}")
+        if not 0.0 < s.base_availability <= 1.0:
+            errors.append(f"sampler.base_availability: must be in (0, 1], "
+                          f"got {s.base_availability}")
+        if f.cohort_chunk is not None:
+            if f.cohort_chunk < 1:
+                errors.append(f"fed.cohort_chunk: must be >= 1, got "
+                              f"{f.cohort_chunk}")
+            if f.aggregator not in LINEAR_AGGREGATORS:
+                errors.append("fed.cohort_chunk: streaming slabs fold into "
+                              "a running weighted sum — robust aggregators "
+                              f"(got {f.aggregator!r}) need the whole "
+                              f"cohort stack; use {LINEAR_AGGREGATORS} or "
+                              "drop cohort_chunk")
+            if t.downlink != "none":
+                errors.append("fed.cohort_chunk: chunked streaming rounds "
+                              "do not compose with a downlink codec yet "
+                              "(the per-slab broadcast would re-encode per "
+                              "slab) — set transport.downlink='none'")
+            if b.name == "mesh" and b.strategy == "sequential":
+                errors.append("fed.cohort_chunk: the mesh sequential "
+                              "strategy already streams clients through a "
+                              "scan — cohort_chunk only applies to the "
+                              "parallel (vmapped) cohort")
         if b.strategy not in ("parallel", "sequential"):
             errors.append(f"backend.strategy: {b.strategy!r} not in "
                           f"('parallel', 'sequential')")
+        if b.reduce not in ("flat", "grouped"):
+            errors.append(f"backend.reduce: {b.reduce!r} not in "
+                          f"('flat', 'grouped')")
         for name, v in (("runtime.download_mbps", r.download_mbps),
                         ("runtime.upload_mbps", r.upload_mbps),
                         ("runtime.beta_seconds", r.beta_seconds)):
@@ -365,6 +419,7 @@ def _coerce(value: Any, ftype: Any, path: str) -> Any:
     """Coerce a parsed JSON value to a dataclass field's declared type."""
     if isinstance(ftype, str):                 # from __future__ annotations
         ftype = {"int": int, "float": float, "bool": bool, "str": str,
+                 "Optional[int]": Optional[int],
                  "Optional[Tuple[int, ...]]": Optional[Tuple[int, ...]],
                  }.get(ftype, ftype)
     origin = typing.get_origin(ftype)

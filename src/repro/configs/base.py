@@ -177,14 +177,23 @@ class FedConfig:
                                       # f32 | q8 (DESIGN.md §10.3)
     # --- client sampling (DESIGN.md §9.3) ---
     sampler: str = "uniform"          # uniform | weighted | fixed_cohort
-                                      # | availability (plugin registry)
+                                      # | availability | population
     cohort: Optional[Tuple[int, ...]] = None   # fixed_cohort membership
                                       # (None = clients 0..n-1)
-    availability: float = 0.9         # per-round online prob (availability)
+    availability: float = 0.9         # per-round online prob (availability);
+                                      # diurnal peak prob (population)
+    population: int = 0               # population sampler: virtual client-id
+                                      # space (0 = total_clients)
+    day_rounds: int = 24              # population: diurnal period in rounds
+    base_availability: float = 0.05   # population: diurnal trough prob
     bucket_rounds: int = 8            # max rounds per jitted K-bucket scan
     feedback_bucket_rounds: int = 1   # bucket length for error/step schedules
                                       # (1 == per-round feedback, seed-exact)
     prefetch: bool = True             # build bucket r+1 on a background thread
+    # --- streaming cohorts (DESIGN.md §11) ---
+    cohort_chunk: Optional[int] = None  # slab size C: run the round's U
+                                      # clients in ceil(U/C) streaming slabs
+                                      # (None = dense vmapped cohort)
 
 
 @dataclass(frozen=True)

@@ -6,6 +6,7 @@ from repro.core.fedavg import (FedAvgTrainer, History, ReferenceRun,
                                make_eval_fn, make_round_fn,
                                run_reference_rounds)
 from repro.core.loss_tracker import LossTracker, PlateauDetector
+from repro.core.mem import engine_peak_mb, executable_peak_mb, trainer_peak_mb
 from repro.core.runtime_model import RoundCost, RuntimeModel
 from repro.core.schedules import (DecayController, ETA_SCHEDULES, K_SCHEDULES,
                                   quantize_k, schedule_preview)
@@ -16,4 +17,5 @@ __all__ = ["FedAvgTrainer", "History", "ReferenceRun", "make_eval_fn",
            "get_aggregator", "get_server_optimizer",
            "LossTracker", "PlateauDetector", "RoundCost", "RuntimeModel",
            "DecayController", "ETA_SCHEDULES", "K_SCHEDULES", "quantize_k",
-           "schedule_preview", "theory"]
+           "schedule_preview", "theory", "engine_peak_mb",
+           "executable_peak_mb", "trainer_peak_mb"]

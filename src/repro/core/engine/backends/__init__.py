@@ -14,7 +14,7 @@ def _local_factory(**kw):
 
 
 def _mesh_factory(*, mesh=None, strategy: str = "parallel", groups: int = 1,
-                  **kw):
+                  reduce: str = "flat", **kw):
     """Default mesh: all host devices on a (devices, 1) data x model mesh —
     the geometry ``launch/train.py --backend mesh`` always used. Pass a
     concrete ``mesh`` to control the topology."""
@@ -22,7 +22,7 @@ def _mesh_factory(*, mesh=None, strategy: str = "parallel", groups: int = 1,
     if mesh is None:
         n_dev = len(jax.devices())
         mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
-    return MeshBackend(mesh, strategy=strategy, groups=groups)
+    return MeshBackend(mesh, strategy=strategy, groups=groups, reduce=reduce)
 
 
 # builtin registrations — factory signature: f(*, strategy, groups, **kw)

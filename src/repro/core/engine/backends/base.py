@@ -78,6 +78,25 @@ class ExecutionBackend:
         adaptive-level int32 scalar (-1 for fixed-rate codecs)."""
         raise NotImplementedError
 
+    def make_slab_cores(self, loss_fn: LossFn, *, aggregator: str = "mean",
+                        server=None, server_lr: float = 1.0, transport=None):
+        """Return ``(slab_core, finalize_core)`` for chunked streaming
+        cohorts (DESIGN.md §11):
+
+        slab_core(params, batches{(C,K,b,...)}, weights(C,), eta, acc, ef)
+            -> (acc, first_losses(C,), last_losses(C,), ef_out)
+        finalize_core(params, acc, server_state)
+            -> (new_params, server_state, new_residual)
+
+        ``acc = (hat_acc, true_acc)`` are params-shaped f32 running sums
+        (``true_acc`` is ``()`` except for aggregate-EF transports);
+        ``weights`` are the slab's slice of the global round weights.
+        Backends whose execution geometry cannot stream slabs (grouped
+        sequential scans fold clients themselves) raise ValueError."""
+        raise NotImplementedError(
+            f"backend {self.name!r} does not support chunked streaming "
+            f"cohorts (cohort_chunk)")
+
     # ------------------------------------------------------------------
     # placement (host -> device, with the backend's shardings)
     # ------------------------------------------------------------------
@@ -102,6 +121,15 @@ class ExecutionBackend:
             bb, batches=self.place_batches(bb.batches),
             weights=self.place_weights(bb.weights),
             active=jnp.asarray(bb.active, bool))
+
+    def place_slab(self, sb):
+        """Place a ``pipeline.SlabBatch`` (leaves (C, K, b, ...), weights
+        (C,)) — the streaming-cohort analogue of ``place_bucket``, also
+        used as the prefetcher's ``place_fn`` so the next slab's H2D copy
+        overlaps the current slab's compute (DESIGN.md §11). Idempotent."""
+        return dataclasses.replace(
+            sb, batches={k: jnp.asarray(v) for k, v in sb.batches.items()},
+            weights=jnp.asarray(sb.weights, jnp.float32))
 
     def place_transport_state(self, state, per_client: bool = False):
         """Transport error-feedback state. Aggregate-level state is

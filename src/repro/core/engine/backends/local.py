@@ -120,6 +120,73 @@ def make_parallel_round_core(loss_fn: LossFn, aggregator: Aggregator,
     return d_core
 
 
+def make_parallel_slab_cores(loss_fn: LossFn, aggregator: Aggregator,
+                             server, server_lr: float, *,
+                             client_spmd_axes: Optional[Sequence[str]] = None,
+                             transport=None):
+    """Streaming-cohort cores (DESIGN.md §11) shared by Local and
+    Mesh-parallel: a round's U clients arrive as ceil(U/C) slabs of C; each
+    slab folds into f32 running sums and only the finalize step touches the
+    server optimizer.
+
+    slab_core(params, batches{(C,K,b,...)}, weights(C,), eta, acc, ef)
+        -> (acc, first_losses (C,), last_losses (C,), ef_out)
+    finalize_core(params, acc, server_state)
+        -> (new_params, server_state, new_residual)
+
+    ``acc`` is ``(hat_acc, true_acc)``: params-shaped f32 partial sums
+    (``true_acc`` is ``()`` except for aggregate-EF codecs). ``weights``
+    are the slab's slice of the GLOBAL round weights (sum 1 over U, not
+    over C) so partial sums compose additively and the C == U slab
+    reproduces the dense round bit-for-bit. ``ef`` is the slab's
+    per-client residual slice (slotted EF), the round-frozen aggregate
+    residual (read back unchanged; finalize emits the new one), or ``()``.
+    """
+    if transport is not None and transport.name == "none":
+        transport = None  # IdentityTransport == plain aggregator path
+    agg_ef = (transport is not None and transport.error_feedback
+              and not transport.ef_slots)
+    client = make_client_update(loss_fn)
+
+    def slab_core(params, batches, weights, eta, acc, ef):
+        client_params, first_losses, last_losses = jax.vmap(
+            client, in_axes=(None, 0, None),
+            spmd_axis_name=client_spmd_axes)(params, batches, eta)
+        hat_acc, true_acc = acc
+        if transport is None:
+            part = aggregator(client_params, weights)
+            hat_acc = jax.tree.map(
+                lambda a, p: a + p.astype(jnp.float32), hat_acc, part)
+            return (hat_acc, true_acc), first_losses, last_losses, ef
+        hat, true, ef = transport.aggregate_slab(
+            params, client_params, weights, ef)
+        hat_acc = jax.tree.map(jnp.add, hat_acc, hat)
+        if agg_ef:
+            true_acc = jax.tree.map(jnp.add, true_acc, true)
+        return (hat_acc, true_acc), first_losses, last_losses, ef
+
+    def finalize_core(params, acc, server_state):
+        hat_acc, true_acc = acc
+        if transport is None:
+            # hat_acc holds sum_slabs aggregator(...) in f32; the cast is
+            # the dense path's own einsum->dtype cast, deferred to round end
+            aggregate = jax.tree.map(lambda a, p: a.astype(p.dtype),
+                                     hat_acc, params)
+            new_params, server_state = server.step(params, aggregate,
+                                                   server_state, server_lr)
+            return new_params, server_state, ()
+        aggregate = jax.tree.map(
+            lambda p, h: (p.astype(jnp.float32) + h).astype(p.dtype),
+            params, hat_acc)
+        new_params, server_state = server.step(params, aggregate,
+                                               server_state, server_lr)
+        new_res = (jax.tree.map(jnp.subtract, true_acc, hat_acc)
+                   if agg_ef else ())
+        return new_params, server_state, new_res
+
+    return slab_core, finalize_core
+
+
 class LocalBackend(ExecutionBackend):
     name = "local"
 
@@ -131,3 +198,9 @@ class LocalBackend(ExecutionBackend):
         return make_parallel_round_core(loss_fn, agg, server, server_lr,
                                         transport=transport,
                                         downlink=downlink)
+
+    def make_slab_cores(self, loss_fn: LossFn, *, aggregator: str = "mean",
+                        server=None, server_lr: float = 1.0, transport=None):
+        agg = get_aggregator(aggregator)
+        return make_parallel_slab_cores(loss_fn, agg, server, server_lr,
+                                        transport=transport)

@@ -29,6 +29,7 @@ server optimizers and robust aggregators safe to drive the production path.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -40,7 +41,8 @@ from repro.core.engine.backends.base import (ExecutionBackend,
                                              LINEAR_AGGREGATORS, LossFn,
                                              axes_size as _axes_size)
 from repro.core.engine.backends.local import (encode_broadcast,
-                                              make_parallel_round_core)
+                                              make_parallel_round_core,
+                                              make_parallel_slab_cores)
 from repro.core.engine.client import client_update
 
 PyTree = Any
@@ -52,15 +54,21 @@ class MeshBackend(ExecutionBackend):
     def __init__(self, mesh=None, *, strategy: str = "parallel",
                  client_axes: Optional[Sequence[str]] = None,
                  groups: int = 1, param_specs: Optional[PyTree] = None,
-                 acc_dtype=jnp.float32):
+                 acc_dtype=jnp.float32, reduce: str = "flat"):
         """``client_axes``: mesh axes the client dim shards over (defaults
         to ``("pod", "data")``/``("data",)`` from the mesh's axis names);
         ``param_specs``: PartitionSpec tree pinning params (sequential FSDP
         keeps the delta accumulator on the params' 2d sharding);
         ``acc_dtype``: sequential streaming-accumulator dtype — f32 default
-        preserves LocalBackend numerics, bf16 halves the scan carry."""
+        preserves LocalBackend numerics, bf16 halves the scan carry;
+        ``reduce``: ``"flat"`` for one psum over all client axes, or
+        ``"grouped"`` for the hierarchical two-tier reduce (DESIGN.md §11:
+        psum within the innermost client axis — edge aggregation local to a
+        pod — then across the remaining axes, innermost-out)."""
         if strategy not in ("parallel", "sequential"):
             raise ValueError(f"unknown strategy {strategy!r}")
+        if reduce not in ("flat", "grouped"):
+            raise ValueError(f"unknown reduce {reduce!r}")
         self.mesh = mesh
         self.strategy = strategy
         if client_axes is None and mesh is not None:
@@ -70,6 +78,11 @@ class MeshBackend(ExecutionBackend):
         self.groups = max(int(groups), 1)
         self.param_specs = param_specs
         self.acc_dtype = acc_dtype
+        self.reduce = reduce
+        # innermost axis first: ("pod", "data") -> (("data",), ("pod",))
+        self.reduce_tiers = (
+            tuple((a,) for a in reversed(self.client_axes))
+            if reduce == "grouped" and self.client_axes else None)
 
     # ------------------------------------------------------------------
     # round core
@@ -81,7 +94,8 @@ class MeshBackend(ExecutionBackend):
         if transport is not None and self.mesh is not None:
             # bound copy: reduce() routes through the client-sharded
             # decompress-reduce kernel (delta_codec, DESIGN.md §8)
-            transport = transport.with_mesh(self.mesh, self.client_axes)
+            transport = transport.with_mesh(self.mesh, self.client_axes,
+                                            self.reduce_tiers)
         if self.strategy == "parallel":
             agg = self._resolve_aggregator(aggregator, trim_fraction)
             return make_parallel_round_core(
@@ -112,6 +126,21 @@ class MeshBackend(ExecutionBackend):
         if downlink is None:
             return core
         return self._wrap_sequential_downlink(core, transport, downlink)
+
+    def make_slab_cores(self, loss_fn: LossFn, *, aggregator: str = "mean",
+                        server=None, server_lr: float = 1.0, transport=None):
+        if self.strategy != "parallel":
+            raise ValueError(
+                "cohort_chunk requires the parallel strategy: the grouped "
+                "sequential scan already streams clients without a slab "
+                "decomposition")
+        if transport is not None and self.mesh is not None:
+            transport = transport.with_mesh(self.mesh, self.client_axes,
+                                            self.reduce_tiers)
+        agg = self._resolve_aggregator(aggregator, 0.1)
+        return make_parallel_slab_cores(loss_fn, agg, server, server_lr,
+                                        client_spmd_axes=self.client_axes,
+                                        transport=transport)
 
     def _wrap_sequential_downlink(self, core, transport, downlink):
         """Downlink around a sequential core (DESIGN.md §10): the scan
@@ -147,6 +176,7 @@ class MeshBackend(ExecutionBackend):
         if name == "kernel" and self.mesh is not None:
             from repro.kernels import ops as kops
             mesh, axes = self.mesh, self.client_axes
+            tiers = self.reduce_tiers
             size = _axes_size(mesh, axes)
             plain = get_aggregator("kernel")
 
@@ -155,7 +185,8 @@ class MeshBackend(ExecutionBackend):
                 if n % size != 0:                # static at trace time
                     return plain(client_params, weights)
                 return kops.fedavg_reduce_tree_sharded(
-                    client_params, weights, mesh=mesh, client_axes=axes)
+                    client_params, weights, mesh=mesh, client_axes=axes,
+                    reduce_tiers=tiers)
 
             return sharded_kernel
         return get_aggregator(name, trim_fraction=trim_fraction)
@@ -371,21 +402,56 @@ class MeshBackend(ExecutionBackend):
                                   self._named(self._batch_spec(v.shape)))
                 for k, v in batches.items()}
 
+    def place_slab(self, sb):
+        """Slab leaves (C, K, b, ...) carry the client dim FIRST (no bucket
+        dim): shard dim 0 over the client axes when C divides the shard
+        count (parallel strategy), replicate otherwise — same policy as
+        ``_batch_spec`` shifted one dim left. Weights (C,) ride the same
+        spec so the per-shard reduce sees matching slices."""
+        if self.mesh is None:
+            return super().place_slab(sb)
+        c = int(sb.weights.shape[0])
+        spec = P()
+        if self.strategy == "parallel" and self.client_axes and \
+                c % _axes_size(self.mesh, self.client_axes) == 0:
+            spec = P(self.client_axes)
+        sh = self._named(spec)
+        return dataclasses.replace(
+            sb,
+            batches={k: jax.device_put(jnp.asarray(v), sh)
+                     for k, v in sb.batches.items()},
+            weights=jax.device_put(jnp.asarray(sb.weights, jnp.float32), sh))
+
     def place_transport_state(self, state, per_client: bool = False):
         """Aggregate-level EF state is params-shaped and rides the params
         placement; per-client EF state (leading cohort axis, DESIGN.md
         §9.3) must NOT take ``param_specs`` — a leading-dims PartitionSpec
         would shard the cohort axis with the spec meant for the param's
-        first dim — so it is placed replicated (sharding the cohort axis is
-        a recorded ROADMAP item)."""
+        first dim — instead the leading cohort axis itself shards over the
+        client axes (parallel strategy, divisible cohort; DESIGN.md §11),
+        so the EF slab's memory scales 1/shards like the client stack.
+        Sequential scans carry EF through xs/ys, so it stays replicated
+        there (and on indivisible cohorts)."""
         if not jax.tree.leaves(state):
             return state
         if self.mesh is None:
             return jax.tree.map(jnp.asarray, state)
         if per_client:
-            rep = self._named(P())
-            return jax.tree.map(lambda x: jax.device_put(x, rep), state)
+            spec = self._cohort_spec(state)
+            sh = self._named(spec)
+            return jax.tree.map(lambda x: jax.device_put(x, sh), state)
         return self.place_params(state)
+
+    def _cohort_spec(self, state) -> P:
+        """PartitionSpec for per-client (leading cohort axis) state: shard
+        the cohort axis when the parallel vmap will consume it sharded."""
+        if self.strategy != "parallel" or not self.client_axes:
+            return P()
+        size = _axes_size(self.mesh, self.client_axes)
+        leaves = jax.tree.leaves(state)
+        if any(leaf.shape[0] % size != 0 for leaf in leaves):
+            return P()
+        return P(self.client_axes)
 
     def bind_downlink(self, codec):
         """Bound copy: ``decode_apply`` routes through the client-sharded
@@ -435,7 +501,7 @@ class MeshBackend(ExecutionBackend):
             return self.constrain_update(tree)
         if self.mesh is None or not jax.tree.leaves(tree):
             return tree
-        rep = self._named(P())      # cohort-axis sharding: ROADMAP item
+        sh = self._named(self._cohort_spec(tree))   # cohort-axis sharding
         return jax.tree.map(
-            lambda x: jax.lax.with_sharding_constraint(x, rep), tree)
+            lambda x: jax.lax.with_sharding_constraint(x, sh), tree)
 

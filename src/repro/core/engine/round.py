@@ -160,7 +160,8 @@ class RoundEngine:
                  server_lr: float = 1.0,
                  backend: Optional[ExecutionBackend] = None,
                  transport=None, topk_frac: float = 0.1, downlink=None,
-                 downlink_ref: str = "f32"):
+                 downlink_ref: str = "f32",
+                 cohort_chunk: Optional[int] = None):
         """``transport``: None/"none" keeps the historical param-space
         aggregation path bit-for-bit; "int8"/"int8x2"/"topk" (or a
         ``Transport`` instance) routes aggregation through the compressed
@@ -200,6 +201,45 @@ class RoundEngine:
             loss_fn, aggregator=aggregator, trim_fraction=trim_fraction,
             server=self.server, server_lr=server_lr,
             transport=self.transport, downlink=self.downlink)
+        # streaming cohorts (DESIGN.md §11): the slab/finalize jits exist
+        # only when chunking is on — cohort_chunk=None leaves the engine's
+        # compiled program (and its executable registry) bit-for-bit
+        # identical to the unchunked build
+        self.cohort_chunk = cohort_chunk
+        if cohort_chunk:
+            if self.downlink is not None:
+                raise ValueError(
+                    "cohort_chunk cannot combine with a downlink codec: "
+                    "the broadcast reference advances round-atomically and "
+                    "does not stream over slabs")
+            if aggregator not in LINEAR_AGGREGATORS:
+                raise ValueError(
+                    f"cohort_chunk requires a linear aggregator "
+                    f"{LINEAR_AGGREGATORS}: streaming slabs fold into a "
+                    f"running weighted sum, got {aggregator!r}")
+            slab_core, fin_core = self.backend.make_slab_cores(
+                loss_fn, aggregator=aggregator, server=self.server,
+                server_lr=server_lr, transport=self.transport)
+            chunk_per_client = (self.transport is not None
+                                and self.transport.ef_slots is not None)
+
+            def slab(params, batches, weights, eta, acc, ef):
+                acc, f, l, ef = slab_core(params, batches, weights, eta,
+                                          acc, ef)
+                be = self.backend
+                acc = (be.constrain_update(acc[0]),
+                       be.constrain_update(acc[1]))
+                ef = be.constrain_transport_update(
+                    ef, per_client=chunk_per_client)
+                return acc, f, l, ef
+
+            def slabfin(params, acc, server_state):
+                p, s, res = fin_core(params, acc, server_state)
+                be = self.backend
+                return be.constrain_update(p), s, be.constrain_update(res)
+
+            self._jit_slab = jax.jit(slab)
+            self._jit_slabfin = jax.jit(slabfin)
         # codec signature participates in the executable-registry key; the
         # downlink signature nests around it only when a downlink codec is
         # configured, so downlink="none" keys are untouched
@@ -336,6 +376,76 @@ class RoundEngine:
         else:
             self.downlink_state = extra
         return params, firsts, lasts, server_state
+
+    def run_round_chunked(self, params, slabs, eta, server_state
+                          ) -> Tuple[PyTree, jnp.ndarray, jnp.ndarray, Any]:
+        """Execute ONE round as streamed C-client slabs (DESIGN.md §11).
+
+        ``slabs``: iterable of ``pipeline.SlabBatch`` covering the round's
+        cohort in order (host or already-placed — ``place_slab`` is
+        idempotent). Device memory in the client dim is O(C): the only
+        cross-slab device state is the params-shaped f32 accumulator pair
+        plus the current slab's EF slice. Returns the ``run_bucket``
+        4-tuple with a B == 1 leading dim on the stacked losses.
+
+        Engine-owned EF state commits round-atomically — per-client slab
+        residuals accumulate host-side and replace ``transport_state`` only
+        after the finalize step, so a checkpoint taken between rounds can
+        never observe mid-round slab state.
+        """
+        if not self.cohort_chunk:
+            raise ValueError("engine was built without cohort_chunk")
+        be = self.backend
+        params = be.place_params(params)
+        server_state = jax.tree.map(jnp.asarray, server_state)
+        has_t = self.transport is not None
+        per_client = has_t and self.transport.ef_slots is not None
+        agg_ef = (has_t and self.transport.error_feedback
+                  and not per_client)
+        if has_t and self.transport_state is None:
+            self.init_transport_state(params)
+        zeros = be.place_params(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        acc = (zeros, zeros if agg_ef else ())
+        eta = jnp.asarray(eta, jnp.float32)
+        firsts, lasts, ef_parts = [], [], []
+        for sb in slabs:
+            sb = be.place_slab(sb)
+            ef = ()
+            if per_client:
+                ef = be.place_transport_state(
+                    jax.tree.map(lambda s: s[sb.start:sb.stop],
+                                 self.transport_state), per_client=True)
+            elif agg_ef:
+                ef = be.place_transport_state(self.transport_state)
+            args = (params, sb.batches, sb.weights, eta, acc, ef)
+            key = ("slab", self._codec_sig) + _signature(args)
+            exe = self._executables.get(key)
+            if exe is None:
+                exe = self._jit_slab.lower(*args).compile()
+                self._executables[key] = exe
+            acc, f, l, ef = exe(*args)
+            firsts.append(f)
+            lasts.append(l)
+            if per_client:
+                ef_parts.append(ef)
+        if not firsts:
+            raise ValueError("run_round_chunked got an empty slab stream")
+        fargs = (params, acc, server_state)
+        key = ("slabfin", self._codec_sig) + _signature(fargs)
+        exe = self._executables.get(key)
+        if exe is None:
+            exe = self._jit_slabfin.lower(*fargs).compile()
+            self._executables[key] = exe
+        new_params, server_state, new_res = exe(*fargs)
+        if per_client:
+            self.transport_state = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *ef_parts)
+        elif agg_ef:
+            self.transport_state = new_res
+        self.dispatch_count += 1
+        return (new_params, jnp.concatenate(firsts)[None],
+                jnp.concatenate(lasts)[None], server_state)
 
     @property
     def compile_count(self) -> int:

@@ -24,7 +24,15 @@ Samplers (registered in ``repro.api.registries``):
     offline clients at aggregation weight 0 (shape stability for the jitted
     round; zero weight = they contribute nothing to *linear* aggregators —
     combining availability shortfall with median/trimmed_mean is rejected
-    by spec validation).
+    by spec validation). Populations up to ``DENSE_MAX`` keep the
+    historical dense Bernoulli draw (bitwise rng-stream compat); beyond it
+    the draw switches to O(cohort) rejection sampling — no per-client
+    array is ever materialised (DESIGN.md §11).
+  * ``population`` — population-scale diurnal availability (DESIGN.md
+    §11): client ids live in a virtual ``population``-sized space (10^6+),
+    each id's timezone phase is a splitmix64 hash of the id (zero stored
+    state), and per-round availability follows a cosine day curve between
+    ``base`` and ``peak`` sampled by O(cohort) rejection.
 
 The sampler runs on the host, inside the bucket builder (possibly on the
 prefetch thread — requests are FIFO on one rng, so results depend only on
@@ -39,6 +47,29 @@ import numpy as np
 from repro.api.registries import SAMPLER_REGISTRY, register_sampler
 from repro.data.pipeline import client_weights as _size_weights
 from repro.data.synthetic import FederatedData
+
+
+def _stable_unique(a: np.ndarray) -> np.ndarray:
+    """Deduplicate keeping first-occurrence order (np.unique sorts)."""
+    _, idx = np.unique(a, return_index=True)
+    return a[np.sort(idx)]
+
+
+def splitmix64(ids: np.ndarray) -> np.ndarray:
+    """Vectorised splitmix64 finaliser: int ids -> u64 hashes. The O(1)
+    per-client state trick (DESIGN.md §11): any per-client trait (timezone
+    phase) is a pure function of the id, so a 10^6+ population carries no
+    per-client arrays."""
+    with np.errstate(over="ignore"):
+        z = ids.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+def _hash_unit(ids: np.ndarray) -> np.ndarray:
+    """ids -> deterministic floats in [0, 1)."""
+    return splitmix64(ids).astype(np.float64) / float(2 ** 64)
 
 
 class ClientSampler:
@@ -136,6 +167,12 @@ class AvailabilitySampler(ClientSampler):
     name = "availability"
     needs_weighted_aggregation = True   # shortfall padding rides zero weights
 
+    #: populations at or below this keep the historical dense Bernoulli
+    #: draw — its rng stream is bitwise pinned by existing runs/tests.
+    #: Above it, ``round`` switches to the O(cohort) rejection path: no
+    #: O(num_clients) array is ever allocated (DESIGN.md §11).
+    DENSE_MAX = 65536
+
     def __init__(self, prob: float = 0.9):
         if not 0.0 < prob <= 1.0:
             raise ValueError(f"availability prob must be in (0, 1]: {prob}")
@@ -143,6 +180,8 @@ class AvailabilitySampler(ClientSampler):
 
     def round(self, rng, data, n, round_idx=None):
         n = min(n, data.num_clients)
+        if data.num_clients > self.DENSE_MAX:
+            return self._sparse_round(rng, data, n)
         online = np.flatnonzero(rng.random(data.num_clients) < self.prob)
         if len(online) == 0:              # all-offline: re-draw uniformly
             ids = rng.choice(data.num_clients, size=n, replace=False)
@@ -154,12 +193,137 @@ class AvailabilitySampler(ClientSampler):
                                assume_unique=True)
         fill = rng.choice(offline, size=n - len(online), replace=False)
         ids = np.concatenate([online, fill])
-        w = np.array([len(data.client_y[c]) for c in online], np.float64)
+        return ids, self._shortfall_weights(data, ids, len(online), n)
+
+    def _sparse_round(self, rng, data, n):
+        """O(cohort) draw for huge populations: candidates drawn uniformly
+        (with replacement, deduplicated — collisions are vanishing at
+        n << num_clients), each kept with prob ``p``. The accepted prefix
+        is a uniform sample of the Bernoulli(p) online set; work and
+        memory scale with the cohort, never the population."""
+        N = data.num_clients
+        accepted = np.empty(0, np.int64)
+        for _ in range(64):
+            if len(accepted) >= n:
+                break
+            need = n - len(accepted)
+            m = min(max(int(np.ceil(need / self.prob)) * 2, 32), 1 << 16)
+            cand = rng.integers(0, N, size=m)
+            keep = cand[rng.random(m) < self.prob]
+            accepted = _stable_unique(np.concatenate([accepted, keep]))
+        if len(accepted) >= n:
+            ids = accepted[:n]
+            return ids, _size_weights(data, ids)
+        # pathological prob: pad with distinct offline ids at weight 0
+        # (same shortfall policy as the dense branch)
+        k = len(accepted)
+        fill = _draw_distinct(rng, N, n - k, exclude=accepted)
+        ids = np.concatenate([accepted, fill])
+        if k == 0:                        # all-offline guard, as dense
+            return ids, _size_weights(data, ids)
+        return ids, self._shortfall_weights(data, ids, k, n)
+
+    @staticmethod
+    def _shortfall_weights(data, ids, n_online, n):
+        w = np.array([len(data.client_y[c]) for c in ids[:n_online]],
+                     np.float64)
         if w.sum() <= 0:                  # online but data-less: uniform
             w = np.ones_like(w)
         weights = np.zeros(n, np.float32)
-        weights[:len(online)] = (w / w.sum()).astype(np.float32)
-        return ids, weights
+        weights[:n_online] = (w / w.sum()).astype(np.float32)
+        return weights
+
+    def sample(self, rng, data, n, round_idx=None):
+        return self.round(rng, data, n, round_idx)[0]
+
+
+def _draw_distinct(rng: np.random.Generator, N: int, k: int,
+                   exclude: np.ndarray) -> np.ndarray:
+    """k distinct ids from [0, N) avoiding ``exclude`` — O(k) for k << N."""
+    out = np.empty(0, np.int64)
+    for _ in range(64):
+        if len(out) >= k:
+            break
+        cand = rng.integers(0, N, size=max(2 * (k - len(out)), 16))
+        cand = cand[~np.isin(cand, exclude)]
+        out = _stable_unique(np.concatenate([out, cand]))
+    if len(out) < k:                      # tiny N fallback: exact set diff
+        rest = np.setdiff1d(np.arange(N), np.concatenate([exclude, out]),
+                            assume_unique=False)
+        out = np.concatenate([out, rest])
+    return out[:k]
+
+
+class PopulationSampler(ClientSampler):
+    """Population-scale diurnal availability over a virtual id space
+    (DESIGN.md §11).
+
+    Each client id's timezone phase is ``splitmix64(id) / 2^64`` — a pure
+    hash, so the 10^6+ population stores NO per-client state. At absolute
+    round r the time-of-day is ``(r % day_rounds) / day_rounds`` and a
+    client's availability follows the cosine day curve
+
+        p_c(r) = base + (peak - base) * (1 + cos(2π(tod - phase_c))) / 2
+
+    — clients whose phase matches the current time-of-day are at ``peak``,
+    the antipodal timezone at ``base``. The cohort is drawn by O(cohort)
+    rejection: uniform candidate ids accepted with prob ``p_c(r)/peak``,
+    i.e. participation ∝ availability. Weights are dataset-size weights
+    over the accepted cohort (shortfall pads at weight 0, as
+    ``availability``)."""
+
+    name = "population"
+    needs_weighted_aggregation = True
+
+    def __init__(self, population: int = 0, peak: float = 0.9,
+                 base: float = 0.05, day_rounds: int = 24):
+        if population < 0:
+            raise ValueError(f"population must be >= 0: {population}")
+        if not 0.0 < peak <= 1.0:
+            raise ValueError(f"peak availability must be in (0, 1]: {peak}")
+        if not 0.0 < base <= peak:
+            raise ValueError(f"base availability must be in (0, peak]: "
+                             f"{base}")
+        if day_rounds < 1:
+            raise ValueError(f"day_rounds must be >= 1: {day_rounds}")
+        self.population = int(population)
+        self.peak = float(peak)
+        self.base = float(base)
+        self.day_rounds = int(day_rounds)
+
+    def availability(self, ids: np.ndarray, round_idx: int) -> np.ndarray:
+        """Per-id availability at absolute round ``round_idx`` — pure
+        function of (id, round), no stored state."""
+        tod = (int(round_idx) % self.day_rounds) / self.day_rounds
+        phase = _hash_unit(np.asarray(ids))
+        day = 0.5 * (1.0 + np.cos(2.0 * np.pi * (tod - phase)))
+        return self.base + (self.peak - self.base) * day
+
+    def round(self, rng, data, n, round_idx=None):
+        N = self.population or data.num_clients
+        n = min(n, N)
+        r = 1 if round_idx is None else int(round_idx)
+        accepted = np.empty(0, np.int64)
+        for _ in range(64):
+            if len(accepted) >= n:
+                break
+            need = n - len(accepted)
+            # mean acceptance is >= base/peak; oversample against it
+            m = min(max(int(np.ceil(need * self.peak / self.base)) * 2, 32),
+                    1 << 16)
+            cand = rng.integers(0, N, size=m)
+            keep = cand[rng.random(m) * self.peak
+                        < self.availability(cand, r)]
+            accepted = _stable_unique(np.concatenate([accepted, keep]))
+        if len(accepted) >= n:
+            ids = accepted[:n]
+            return ids, _size_weights(data, ids)
+        k = len(accepted)
+        fill = _draw_distinct(rng, N, n - k, exclude=accepted)
+        ids = np.concatenate([accepted, fill])
+        if k == 0:
+            return ids, _size_weights(data, ids)
+        return ids, AvailabilitySampler._shortfall_weights(data, ids, k, n)
 
     def sample(self, rng, data, n, round_idx=None):
         return self.round(rng, data, n, round_idx)[0]
@@ -179,8 +343,16 @@ register_sampler(
     "availability",
     lambda *, fed=None, **kw: AvailabilitySampler(
         prob=getattr(fed, "availability", 0.9)))
+register_sampler(
+    "population",
+    lambda *, fed=None, **kw: PopulationSampler(
+        population=getattr(fed, "population", 0),
+        peak=getattr(fed, "availability", 0.9),
+        base=getattr(fed, "base_availability", 0.05),
+        day_rounds=getattr(fed, "day_rounds", 24)))
 
-SAMPLERS = ("uniform", "weighted", "fixed_cohort", "availability")
+SAMPLERS = ("uniform", "weighted", "fixed_cohort", "availability",
+            "population")
 
 
 def get_sampler(name, *, fed=None, **kw) -> ClientSampler:

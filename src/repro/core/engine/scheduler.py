@@ -72,6 +72,11 @@ class RoundScheduler:
                   else fed.feedback_bucket_rounds, 1)
         if eval_every is not None:
             cap = min(cap, max(eval_every, 1))
+        if getattr(fed, "cohort_chunk", None):
+            # streaming cohorts (DESIGN.md §11) dispatch slab-by-slab within
+            # a round — the multi-round bucket scan doesn't apply, so every
+            # bucket is exactly one round
+            cap = 1
         self.bucket_cap = cap
 
     # ------------------------------------------------------------------

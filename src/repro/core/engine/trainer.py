@@ -142,7 +142,9 @@ class FedAvgTrainer:
                                   topk_frac=getattr(fed, "topk_frac", 0.1),
                                   downlink=getattr(fed, "downlink", "none"),
                                   downlink_ref=getattr(fed, "downlink_ref",
-                                                       "f32"))
+                                                       "f32"),
+                                  cohort_chunk=getattr(fed, "cohort_chunk",
+                                                       None))
         self.server_state = self.engine.init_server_state(init_params)
         self.engine.init_transport_state(init_params)
         self.engine.init_downlink_state(init_params)
@@ -208,7 +210,9 @@ class FedAvgTrainer:
             self._np_rng,
             background=self.fed.prefetch and sched.loss_free,
             place_fn=self.engine.backend.place_bucket,
-            sampler=self.sampler)
+            sampler=self.sampler,
+            chunk=getattr(self.fed, "cohort_chunk", None),
+            place_slab_fn=self.engine.backend.place_slab)
         try:
             if sched.loss_free:
                 self._run_pipelined(sched, builder, rounds, verbose)
@@ -236,20 +240,51 @@ class FedAvgTrainer:
                   is not None else None)
         return firsts, levels
 
+    def _submit(self, builder, bucket: Bucket) -> None:
+        """Announce a bucket to the builder: a whole K-bucket, or — under
+        streaming cohorts (DESIGN.md §11) — the single round's slab
+        stream."""
+        if getattr(self.fed, "cohort_chunk", None):
+            builder.submit_slabs(bucket.k, round_id=bucket.rounds[0])
+        else:
+            builder.submit(len(bucket), bucket.k, pad_to=bucket.shape_rounds,
+                           rounds=bucket.rounds)
+
+    def _pull_dispatch(self, bucket: Bucket, builder):
+        if getattr(self.fed, "cohort_chunk", None):
+            return self._dispatch_chunked(bucket, builder)
+        return self._dispatch(bucket, builder.get())
+
+    def _dispatch_chunked(self, bucket: Bucket, builder):
+        """One streaming round (the scheduler forces 1-round buckets under
+        chunking): pull the round's ceil(U/C) slabs off the builder and
+        fold them through the engine's slab/finalize executables. No
+        adaptive downlink levels — chunking rejects downlink codecs."""
+        n = min(self.fed.clients_per_round, self.data.num_clients)
+        c = min(max(int(self.fed.cohort_chunk), 1), n)
+        n_slabs = -(-n // c)
+
+        def slabs():
+            for _ in range(n_slabs):
+                yield builder.get()
+
+        self.params, firsts, _lasts, self.server_state = \
+            self.engine.run_round_chunked(self.params, slabs(),
+                                          bucket.etas[0], self.server_state)
+        return firsts, None
+
     def _run_pipelined(self, sched: RoundScheduler, builder, rounds: int,
                        verbose: bool) -> None:
         plan = sched.plan()
         pending: Optional[Tuple[Bucket, jax.Array, Any]] = None
         nxt = next(plan, None)
         if nxt is not None:
-            builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds,
-                           rounds=nxt.rounds)
+            self._submit(builder, nxt)
         while nxt is not None:
             cur, nxt = nxt, next(plan, None)
             if nxt is not None:   # scheduler announces the upcoming K-bucket
-                builder.submit(len(nxt), nxt.k, pad_to=nxt.shape_rounds,
-                               rounds=nxt.rounds)
-            firsts, levels = self._dispatch(cur, builder.get())
+                self._submit(builder, nxt)
+            firsts, levels = self._pull_dispatch(cur, builder)
             if pending is not None:     # sync bucket r-1 while r computes
                 self._absorb(*pending)
                 pending = None
@@ -266,9 +301,8 @@ class FedAvgTrainer:
         # plan() is lazy: each iteration consults the controller, which has
         # absorbed the previous bucket's losses by the time it is advanced
         for bucket in sched.plan():
-            builder.submit(len(bucket), bucket.k, pad_to=bucket.shape_rounds,
-                           rounds=bucket.rounds)
-            firsts, levels = self._dispatch(bucket, builder.get())
+            self._submit(builder, bucket)
+            firsts, levels = self._pull_dispatch(bucket, builder)
             self._absorb(bucket, firsts, levels)  # boundary sync
             if bucket.eval_after:
                 self._eval(bucket.rounds[-1], verbose)

@@ -112,16 +112,24 @@ class Transport:
         return t
 
     # -- mesh binding ---------------------------------------------------
-    def with_mesh(self, mesh, client_axes: Optional[Sequence[str]]):
+    def with_mesh(self, mesh, client_axes: Optional[Sequence[str]],
+                  reduce_tiers=None):
         """Backend hook: a copy bound to the mesh so ``reduce`` can route
-        through the client-sharded decompress-reduce kernel."""
+        through the client-sharded decompress-reduce kernel.
+        ``reduce_tiers`` selects the hierarchical grouped all-reduce
+        (DESIGN.md §11) instead of the flat psum."""
         t = copy.copy(self)
         t._mesh = mesh
         t._client_axes = tuple(client_axes) if client_axes else None
+        t._reduce_tiers = (tuple(tuple(tier) for tier in reduce_tiers)
+                           if reduce_tiers else None)
         return t
 
     def _mesh_axes(self):
         return getattr(self, "_mesh", None), getattr(self, "_client_axes", None)
+
+    def _tiers(self):
+        return getattr(self, "_reduce_tiers", None)
 
     # -- state ----------------------------------------------------------
     def init_state(self, params: PyTree):
@@ -212,6 +220,44 @@ class Transport:
             params, hat)
         return aggregate, new_state
 
+    def aggregate_slab(self, params: PyTree, client_stack: PyTree,
+                       weights: jnp.ndarray, state):
+        """One C-client slab's contribution to a streaming round (DESIGN.md
+        §11): the delta/EF-compensate/encode/reduce pipeline of
+        ``aggregate`` verbatim, but instead of applying the weighted-sum
+        delta it RETURNS the partials for the caller to fold into its
+        running accumulators.
+
+        ``weights`` are the slab's slice of the global round weights (they
+        sum to 1 over the whole cohort, NOT over the slab), so the partial
+        sums compose by plain addition. ``state`` is this slab's EF: the
+        per-client residual slice for slotted EF, or the round-frozen
+        aggregate residual (read-only here — the finalize step derives the
+        new one as sum(true) - sum(hat), matching ``aggregate`` exactly).
+
+        Returns ``(hat, true, new_state)``: ``hat`` the f32 weighted-sum of
+        decoded deltas, ``true`` the f32 weighted-sum of raw deltas
+        (aggregate-EF codecs only, else ``()``), ``new_state`` the slab's
+        updated per-client residuals (slotted EF) or ``state`` unchanged."""
+        p32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        deltas = jax.tree.map(lambda cp, p: cp.astype(jnp.float32) - p[None],
+                              client_stack, p32)
+        if self.error_feedback:
+            deltas = (jax.tree.map(jnp.add, deltas, state) if self.ef_slots
+                      else jax.tree.map(lambda d, r: d + r[None], deltas,
+                                        state))
+        payloads = jax.vmap(self.encode)(deltas)
+        hat = self.reduce(payloads, weights, like=params)
+        if not self.error_feedback:
+            return hat, (), state
+        if self.ef_slots:
+            decoded = jax.vmap(lambda pl: self.decode(pl, like=params))(
+                payloads)
+            return hat, (), jax.tree.map(jnp.subtract, deltas, decoded)
+        true = _weighted_true_sum(jax.tree.leaves(deltas), weights)
+        true_tree = jax.tree.unflatten(jax.tree.structure(params), list(true))
+        return hat, true_tree, state
+
 
 class IdentityTransport(Transport):
     """The degenerate codec: payloads ARE the client params; aggregation
@@ -296,7 +342,8 @@ class Int8Transport(Transport):
             qr = pl["qr"] if self.levels == 2 else None
             if sharded:
                 flat = kops.int8_delta_reduce_sharded(
-                    pl["q"], w1, qr, wr, mesh=mesh, client_axes=axes)
+                    pl["q"], w1, qr, wr, mesh=mesh, client_axes=axes,
+                    reduce_tiers=self._tiers())
             else:
                 flat = kops.int8_delta_reduce(pl["q"], w1, qr, wr)
             out.append(flat.reshape(leaf.shape))
@@ -386,7 +433,7 @@ class TopKTransport(Transport):
                     and kops.mosaic_scatter_ok(int(pl["v"].size), size)):
                 flat = kops.topk_delta_reduce_sharded(
                     pl["v"], pl["i"], weights, size, mesh=mesh,
-                    client_axes=axes)
+                    client_axes=axes, reduce_tiers=self._tiers())
             else:
                 flat = kops.topk_delta_reduce(pl["v"], pl["i"], weights,
                                               size)
@@ -498,7 +545,7 @@ class DownlinkCodec:
         return sig
 
     # -- mesh binding ---------------------------------------------------
-    def with_mesh(self, mesh, client_axes):
+    def with_mesh(self, mesh, client_axes, reduce_tiers=None):
         t = copy.copy(self)
         # the server-side eager decode (encode_broadcast) routes through
         # the mesh-sharded decode-apply kernel; the client-side lazy decode
@@ -506,7 +553,7 @@ class DownlinkCodec:
         # shard_map cannot nest — it keeps the unbound elementwise kernel
         # (bitwise-identical output) and GSPMD places it
         t._unbound = self.codec
-        t.codec = self.codec.with_mesh(mesh, client_axes)
+        t.codec = self.codec.with_mesh(mesh, client_axes, reduce_tiers)
         return t
 
     # -- quantised ref store -------------------------------------------

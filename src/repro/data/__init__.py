@@ -1,5 +1,6 @@
 from repro.data import partition, pipeline, synthetic
+from repro.data.population import PopulationView
 from repro.data.synthetic import FederatedData, make_lm_clients, make_paper_task
 
 __all__ = ["partition", "pipeline", "synthetic", "FederatedData",
-           "make_paper_task", "make_lm_clients"]
+           "make_paper_task", "make_lm_clients", "PopulationView"]

@@ -63,7 +63,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.fedavg_reduce import DEFAULT_BLOCK, _block_reduce
+from repro.kernels.fedavg_reduce import (DEFAULT_BLOCK, _block_reduce,
+                                         psum_tiers)
 
 
 def _kernel2(w_ref, wr_ref, q_ref, qr_ref, o_ref):
@@ -114,17 +115,19 @@ def int8_decompress_reduce(q, w_eff, qr=None, wr_eff=None, *,
 
 def int8_decompress_reduce_sharded(q, w_eff, qr=None, wr_eff=None, *, mesh,
                                    client_axes, block: int = DEFAULT_BLOCK,
-                                   interpret: bool = False) -> jnp.ndarray:
+                                   interpret: bool = False,
+                                   reduce_tiers=None) -> jnp.ndarray:
     """Mesh variant (extends ``fedavg_reduce_sharded``): the int8 stack is
     sharded over ``client_axes``; per-shard fused decompress-reduce + one
-    all-reduce of the f32 (M,) partials. N must divide the axes' size."""
+    all-reduce of the f32 (M,) partials (``psum_tiers``: flat or the
+    hierarchical grouped reduce). N must divide the axes' size."""
     axes = tuple(client_axes)
 
     if qr is None:
         def local(x, w):
             partial = _block_reduce(x, w.astype(jnp.float32), block,
                                     interpret, out_dtype=jnp.float32)
-            return jax.lax.psum(partial, axes)
+            return psum_tiers(partial, axes, reduce_tiers)
 
         # check_rep=False: no replication rule for pallas_call; the psum
         # makes the P() out_spec replication explicit (as fedavg_reduce)
@@ -134,7 +137,7 @@ def int8_decompress_reduce_sharded(q, w_eff, qr=None, wr_eff=None, *, mesh,
 
     def local(x, xr, w, wr):
         partial = _block_reduce2(x, xr, w, wr, block, interpret)
-        return jax.lax.psum(partial, axes)
+        return psum_tiers(partial, axes, reduce_tiers)
 
     return shard_map(local, mesh=mesh,
                      in_specs=(P(axes, None), P(axes, None), P(axes), P(axes)),
@@ -369,11 +372,12 @@ def topk_scatter_reduce_sharded(vals, idx, weights, size: int, *, mesh,
                                 client_axes,
                                 block_m: int = TOPK_BLOCK_M,
                                 block_s: int = TOPK_BLOCK_S,
-                                interpret: bool = False) -> jnp.ndarray:
+                                interpret: bool = False,
+                                reduce_tiers=None) -> jnp.ndarray:
     """Mesh variant (the ``fedavg_reduce_sharded`` contract): payload rows
     sharded over ``client_axes``, each shard one-hot-reduces its local
-    clients into an f32 (M,) partial, one psum sums the partials. N must
-    divide the axes' size."""
+    clients into an f32 (M,) partial, ``psum_tiers`` sums the partials
+    (flat or hierarchically grouped). N must divide the axes' size."""
     axes = tuple(client_axes)
 
     def local(v, ix, w):
@@ -382,7 +386,7 @@ def topk_scatter_reduce_sharded(vals, idx, weights, size: int, *, mesh,
             interpret=interpret)
         # check_rep=False: no replication rule for pallas_call; the psum
         # makes the P() out_spec replication explicit (as fedavg_reduce)
-        return jax.lax.psum(partial, axes)
+        return psum_tiers(partial, axes, reduce_tiers)
 
     return shard_map(local, mesh=mesh,
                      in_specs=(P(axes, None), P(axes, None), P(axes)),

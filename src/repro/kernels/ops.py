@@ -50,23 +50,28 @@ def fedavg_reduce_tree(client_params: PyTree, weights: jnp.ndarray) -> PyTree:
 
 
 def fedavg_reduce_sharded(client_stack: jnp.ndarray, weights: jnp.ndarray, *,
-                          mesh, client_axes) -> jnp.ndarray:
+                          mesh, client_axes,
+                          reduce_tiers=None) -> jnp.ndarray:
     """(N, M) x (N,) -> (M,), N sharded over the mesh client axes: local
-    Pallas block-reduce per shard + all-reduce of the f32 partials."""
+    Pallas block-reduce per shard + all-reduce of the f32 partials
+    (``reduce_tiers`` selects the hierarchical grouped reduce, §11)."""
     return _fr.fedavg_reduce_sharded(client_stack, weights, mesh=mesh,
                                      client_axes=client_axes,
-                                     interpret=INTERPRET)
+                                     interpret=INTERPRET,
+                                     reduce_tiers=reduce_tiers)
 
 
 def fedavg_reduce_tree_sharded(client_params: PyTree, weights: jnp.ndarray,
-                               *, mesh, client_axes) -> PyTree:
+                               *, mesh, client_axes,
+                               reduce_tiers=None) -> PyTree:
     """Sharded weighted average of a client-stacked pytree (MeshBackend's
     ``aggregator="kernel"`` path — see DESIGN.md §7)."""
     def one(leaf):
         n = leaf.shape[0]
         flat = leaf.reshape(n, -1)
         return fedavg_reduce_sharded(flat, weights, mesh=mesh,
-                                     client_axes=client_axes
+                                     client_axes=client_axes,
+                                     reduce_tiers=reduce_tiers
                                      ).reshape(leaf.shape[1:])
 
     return jax.tree.map(one, client_params)
@@ -85,14 +90,15 @@ def int8_delta_reduce(q, w_eff, qr=None, wr_eff=None) -> jnp.ndarray:
 
 
 def int8_delta_reduce_sharded(q, w_eff, qr=None, wr_eff=None, *, mesh,
-                              client_axes) -> jnp.ndarray:
+                              client_axes, reduce_tiers=None) -> jnp.ndarray:
     """Mesh variant: int8 stack sharded over the client axes, per-shard
     fused decompress-reduce + all-reduce of f32 partials (the
     ``fedavg_reduce_sharded`` contract on compressed payloads)."""
     return _dc.int8_decompress_reduce_sharded(q, w_eff, qr, wr_eff,
                                               mesh=mesh,
                                               client_axes=client_axes,
-                                              interpret=INTERPRET)
+                                              interpret=INTERPRET,
+                                              reduce_tiers=reduce_tiers)
 
 
 #: Interpret-mode ceiling for the Mosaic one-hot scatter: its dense T x M
@@ -120,14 +126,15 @@ def topk_delta_reduce(vals, idx, weights, size: int) -> jnp.ndarray:
 
 
 def topk_delta_reduce_sharded(vals, idx, weights, size: int, *, mesh,
-                              client_axes) -> jnp.ndarray:
+                              client_axes, reduce_tiers=None) -> jnp.ndarray:
     """Mesh variant: payload rows sharded over the client axes, per-shard
     one-hot partials + all-reduce (the ``fedavg_reduce_sharded`` contract
     on sparse payloads)."""
     return _dc.topk_scatter_reduce_sharded(vals, idx, weights, size,
                                            mesh=mesh,
                                            client_axes=client_axes,
-                                           interpret=INTERPRET)
+                                           interpret=INTERPRET,
+                                           reduce_tiers=reduce_tiers)
 
 
 def int8_delta_apply(ref, q, s, qr=None, rs=None) -> jnp.ndarray:

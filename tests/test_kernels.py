@@ -256,3 +256,57 @@ def test_mosaic_scatter_dispatch_gate():
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(dc.topk_scatter_reduce(vals, idx, w, 333)),
         rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-tier reduce (grouped psum, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _pod_data_mesh():
+    """Two client axes on one host device — exercises the grouped-axes
+    collective lowering without needing multiple devices."""
+    return jax.make_mesh((1, 1), ("pod", "data"))
+
+
+def test_psum_tiers_rejects_non_partition():
+    with pytest.raises(ValueError, match="partition"):
+        fr.psum_tiers(jnp.zeros(4), ("pod", "data"), (("data",),))
+    with pytest.raises(ValueError, match="partition"):
+        fr.psum_tiers(jnp.zeros(4), ("pod", "data"),
+                      (("data",), ("pod", "data")))
+
+
+def test_fedavg_reduce_sharded_grouped_matches_flat():
+    mesh = _pod_data_mesh()
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4096))
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (8,)))
+    flat = fr.fedavg_reduce_sharded(x, w, mesh=mesh,
+                                    client_axes=("pod", "data"),
+                                    interpret=True)
+    grouped = fr.fedavg_reduce_sharded(x, w, mesh=mesh,
+                                       client_axes=("pod", "data"),
+                                       interpret=True,
+                                       reduce_tiers=(("data",), ("pod",)))
+    assert np.abs(np.asarray(grouped) - np.asarray(flat)).max() <= 1e-6
+
+
+def test_int8_delta_reduce_sharded_grouped_matches_flat():
+    q = jax.random.randint(jax.random.PRNGKey(2), (4, 2048), -127, 128,
+                           dtype=jnp.int8)
+    w_eff = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3), (4,)))
+    mesh = _pod_data_mesh()
+    kw = dict(mesh=mesh, client_axes=("pod", "data"), interpret=True)
+    flat = dc.int8_decompress_reduce_sharded(q, w_eff, **kw)
+    grouped = dc.int8_decompress_reduce_sharded(
+        q, w_eff, reduce_tiers=(("data",), ("pod",)), **kw)
+    assert np.abs(np.asarray(grouped) - np.asarray(flat)).max() <= 1e-6
+
+
+def test_topk_scatter_sharded_grouped_matches_flat():
+    vals, idx, w = _topk_payload(23, 4, 16, 513)
+    mesh = _pod_data_mesh()
+    kw = dict(mesh=mesh, client_axes=("pod", "data"), interpret=True)
+    flat = dc.topk_scatter_reduce_sharded(vals, idx, w, 513, **kw)
+    grouped = dc.topk_scatter_reduce_sharded(
+        vals, idx, w, 513, reduce_tiers=(("data",), ("pod",)), **kw)
+    assert np.abs(np.asarray(grouped) - np.asarray(flat)).max() <= 1e-6

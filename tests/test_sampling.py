@@ -319,3 +319,115 @@ def test_fixed_cohort_trainer_switches_to_per_client_ef(data):
                                   rounds=3, k0=2, eta0=0.3, batch_size=4,
                                   loss_window=3, transport="int8"), rt)
     assert tr2.engine.transport.ef_slots is None
+
+
+# ---------------------------------------------------------------------------
+# population-scale sampling (DESIGN.md §11): O(cohort) draws over 10^6 ids
+# ---------------------------------------------------------------------------
+
+def _million(data):
+    from repro.data import PopulationView
+    return PopulationView(data, 1_000_000)
+
+
+def test_availability_sparse_path_at_million_ids(data):
+    """Above DENSE_MAX the draw must be O(cohort): 10^6 virtual clients,
+    many rounds, well under a second — the historical dense Bernoulli
+    (one rng.random(num_clients) per round) would be ~100x slower and is
+    the regression this test pins."""
+    import time
+    view = _million(data)
+    s = AvailabilitySampler(prob=0.5)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for r in range(100):
+        ids, w = s.round(rng, view, 32, round_idx=r + 1)
+        assert ids.shape == (32,) and len(set(ids.tolist())) == 32
+        assert ((0 <= ids) & (ids < 1_000_000)).all()
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+    assert time.time() - t0 < 2.0, "sparse availability draw is not O(cohort)"
+    # deterministic in the rng stream
+    a = AvailabilitySampler(prob=0.5).round(
+        np.random.default_rng(3), view, 16)[0]
+    b = AvailabilitySampler(prob=0.5).round(
+        np.random.default_rng(3), view, 16)[0]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_availability_dense_stream_unchanged_below_threshold(data):
+    """At or below DENSE_MAX the historical dense Bernoulli stream is
+    bitwise pinned (existing runs depend on it)."""
+    s = AvailabilitySampler(prob=0.8)
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    ids, _ = s.round(r1, data, 5)
+    online = np.flatnonzero(r2.random(data.num_clients) < 0.8)
+    expect = r2.choice(online, size=5, replace=False)
+    np.testing.assert_array_equal(ids, expect)
+
+
+def test_availability_sparse_shortfall_pads_zero_weight(data):
+    """Pathologically low prob over a huge population: the accepted prefix
+    falls short, offline ids pad the cohort at weight 0 (same policy as
+    the dense branch)."""
+    view = _million(data)
+    s = AvailabilitySampler(prob=1e-7)
+    ids, w = s.round(np.random.default_rng(0), view, 8)
+    assert ids.shape == (8,) and len(set(ids.tolist())) == 8
+    assert w.shape == (8,)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+
+
+def test_population_sampler_diurnal_availability():
+    from repro.core.engine.sampling import PopulationSampler, splitmix64
+    s = PopulationSampler(population=1_000_000, peak=0.9, base=0.05,
+                          day_rounds=24)
+    ids = np.arange(0, 1_000_000, 9973)
+    for r in (1, 7, 13):
+        p = s.availability(ids, r)
+        assert (p >= 0.05 - 1e-9).all() and (p <= 0.9 + 1e-9).all()
+        np.testing.assert_allclose(p, s.availability(ids, r))  # pure fn
+    # a single client's availability swings over the day (cosine curve)
+    day = np.array([s.availability(np.array([42]), r)[0] for r in range(24)])
+    assert day.max() - day.min() > 0.3
+    # ... and is periodic with day_rounds
+    np.testing.assert_allclose(day[0], s.availability(np.array([42]), 24)[0])
+    # hash is stateless: no per-client array anywhere in the sampler
+    assert splitmix64(np.array([7])).dtype == np.uint64
+
+
+def test_population_sampler_o1_state_draws(data):
+    import time
+    from repro.core.engine.sampling import PopulationSampler
+    view = _million(data)
+    s = PopulationSampler(population=1_000_000, peak=0.9, base=0.05,
+                          day_rounds=24)
+    t0 = time.time()
+    seen = []
+    for r in range(50):
+        ids, w = s.round(np.random.default_rng(r), view, 32, round_idx=r + 1)
+        assert ids.shape == (32,) and len(set(ids.tolist())) == 32
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+        seen.append(set(ids.tolist()))
+    assert time.time() - t0 < 2.0, "population draw is not O(cohort)"
+    # deterministic given (rng, round); round-dependent through the curve
+    a = s.round(np.random.default_rng(1), view, 32, round_idx=5)[0]
+    b = s.round(np.random.default_rng(1), view, 32, round_idx=5)[0]
+    c = s.round(np.random.default_rng(1), view, 32, round_idx=17)[0]
+    np.testing.assert_array_equal(a, b)
+    assert set(a.tolist()) != set(c.tolist())
+
+
+def test_population_view_is_lazy_modular(data):
+    from repro.data import PopulationView
+    view = _million(data)
+    assert view.num_clients == 1_000_000
+    base = data.num_clients
+    np.testing.assert_array_equal(view.client_y[base + 3], data.client_y[3])
+    np.testing.assert_array_equal(view.client_x[999_999],
+                                  data.client_x[999_999 % base])
+    with pytest.raises(IndexError):
+        view.client_y[1_000_000]
+    with pytest.raises(NotImplementedError):
+        view.weights
+    # unknown attributes delegate to the base dataset
+    assert view.num_classes == data.num_classes
