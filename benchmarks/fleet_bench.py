@@ -1,0 +1,109 @@
+"""Fleet-driver records for the CI perf gate (DESIGN.md §12).
+
+The fleet's contract is "compile once, dispatch N, pack the device": a
+4-point ``fed.k0`` sweep whose points share one bucket signature (via the
+fleet's ``fed.k_grid0`` anchor) must reuse a single executable across all
+points AND beat running the same points serially. Two gated records in the
+kernel-record schema (``kernel_us``/``oracle_us``/``max_abs_delta``) so
+``benchmarks.perf_gate`` applies its machine-robust ratio/delta checks:
+
+  * ``fleet_speedup`` — packed-concurrent fleet wall clock vs serial runs
+    of the same points (each serial run a fresh build + private registry,
+    i.e. the pre-fleet workflow); the gate's ratio check fails if packing
+    stops being faster by more than the allowed factor. ``max_abs_delta``
+    is the worst per-point params divergence packed vs serial — packing
+    must not change what any point trains (0.0: same program, same
+    inputs, same device).
+  * ``fleet_speedup_shared_compiles`` — fleet-wide distinct compiles vs a
+    single point's compile count. 100% cross-point reuse means the fleet
+    compiles exactly what ONE run compiles; ``max_abs_delta`` is the
+    excess-compile count, so even one extra compile trips the gate's
+    delta floor.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+ROUNDS = 2
+#: four k0 values inside one quantize bucket once the fleet pins
+#: k_grid0=16 (grid step 1.35: k0 in (11.85, 16] all snap to K=16) —
+#: the sweep shares ONE bucket signature across all points
+SWEEP = ["fed.k0=12,14,15,16"]
+
+
+def _base():
+    """Reduced-LM base: a transformer whose XLA compile dominates a short
+    run — the regime the fleet exists for (sweep warm-up cost, not steady
+    state). 2 rounds in one bucket = 1 dispatch per point; tiny
+    cohort/batch/seq keep the dispatch cheap next to the compile."""
+    from repro.api import ExperimentSpec
+    return ExperimentSpec().with_overrides(
+        "data.kind=lm", "model.arch=qwen1.5-0.5b", "model.reduced=true",
+        "data.clients=4", "data.samples_per_client=4", "data.seq_len=16",
+        "data.seed=0", "fed.clients_per_round=2", f"fed.rounds={ROUNDS}",
+        "fed.eta0=0.05", "fed.batch_size=2", "fed.k_schedule=fixed",
+        "fed.bucket_rounds=2", "fed.eval_every=0", "fed.seed=0")
+
+
+def _serial_runs(points):
+    """The pre-fleet workflow: each point builds and runs on its own, with
+    a private registry — every point pays its own compiles."""
+    from repro.api import build
+    out = []
+    t0 = time.perf_counter()
+    for p in points:
+        exp = build(p.spec)
+        exp.run()
+        out.append(exp)
+    return out, time.perf_counter() - t0
+
+
+def run_records() -> List[dict]:
+    from repro.api import expand_sweep
+    from repro.launch.fleet import run_fleet, share_k_grid
+
+    points = share_k_grid(expand_sweep(*SWEEP, base=_base()))
+    # packed fleet (shared registry + backend slices)
+    fleet = run_fleet(points=points, packed=True, verbose=False)
+    # single-point reference: what ONE run compiles
+    single = run_fleet(points=points[:1], packed=False, verbose=False)
+    # serial baseline on the SAME points, fresh builds (own compiles each)
+    serial_exps, serial_s = _serial_runs(points)
+
+    # per-point divergence packed vs serial: the final train loss is a
+    # deterministic f32 function of the trained params, so identical runs
+    # give exactly 0.0 — any drift from packing trips the gate's floor
+    by_label = {p.label: p for p in fleet.points}
+    div = 0.0
+    for p, exp in zip(points, serial_exps):
+        div = max(div, abs(by_label[p.label].final_loss
+                           - float(exp.history.train_loss[-1])))
+    excess = fleet.compile_count - single.compile_count
+    return [
+        {"name": "fleet_speedup",
+         "kernel_us": fleet.wall_s * 1e6, "oracle_us": serial_s * 1e6,
+         "max_abs_delta": div},
+        {"name": "fleet_speedup_shared_compiles",
+         "kernel_us": float(fleet.compile_count),
+         "oracle_us": float(max(single.compile_count, 1)),
+         "max_abs_delta": float(max(excess, 0))},
+    ]
+
+
+def rows_from_records(recs: List[dict]) -> List[Tuple[str, float, str]]:
+    return [(r["name"], r["kernel_us"],
+             f"oracle_us={r['oracle_us']:.1f};"
+             f"ratio={r['kernel_us'] / r['oracle_us']:.3f};"
+             f"max_abs_delta={r['max_abs_delta']:.3g}")
+            for r in recs]
+
+
+def run(verbose=True, records: List[dict] = None
+        ) -> List[Tuple[str, float, str]]:
+    rows = rows_from_records(records if records is not None
+                             else run_records())
+    if verbose:
+        for n, us, d in rows:
+            print(f"  {n:32s} {us:12.0f}us  {d}")
+    return rows

@@ -37,8 +37,13 @@ from typing import List
 #: the chunked round (time / peak MB), "oracle" the dense round, and the
 #: delta is the params divergence — so the same ratio/delta checks gate a
 #: chunked path that slows down, diverges, or rematerialises the cohort.
+#: fleet_speedup rows reuse it for the fleet contract (DESIGN.md §12):
+#: "kernel" is the packed fleet (wall / compile count), "oracle" the serial
+#: baseline (wall / single-run compiles), and the delta is the per-point
+#: divergence (loss drift / excess compiles) — so packing that slows down,
+#: changes results, or stops sharing executables trips the same checks.
 GATED_PREFIXES = ("kern_fedavg_reduce", "kern_int8_delta_reduce",
-                  "kern_topk_scatter", "cohort_scaling")
+                  "kern_topk_scatter", "cohort_scaling", "fleet_speedup")
 
 #: timing: current kernel/oracle ratio may be at most this factor above the
 #: baseline ratio (floored — tiny baseline ratios would gate on noise)

@@ -37,7 +37,7 @@ def main() -> None:
                     help="all 4 paper tasks, more rounds")
     ap.add_argument("--only", default=None,
                     help="substring filter: fig12|table4|roofline|kern|"
-                         "cohort")
+                         "cohort|fleet")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the kern suite's machine-readable records "
                          "(perf-gate input) to this file")
@@ -45,8 +45,8 @@ def main() -> None:
     args = ap.parse_args()
     verbose = not args.quiet
 
-    from benchmarks import (cohort_bench, kernels_bench, roofline_bench,
-                            schedules_bench, table4_bench)
+    from benchmarks import (cohort_bench, fleet_bench, kernels_bench,
+                            roofline_bench, schedules_bench, table4_bench)
 
     # --only roofline is an explicit ask: an empty table must fail loudly,
     # not pass silently (the CI-green-on-no-data failure mode)
@@ -54,6 +54,7 @@ def main() -> None:
 
     kern_records = []
     cohort_records = []
+    fleet_records = []
 
     def run_kern():
         kern_records.extend(kernels_bench.run_records())
@@ -62,6 +63,10 @@ def main() -> None:
     def run_cohort():
         cohort_records.extend(cohort_bench.run_records())
         return cohort_bench.run(verbose=verbose, records=cohort_records)
+
+    def run_fleet_suite():
+        fleet_records.extend(fleet_bench.run_records())
+        return fleet_bench.run(verbose=verbose, records=fleet_records)
 
     suites = []
     if not args.only or "table4" in args.only:
@@ -79,6 +84,8 @@ def main() -> None:
         suites.append(("kern", run_kern))
     if not args.only or "cohort" in args.only:
         suites.append(("cohort", run_cohort))
+    if not args.only or "fleet" in args.only:
+        suites.append(("fleet", run_fleet_suite))
 
     rows = []
     for name, fn in suites:
@@ -91,10 +98,10 @@ def main() -> None:
         print(f"{n},{us:.1f},{d}")
 
     if args.json:
-        gate_records = kern_records + cohort_records
+        gate_records = kern_records + cohort_records + fleet_records
         if not gate_records:
-            print(f"--json {args.json}: neither kern nor cohort suite ran "
-                  f"(check --only filter)", file=sys.stderr)
+            print(f"--json {args.json}: no gate suite (kern/cohort/fleet) "
+                  f"ran (check --only filter)", file=sys.stderr)
             sys.exit(1)
         import jax
         payload = {"jax": jax.__version__,

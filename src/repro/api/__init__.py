@@ -23,6 +23,8 @@ _SPEC_NAMES = ("ExperimentSpec", "ModelSpec", "DataSpec", "FedSpec",
                "SamplerSpec", "TransportSpec", "BackendSpec", "RuntimeSpec",
                "SpecValidationError")
 _EXPERIMENT_NAMES = ("FederatedExperiment", "build")
+_SWEEP_NAMES = ("SweepPoint", "expand_sweep", "sweep_grid", "parse_sweep",
+                "spec_program_key")
 _REGISTRY_NAMES = ("Registry", "REGISTRIES", "UnknownNameError",
                    "AGGREGATOR_REGISTRY", "SERVER_OPTIMIZER_REGISTRY",
                    "TRANSPORT_REGISTRY", "SAMPLER_REGISTRY",
@@ -31,7 +33,8 @@ _REGISTRY_NAMES = ("Registry", "REGISTRIES", "UnknownNameError",
                    "register_transport", "register_sampler",
                    "register_backend")
 
-__all__ = list(_SPEC_NAMES + _EXPERIMENT_NAMES + _REGISTRY_NAMES)
+__all__ = list(_SPEC_NAMES + _EXPERIMENT_NAMES + _SWEEP_NAMES
+               + _REGISTRY_NAMES)
 
 
 def __getattr__(name):
@@ -39,6 +42,8 @@ def __getattr__(name):
         from repro.api import spec as _m
     elif name in _EXPERIMENT_NAMES:
         from repro.api import experiment as _m
+    elif name in _SWEEP_NAMES:
+        from repro.api import sweep as _m
     elif name in _REGISTRY_NAMES:
         from repro.api import registries as _m
     else:

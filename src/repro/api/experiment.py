@@ -36,7 +36,8 @@ def _make_fed_config(spec: ExperimentSpec) -> FedConfig:
         k_schedule=f.k_schedule, eta_schedule=f.eta_schedule,
         loss_window=f.loss_window, plateau_patience=f.plateau_patience,
         step_decay_factor=f.step_decay_factor, k_min=f.k_min,
-        k_quantize=f.k_quantize, server_optimizer=f.server_optimizer,
+        k_quantize=f.k_quantize, k_grid0=f.k_grid0,
+        server_optimizer=f.server_optimizer,
         server_lr=f.server_lr, seed=f.seed,
         aggregator=f.aggregator, trim_fraction=f.trim_fraction,
         transport=t.name, topk_frac=t.topk_frac, downlink=t.downlink,
@@ -161,12 +162,25 @@ class FederatedExperiment:
         return exp
 
 
-def build(spec: ExperimentSpec) -> FederatedExperiment:
-    """Validate the spec and compose the experiment it describes."""
+def build(spec: ExperimentSpec, *, backend=None, registry=None,
+          program_key=None) -> FederatedExperiment:
+    """Validate the spec and compose the experiment it describes.
+
+    ``backend``: an already-constructed ``ExecutionBackend`` overriding the
+    spec's backend section — the fleet driver passes mesh slices / fresh
+    local backends per packed point (DESIGN.md §12).
+
+    ``registry``: a shared ``ExecutableRegistry`` for cross-experiment AOT
+    executable reuse. ``program_key`` defaults to
+    ``sweep.spec_program_key(spec)`` when a registry is given; pass an
+    explicit key to extend it (e.g. with mesh-slice device ids)."""
     from repro.core.engine.trainer import FedAvgTrainer, make_eval_fn
     from repro.core.runtime_model import RuntimeModel
 
     spec.validate()
+    if registry is not None and program_key is None:
+        from repro.api.sweep import spec_program_key
+        program_key = spec_program_key(spec)
     data, loss_fn, params, size_mbit, label = _build_task(spec)
     if (spec.sampler.name == "population" and spec.sampler.population
             and spec.sampler.population != data.num_clients):
@@ -183,9 +197,11 @@ def build(spec: ExperimentSpec) -> FederatedExperiment:
                            beta_seconds=r.beta_seconds,
                            bytes_per_param=r.bytes_per_param),
         fed.clients_per_round, heterogeneity=r.heterogeneity)
-    backend = _make_backend(spec)
+    if backend is None:
+        backend = _make_backend(spec)
     eval_fn = (make_eval_fn(loss_fn, data)
                if spec.fed.eval_every > 0 else None)
     trainer = FedAvgTrainer(loss_fn, params, data, fed, runtime,
-                            eval_fn=eval_fn, backend=backend)
+                            eval_fn=eval_fn, backend=backend,
+                            registry=registry, program_key=program_key)
     return FederatedExperiment(spec, trainer, label)

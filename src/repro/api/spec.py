@@ -70,6 +70,10 @@ class FedSpec:
     k_schedule: str = "fixed"
     eta_schedule: str = "fixed"
     k_quantize: bool = False
+    k_grid0: Optional[int] = None  # explicit quantize_k grid anchor (None =
+                                   # k0); fleet sweeps pin one anchor so
+                                   # points with different k0 share bucket
+                                   # shapes + executables (DESIGN.md §12)
     k_min: int = 1
     loss_window: int = 100
     plateau_patience: int = 50
@@ -235,15 +239,19 @@ class ExperimentSpec:
                 errors.append(f"{sec}.{fld}: unknown field (expected one of "
                               f"{sorted(sub_fields)})")
                 continue
-            try:
-                val = json.loads(raw)
-            except (json.JSONDecodeError, ValueError):
-                val = raw.strip()
+            val = _parse_override_value(raw)
             try:
                 updates.setdefault(sec, {})[fld] = _coerce(
                     val, sub_fields[fld].type, f"{sec}.{fld}")
             except ValueError as e:
-                errors.append(str(e))
+                msg = str(e)
+                if isinstance(val, list) and "," in raw and \
+                        not raw.strip().startswith("["):
+                    msg += (" — a comma list on a scalar field is sweep "
+                            "syntax: expand it into one spec per value "
+                            "with repro.api.sweep.expand_sweep(...) or "
+                            "launch with --sweep")
+                errors.append(msg)
         if errors:
             raise SpecValidationError(errors)
         new_sections = {sec: dataclasses.replace(getattr(self, sec), **kw)
@@ -291,6 +299,13 @@ class ExperimentSpec:
             errors.append(f"fed.eta0: must be > 0, got {f.eta0}")
         if f.eval_every < 0:
             errors.append(f"fed.eval_every: must be >= 0, got {f.eval_every}")
+
+        if f.k_grid0 is not None:
+            if f.k_grid0 < 1:
+                errors.append(f"fed.k_grid0: must be >= 1, got {f.k_grid0}")
+            elif not f.k_quantize:
+                errors.append("fed.k_grid0: a pinned quantize-grid anchor "
+                              "only applies when fed.k_quantize=true")
 
         from repro.core.schedules import ETA_SCHEDULES, K_SCHEDULES
         if f.k_schedule not in K_SCHEDULES:
@@ -414,6 +429,29 @@ class ExperimentSpec:
 # ---------------------------------------------------------------------------
 # type coercion for json / override values
 # ---------------------------------------------------------------------------
+
+def _parse_override_value(raw: str) -> Any:
+    """Parse an override's right-hand side: JSON first, then a bare comma
+    list (``sampler.cohort=0,1,2`` == ``[0,1,2]``), then a raw string. The
+    comma form is what ``--sweep`` grids are written in; on a tuple field it
+    coerces directly, on a scalar field the caller reports it as sweep
+    syntax."""
+    try:
+        return json.loads(raw)
+    except (json.JSONDecodeError, ValueError):
+        pass
+    text = raw.strip()
+    if "," in text and not text.startswith(("[", "{")):
+        return [_parse_scalar(part) for part in text.split(",")]
+    return text
+
+
+def _parse_scalar(text: str) -> Any:
+    try:
+        return json.loads(text)
+    except (json.JSONDecodeError, ValueError):
+        return text.strip()
+
 
 def _coerce(value: Any, ftype: Any, path: str) -> Any:
     """Coerce a parsed JSON value to a dataclass field's declared type."""

@@ -161,6 +161,10 @@ class FedConfig:
     step_decay_factor: float = 10.0   # K0/10 per the paper
     k_min: int = 1
     k_quantize: bool = False          # beyond-paper: quantize K to geometric grid
+    k_grid0: Optional[int] = None     # explicit quantize_k grid anchor (None =
+                                      # k0). Sweeps pin one anchor across
+                                      # points so differing k0 values share
+                                      # bucket shapes/executables (§12)
     server_optimizer: str = "avg"     # avg | fedadam | fedavgm | fedyogi
     server_lr: float = 1.0
     seed: int = 0

@@ -163,6 +163,18 @@ class ExecutionBackend:
         return {"ref": place(state["ref"]), "res": place(state["res"])}
 
     # ------------------------------------------------------------------
+    # fleet packing (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def fleet_slices(self, n: int):
+        """Return ``n`` backends for packing ``n`` concurrent sweep points.
+
+        Default: this backend, shared — correct for any backend whose
+        placement is stateless, but concurrent points then contend for the
+        same devices. Subclasses carve real slices (LocalBackend: fresh
+        interleaved instances; MeshBackend: sub-meshes)."""
+        return [self] * n
+
+    # ------------------------------------------------------------------
     # codec binding
     # ------------------------------------------------------------------
     def bind_downlink(self, codec):

@@ -204,3 +204,10 @@ class LocalBackend(ExecutionBackend):
         agg = get_aggregator(aggregator)
         return make_parallel_slab_cores(loss_fn, agg, server, server_lr,
                                         transport=transport)
+
+    def fleet_slices(self, n: int):
+        """Fresh single-device backends, one per packed point: placement is
+        stateless, so concurrent points interleave on the device dispatch
+        queue (round-robin by arrival) while each keeps its own prefetch
+        threads — the local fall-back of mesh sub-slicing (DESIGN.md §12)."""
+        return [LocalBackend() for _ in range(n)]

@@ -48,6 +48,31 @@ from repro.core.engine.client import client_update
 PyTree = Any
 
 
+def carve_submeshes(mesh, n: int):
+    """Split ``mesh`` into up to ``n`` disjoint sub-meshes for fleet packing
+    (DESIGN.md §12): the device grid is cut along its largest axis into
+    ``g`` contiguous slices, where ``g`` is the largest divisor of that
+    axis's size with ``g <= n`` — every slice keeps the full axis-name
+    structure, so per-point MeshBackends reuse the parent's sharding rules
+    unchanged. A 1-device (or un-splittable) mesh returns ``[mesh]``; the
+    caller round-robins points over whatever came back."""
+    devices = mesh.devices
+    shape = devices.shape
+    axis = max(range(len(shape)), key=lambda i: shape[i])
+    size = shape[axis]
+    g = max((d for d in range(1, min(n, size) + 1) if size % d == 0),
+            default=1)
+    if g <= 1:
+        return [mesh]
+    step = size // g
+    out = []
+    for i in range(g):
+        idx = [slice(None)] * len(shape)
+        idx[axis] = slice(i * step, (i + 1) * step)
+        out.append(type(mesh)(devices[tuple(idx)], mesh.axis_names))
+    return out
+
+
 class MeshBackend(ExecutionBackend):
     name = "mesh"
 
@@ -141,6 +166,24 @@ class MeshBackend(ExecutionBackend):
         return make_parallel_slab_cores(loss_fn, agg, server, server_lr,
                                         client_spmd_axes=self.client_axes,
                                         transport=transport)
+
+    def fleet_slices(self, n: int):
+        """One MeshBackend per packed sweep point, on disjoint sub-meshes
+        carved from this backend's mesh (cycled when the mesh splits into
+        fewer slices than points). Strategy/groups/acc_dtype/reduce and the
+        param spec tree carry over; ``client_axes`` re-derive from the
+        slice's axis names, which ``carve_submeshes`` preserves."""
+        if self.mesh is None:
+            return [self] * n
+        meshes = carve_submeshes(self.mesh, n)
+        return [MeshBackend(meshes[i % len(meshes)],
+                            strategy=self.strategy,
+                            client_axes=self.client_axes,
+                            groups=self.groups,
+                            param_specs=self.param_specs,
+                            acc_dtype=self.acc_dtype,
+                            reduce=self.reduce)
+                for i in range(n)]
 
     def _wrap_sequential_downlink(self, core, transport, downlink):
         """Downlink around a sequential core (DESIGN.md §10): the scan

@@ -24,6 +24,7 @@ so padding never perturbs training state.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -145,6 +146,80 @@ def _signature(args) -> Tuple:
                           for l in leaves)
 
 
+class ExecutableRegistry:
+    """Process-level AOT executable cache, shareable across experiments.
+
+    Entries are keyed by the engine compile key — ``(program_key,
+    codec/downlink signature, argument treedef + leaf shapes/dtypes)`` — so
+    two experiments share an executable exactly when they would lower the
+    same traced program for the same input signature (DESIGN.md §12). The
+    fleet driver hands one registry to every sweep point; points whose
+    model/bucket/transport signatures coincide compile once and dispatch N
+    times.
+
+    ``get_or_build`` is thread-safe and single-flight: when packed sweep
+    points race on one key, exactly one thread compiles while the rest wait
+    on the in-flight event — "compile once, dispatch N" holds under
+    concurrent packing, and the reuse counters stay exact.
+    """
+
+    def __init__(self):
+        self._entries: Dict[Tuple, Any] = {}
+        self._inflight: Dict[Tuple, threading.Event] = {}
+        self._lock = threading.Lock()
+        self.hits = 0          # lookups served from an existing entry
+        self.misses = 0        # lookups that compiled a new entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct executables compiled into this registry (exact)."""
+        return len(self._entries)
+
+    def executables(self) -> Tuple[Any, ...]:
+        with self._lock:
+            return tuple(self._entries.values())
+
+    def get_or_build(self, key: Tuple, build: Callable[[], Any]
+                     ) -> Tuple[Any, bool]:
+        """Return ``(executable, built)``: the cached entry for ``key``, or
+        the result of ``build()`` (stored under ``key``). ``built`` is True
+        only for the caller that actually compiled — a concurrent caller
+        that waited on the in-flight compile gets ``built=False``, so
+        per-engine compile counters never double-count one compilation."""
+        while True:
+            with self._lock:
+                exe = self._entries.get(key)
+                if exe is not None:
+                    self.hits += 1
+                    return exe, False
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+                    break
+            ev.wait()           # someone else is compiling this key
+        try:
+            exe = build()
+        except BaseException:
+            with self._lock:
+                del self._inflight[key]
+            ev.set()
+            raise
+        with self._lock:
+            self._entries[key] = exe
+            del self._inflight[key]
+            self.misses += 1
+        ev.set()
+        return exe, True
+
+
 class RoundEngine:
     """Bucket executor with an explicit per-signature executable registry.
 
@@ -161,7 +236,9 @@ class RoundEngine:
                  backend: Optional[ExecutionBackend] = None,
                  transport=None, topk_frac: float = 0.1, downlink=None,
                  downlink_ref: str = "f32",
-                 cohort_chunk: Optional[int] = None):
+                 cohort_chunk: Optional[int] = None,
+                 registry: Optional[ExecutableRegistry] = None,
+                 program_key: Optional[Tuple] = None):
         """``transport``: None/"none" keeps the historical param-space
         aggregation path bit-for-bit; "int8"/"int8x2"/"topk" (or a
         ``Transport`` instance) routes aggregation through the compressed
@@ -181,7 +258,18 @@ class RoundEngine:
         ``downlink_ref``: storage for the engine-owned broadcast reference
         and residual — "f32" (default, bit-exact PR-5 behaviour) or "q8"
         (int8+scale leaves, ~2x less server-held state, DESIGN.md §10.3).
-        Requires a configured downlink codec."""
+        Requires a configured downlink codec.
+
+        ``registry``: a shared ``ExecutableRegistry`` for cross-experiment
+        executable reuse (DESIGN.md §12). When given, ``program_key`` is
+        required — a hashable fingerprint of everything that shapes the
+        traced program but is NOT in the input signature (model/task,
+        aggregator/server, transport+downlink config, backend placement).
+        Entries are keyed ``(program_key, codec_sig) + signature``, so two
+        engines whose program keys and signatures coincide share one AOT
+        executable; distinct codecs/backends never collide because their
+        keys differ. Omitted, the engine owns a private registry and
+        behaves exactly as before."""
         self.backend = backend if backend is not None else LocalBackend()
         self.transport = get_transport(transport, topk_frac=topk_frac)
         if self.transport is not None and \
@@ -293,7 +381,20 @@ class RoundEngine:
                     extra = d_state
                 return be.constrain_update(p), f, l, s, extra, levels
         self._jitted = jax.jit(bucket)
+        if registry is not None and program_key is None:
+            raise ValueError(
+                "a shared ExecutableRegistry requires a program_key: the "
+                "registry is keyed across experiments, so the engine must "
+                "know which traced program its entries belong to")
+        self._registry = registry if registry is not None \
+            else ExecutableRegistry()
+        self._program_key = program_key if program_key is not None else ()
+        # engine-local view of the registry entries this engine touched:
+        # mem.engine_peak_mb sizes live executables through it, and it keeps
+        # the private-registry case bit-for-bit (compile_count == len)
         self._executables: Dict[Tuple, Any] = {}
+        self._own_keys: set = set()     # compiled by THIS engine
+        self._shared_keys: set = set()  # adopted from the shared registry
         self.dispatch_count = 0
         self.transport_state: Any = None
         self.downlink_state: Any = None
@@ -302,6 +403,28 @@ class RoundEngine:
         # has run. The trainer reads this right after each dispatch to
         # charge the wire per level (DESIGN.md §10.4).
         self.last_downlink_levels = None
+
+    def _lookup(self, key: Tuple, jitted, args):
+        """Fetch (or AOT-compile) the executable for ``key``.
+
+        The full registry key prepends ``program_key`` so shared registries
+        never alias across experiments; counters are exact either way: a
+        key this engine compiled lands in ``_own_keys`` (-> compile_count),
+        a registry hit built by another engine lands in ``_shared_keys``
+        (-> shared_count) and is never double-counted as a local compile.
+
+        Private registries (no program_key) keep the bare legacy key shape
+        — ``key[0]`` stays the "slab"/"slabfin" tag some introspection
+        relies on; aliasing is impossible in a single-engine registry.
+        """
+        full_key = (self._program_key,) + key if self._program_key else key
+        exe = self._executables.get(full_key)
+        if exe is None:
+            exe, built = self._registry.get_or_build(
+                full_key, lambda: jitted.lower(*args).compile())
+            self._executables[full_key] = exe
+            (self._own_keys if built else self._shared_keys).add(full_key)
+        return exe
 
     def init_server_state(self, params: PyTree) -> Any:
         return self.server.init(params)
@@ -356,10 +479,7 @@ class RoundEngine:
             args = (params, batches, weights, etas, active, server_state,
                     extra)
         key = (self._codec_sig,) + _signature(args)
-        exe = self._executables.get(key)
-        if exe is None:
-            exe = self._jitted.lower(*args).compile()
-            self._executables[key] = exe
+        exe = self._lookup(key, self._jitted, args)
         self.dispatch_count += 1
         out = exe(*args)
         if not has_t and not has_d:
@@ -420,10 +540,7 @@ class RoundEngine:
                 ef = be.place_transport_state(self.transport_state)
             args = (params, sb.batches, sb.weights, eta, acc, ef)
             key = ("slab", self._codec_sig) + _signature(args)
-            exe = self._executables.get(key)
-            if exe is None:
-                exe = self._jit_slab.lower(*args).compile()
-                self._executables[key] = exe
+            exe = self._lookup(key, self._jit_slab, args)
             acc, f, l, ef = exe(*args)
             firsts.append(f)
             lasts.append(l)
@@ -433,10 +550,7 @@ class RoundEngine:
             raise ValueError("run_round_chunked got an empty slab stream")
         fargs = (params, acc, server_state)
         key = ("slabfin", self._codec_sig) + _signature(fargs)
-        exe = self._executables.get(key)
-        if exe is None:
-            exe = self._jit_slabfin.lower(*fargs).compile()
-            self._executables[key] = exe
+        exe = self._lookup(key, self._jit_slabfin, fargs)
         new_params, server_state, new_res = exe(*fargs)
         if per_client:
             self.transport_state = jax.tree.map(
@@ -449,8 +563,21 @@ class RoundEngine:
 
     @property
     def compile_count(self) -> int:
-        """Number of distinct bucket executables built so far (exact)."""
-        return len(self._executables)
+        """Distinct bucket executables built BY THIS ENGINE (exact). With a
+        private registry this equals the historical registry size; with a
+        shared registry, executables adopted from other experiments are
+        excluded — they count under ``shared_count`` instead."""
+        return len(self._own_keys)
+
+    @property
+    def shared_count(self) -> int:
+        """Distinct executables this engine reused from the shared registry
+        without compiling (0 with a private registry)."""
+        return len(self._shared_keys)
+
+    @property
+    def registry(self) -> ExecutableRegistry:
+        return self._registry
 
 
 def make_round_fn(loss_fn: LossFn, *, server: str = "avg",

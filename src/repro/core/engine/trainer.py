@@ -87,7 +87,7 @@ class FedAvgTrainer:
                  runtime: RuntimeModel,
                  eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
                  use_kernel_avg: Optional[bool] = None, backend=None,
-                 sampler=None):
+                 sampler=None, registry=None, program_key=None):
         """``backend``: an ``engine.backends.ExecutionBackend`` deciding the
         execution geometry (default LocalBackend; pass a MeshBackend to run
         the same schedules/aggregators/servers GSPMD-sharded).
@@ -95,6 +95,12 @@ class FedAvgTrainer:
         ``sampler``: a ``ClientSampler`` instance overriding
         ``fed.sampler`` (default: resolve ``fed.sampler`` through the
         registry; ``uniform`` reproduces the historical stream exactly).
+
+        ``registry`` / ``program_key``: a shared
+        ``engine.round.ExecutableRegistry`` + the experiment's program
+        fingerprint, forwarded to the RoundEngine for cross-experiment AOT
+        executable reuse in fleet sweeps (DESIGN.md §12). Default: private
+        registry, historical behaviour.
 
         ``use_kernel_avg`` is DEPRECATED: use ``fed.aggregator="kernel"``
         (it has been folded into aggregator resolution; the kwarg is a
@@ -144,7 +150,9 @@ class FedAvgTrainer:
                                   downlink_ref=getattr(fed, "downlink_ref",
                                                        "f32"),
                                   cohort_chunk=getattr(fed, "cohort_chunk",
-                                                       None))
+                                                       None),
+                                  registry=registry,
+                                  program_key=program_key)
         self.server_state = self.engine.init_server_state(init_params)
         self.engine.init_transport_state(init_params)
         self.engine.init_downlink_state(init_params)
@@ -185,6 +193,15 @@ class FedAvgTrainer:
     @property
     def compile_count(self) -> int:
         return self.engine.compile_count
+
+    @property
+    def shared_count(self) -> int:
+        """Executables adopted from a shared registry without compiling."""
+        return self.engine.shared_count
+
+    @property
+    def dispatch_count(self) -> int:
+        return self.engine.dispatch_count
 
     def run(self, rounds: Optional[int] = None, eval_every: int = 10,
             verbose: bool = False, resume: bool = False) -> History:

@@ -92,7 +92,11 @@ class DecayController:
             raise AssertionError(s)
         k = max(min(k, fed.k0), fed.k_min)
         if fed.k_quantize:
-            k = quantize_k(k, fed.k0)
+            # the grid anchor is fed.k0 unless a sweep pins an explicit
+            # k_grid0: fleet points with different k0 but one shared anchor
+            # snap to IDENTICAL grid values, so their bucket shapes — and
+            # hence their AOT executables — coincide (DESIGN.md §12)
+            k = quantize_k(k, getattr(fed, "k_grid0", None) or fed.k0)
         return k
 
     def eta_for_round(self, r: int) -> float:

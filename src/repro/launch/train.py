@@ -36,6 +36,18 @@ def make_parser() -> argparse.ArgumentParser:
                     dest="overrides",
                     help="dotted-path spec override, repeatable "
                          "(e.g. --set fed.k0=4 --set transport.name=int8)")
+    ap.add_argument("--sweep", nargs="+", default=[], metavar="PATH=V1,V2",
+                    help="fan the resolved spec over a sweep grid and run "
+                         "it as a packed fleet (repro.launch.fleet), e.g. "
+                         "--sweep fed.k0=2,4,8 transport.name=int8,topk")
+    ap.add_argument("--sweep-csv", default=None, metavar="FILE.csv",
+                    help="write the fleet leaderboard CSV here (--sweep)")
+    ap.add_argument("--share-k-grid", action="store_true",
+                    help="with --sweep: pin one fed.k_grid0 anchor so k0 "
+                         "points share bucket executables")
+    ap.add_argument("--serial-sweep", action="store_true",
+                    help="with --sweep: run points serially instead of "
+                         "packed")
     # --- legacy flags (translated to a spec) ------------------------
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen1.5-0.5b")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -146,6 +158,17 @@ def resolve_spec(args) -> ExperimentSpec:
 def main(argv=None):
     args = make_parser().parse_args(argv)
     spec = resolve_spec(args).validate()
+    if args.sweep:
+        from repro.launch.fleet import run_fleet
+        result = run_fleet(spec, args.sweep, packed=not args.serial_sweep,
+                           rounds=args.rounds,
+                           share_grid=args.share_k_grid,
+                           verbose=True)
+        print(result.leaderboard())
+        if args.sweep_csv:
+            result.to_csv(args.sweep_csv)
+            print(f"[train] fleet csv -> {args.sweep_csv}")
+        return result
     print("[train] resolved spec:")
     print(spec.to_json())
 
