@@ -42,8 +42,14 @@ from typing import List
 #: baseline (wall / single-run compiles), and the delta is the per-point
 #: divergence (loss drift / excess compiles) — so packing that slows down,
 #: changes results, or stops sharing executables trips the same checks.
+#: async_speedup rows reuse it for the async contract (DESIGN.md §13):
+#: "kernel" is the async event-clock wall at the sync run's matched final
+#: loss, "oracle" the sync wall, and the delta the relative loss gap — so
+#: an async engine that stops out-pacing the straggler-bound sync round
+#: (or stops converging to the same loss) trips the same checks.
 GATED_PREFIXES = ("kern_fedavg_reduce", "kern_int8_delta_reduce",
-                  "kern_topk_scatter", "cohort_scaling", "fleet_speedup")
+                  "kern_topk_scatter", "cohort_scaling", "fleet_speedup",
+                  "async_speedup")
 
 #: timing: current kernel/oracle ratio may be at most this factor above the
 #: baseline ratio (floored — tiny baseline ratios would gate on noise)

@@ -13,7 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
 ``--json PATH`` additionally writes the machine-readable gate records —
 the kernel suite's (kernel/oracle µs + max-abs-delta vs the jnp oracle)
 plus the cohort_scaling suite's (chunked vs dense round time, params delta
-and executable peak MB, DESIGN.md §11) — the file the CI perf gate
+and executable peak MB, DESIGN.md §11), the fleet_speedup records
+(DESIGN.md §12) and the async_speedup record (async-vs-sync event-clock
+wall at matched loss, DESIGN.md §13) — the file the CI perf gate
 (``benchmarks.perf_gate``) diffs against the committed baseline
 ``benchmarks/baselines/BENCH_kernels.json``.
 
@@ -37,7 +39,7 @@ def main() -> None:
                     help="all 4 paper tasks, more rounds")
     ap.add_argument("--only", default=None,
                     help="substring filter: fig12|table4|roofline|kern|"
-                         "cohort|fleet")
+                         "cohort|fleet|async")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the kern suite's machine-readable records "
                          "(perf-gate input) to this file")
@@ -45,8 +47,9 @@ def main() -> None:
     args = ap.parse_args()
     verbose = not args.quiet
 
-    from benchmarks import (cohort_bench, fleet_bench, kernels_bench,
-                            roofline_bench, schedules_bench, table4_bench)
+    from benchmarks import (async_bench, cohort_bench, fleet_bench,
+                            kernels_bench, roofline_bench, schedules_bench,
+                            table4_bench)
 
     # --only roofline is an explicit ask: an empty table must fail loudly,
     # not pass silently (the CI-green-on-no-data failure mode)
@@ -55,6 +58,7 @@ def main() -> None:
     kern_records = []
     cohort_records = []
     fleet_records = []
+    async_records = []
 
     def run_kern():
         kern_records.extend(kernels_bench.run_records())
@@ -67,6 +71,10 @@ def main() -> None:
     def run_fleet_suite():
         fleet_records.extend(fleet_bench.run_records())
         return fleet_bench.run(verbose=verbose, records=fleet_records)
+
+    def run_async_suite():
+        async_records.extend(async_bench.run_records())
+        return async_bench.run(verbose=verbose, records=async_records)
 
     suites = []
     if not args.only or "table4" in args.only:
@@ -86,6 +94,8 @@ def main() -> None:
         suites.append(("cohort", run_cohort))
     if not args.only or "fleet" in args.only:
         suites.append(("fleet", run_fleet_suite))
+    if not args.only or "async" in args.only:
+        suites.append(("async", run_async_suite))
 
     rows = []
     for name, fn in suites:
@@ -98,10 +108,12 @@ def main() -> None:
         print(f"{n},{us:.1f},{d}")
 
     if args.json:
-        gate_records = kern_records + cohort_records + fleet_records
+        gate_records = (kern_records + cohort_records + fleet_records
+                        + async_records)
         if not gate_records:
-            print(f"--json {args.json}: no gate suite (kern/cohort/fleet) "
-                  f"ran (check --only filter)", file=sys.stderr)
+            print(f"--json {args.json}: no gate suite "
+                  f"(kern/cohort/fleet/async) ran (check --only filter)",
+                  file=sys.stderr)
             sys.exit(1)
         import jax
         payload = {"jax": jax.__version__,

@@ -47,7 +47,9 @@ def _make_fed_config(spec: ExperimentSpec) -> FedConfig:
         base_availability=s.base_availability,
         bucket_rounds=f.bucket_rounds,
         feedback_bucket_rounds=f.feedback_bucket_rounds,
-        prefetch=f.prefetch, cohort_chunk=f.cohort_chunk)
+        prefetch=f.prefetch, cohort_chunk=f.cohort_chunk,
+        aggregation=f.aggregation, buffer_size=f.buffer_size,
+        staleness_weight=f.staleness_weight, max_staleness=f.max_staleness)
 
 
 def _make_backend(spec: ExperimentSpec):
@@ -174,7 +176,8 @@ def build(spec: ExperimentSpec, *, backend=None, registry=None,
     executable reuse. ``program_key`` defaults to
     ``sweep.spec_program_key(spec)`` when a registry is given; pass an
     explicit key to extend it (e.g. with mesh-slice device ids)."""
-    from repro.core.engine.trainer import FedAvgTrainer, make_eval_fn
+    from repro.api.registries import AGGREGATION_REGISTRY
+    from repro.core.engine.trainer import make_eval_fn
     from repro.core.runtime_model import RuntimeModel
 
     spec.validate()
@@ -201,7 +204,12 @@ def build(spec: ExperimentSpec, *, backend=None, registry=None,
         backend = _make_backend(spec)
     eval_fn = (make_eval_fn(loss_fn, data)
                if spec.fed.eval_every > 0 else None)
-    trainer = FedAvgTrainer(loss_fn, params, data, fed, runtime,
-                            eval_fn=eval_fn, backend=backend,
-                            registry=registry, program_key=program_key)
+    # AggregationPolicy axis (DESIGN.md §13): "sync" resolves to the
+    # FedAvgTrainer construction verbatim — same class, same arguments, same
+    # compiled programs — so the default path stays bit-for-bit; "async"
+    # builds the AsyncBufferedEngine on the same surface.
+    policy = AGGREGATION_REGISTRY.get(fed.aggregation)()
+    trainer = policy(loss_fn, params, data, fed, runtime,
+                     eval_fn=eval_fn, backend=backend,
+                     registry=registry, program_key=program_key)
     return FederatedExperiment(spec, trainer, label)

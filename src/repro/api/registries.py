@@ -115,7 +115,7 @@ class Registry:
 
 
 # ---------------------------------------------------------------------------
-# the five registries (builtins live next to the protocols they implement)
+# the registries (builtins live next to the protocols they implement)
 # ---------------------------------------------------------------------------
 
 #: factory(*, trim_fraction, **kw) -> Aggregator  ((N,...) stack, (N,) w -> (...))
@@ -134,13 +134,27 @@ SAMPLER_REGISTRY = Registry("sampler", "repro.core.engine.sampling")
 #: factory(*, strategy, groups, **kw) -> ExecutionBackend
 BACKEND_REGISTRY = Registry("backend", "repro.core.engine.backends")
 
+#: AggregationPolicy axis (DESIGN.md §13): factory(loss_fn, init_params,
+#: data, fed, runtime, *, eval_fn, backend, sampler, registry, program_key,
+#: **kw) -> trainer ("sync" -> FedAvgTrainer, "async" -> AsyncBufferedEngine)
+AGGREGATION_REGISTRY = Registry("aggregation",
+                                "repro.core.engine.async_buffer")
+
+#: factory(**kw) -> Callable[[staleness int], float] — the async buffer's
+#: per-arrival contribution scale (DESIGN.md §13.3)
+STALENESS_WEIGHT_REGISTRY = Registry("staleness_weight",
+                                     "repro.core.engine.async_buffer")
+
 register_aggregator = AGGREGATOR_REGISTRY.register
 register_server_optimizer = SERVER_OPTIMIZER_REGISTRY.register
 register_transport = TRANSPORT_REGISTRY.register
 register_sampler = SAMPLER_REGISTRY.register
 register_backend = BACKEND_REGISTRY.register
+register_aggregation = AGGREGATION_REGISTRY.register
+register_staleness_weight = STALENESS_WEIGHT_REGISTRY.register
 
 REGISTRIES = {r.kind: r for r in (AGGREGATOR_REGISTRY,
                                   SERVER_OPTIMIZER_REGISTRY,
                                   TRANSPORT_REGISTRY, SAMPLER_REGISTRY,
-                                  BACKEND_REGISTRY)}
+                                  BACKEND_REGISTRY, AGGREGATION_REGISTRY,
+                                  STALENESS_WEIGHT_REGISTRY)}

@@ -88,6 +88,15 @@ class FedSpec:
     eval_every: int = 0            # 0 = no evaluation pass
     cohort_chunk: Optional[int] = None   # streaming slab size C (§11);
                                          # None = dense vmapped cohort
+    # --- async buffered aggregation (DESIGN.md §13) ---
+    aggregation: str = "sync"            # sync (round-synchronous, default,
+                                         # program-identical) | async
+                                         # (FedBuff-style buffered folding)
+    buffer_size: Optional[int] = None    # async: apply after this many
+                                         # arrivals (None = clients_per_round)
+    staleness_weight: str = "constant"   # async: constant | inv | poly
+    max_staleness: Optional[int] = None  # async: drop arrivals staler than
+                                         # this many versions (None = keep)
     seed: int = 0
 
 
@@ -410,6 +419,68 @@ class ExperimentSpec:
                               "strategy already streams clients through a "
                               "scan — cohort_chunk only applies to the "
                               "parallel (vmapped) cohort")
+        from repro.api.registries import (AGGREGATION_REGISTRY,
+                                          STALENESS_WEIGHT_REGISTRY)
+        if f.aggregation not in AGGREGATION_REGISTRY:
+            errors.append(f"fed.aggregation: "
+                          f"{AGGREGATION_REGISTRY._unknown_message(f.aggregation)}")
+        if f.staleness_weight not in STALENESS_WEIGHT_REGISTRY:
+            errors.append(f"fed.staleness_weight: "
+                          f"{STALENESS_WEIGHT_REGISTRY._unknown_message(f.staleness_weight)}")
+        if f.aggregation == "async":
+            if f.aggregator not in LINEAR_AGGREGATORS:
+                errors.append("fed.aggregation: async buffered folding is a "
+                              "streaming weighted sum — robust aggregators "
+                              f"(got {f.aggregator!r}) need the whole cohort "
+                              f"stack at once; use {LINEAR_AGGREGATORS} or "
+                              "fed.aggregation='sync'")
+            if f.cohort_chunk is not None:
+                errors.append("fed.cohort_chunk: chunked streaming cohorts "
+                              "are a round-synchronous execution shape — the "
+                              "async engine already streams arrivals one at "
+                              "a time; drop fed.cohort_chunk")
+            if b.name == "mesh" and b.strategy == "sequential":
+                errors.append("backend.strategy: the mesh sequential scan "
+                              "folds a whole synchronous cohort — async "
+                              "dispatch groups are ragged; use "
+                              "backend.strategy='parallel'")
+            if t.downlink != "none":
+                errors.append("transport.downlink: async clients start from "
+                              "skewed global versions, so the single "
+                              "broadcast-reference state machine cannot "
+                              "encode one delta for all of them yet — set "
+                              "transport.downlink='none'")
+            if s.name == "fixed_cohort":
+                errors.append("sampler.name: 'fixed_cohort' pins one client "
+                              "per slot, but async redispatches ragged "
+                              "groups of freed slots — use 'uniform' or "
+                              "'weighted'")
+            if f.buffer_size is not None:
+                if f.buffer_size < 1:
+                    errors.append(f"fed.buffer_size: must be >= 1, got "
+                                  f"{f.buffer_size}")
+                elif f.buffer_size > f.clients_per_round:
+                    errors.append(f"fed.buffer_size: {f.buffer_size} exceeds "
+                                  f"fed.clients_per_round "
+                                  f"({f.clients_per_round}) — the buffer "
+                                  f"can never fill past the in-flight "
+                                  f"cohort; lower fed.buffer_size or raise "
+                                  f"fed.clients_per_round")
+            if f.max_staleness is not None and f.max_staleness < 0:
+                errors.append(f"fed.max_staleness: must be >= 0, got "
+                              f"{f.max_staleness}")
+        else:
+            for name, v in (("fed.buffer_size", f.buffer_size),
+                            ("fed.max_staleness", f.max_staleness)):
+                if v is not None:
+                    errors.append(f"{name}: only meaningful for "
+                                  f"fed.aggregation='async', got "
+                                  f"aggregation={f.aggregation!r}")
+            if f.staleness_weight != "constant":
+                errors.append(f"fed.staleness_weight: "
+                              f"{f.staleness_weight!r} only applies to "
+                              f"fed.aggregation='async' (sync rounds have "
+                              f"staleness 0 by construction)")
         if b.strategy not in ("parallel", "sequential"):
             errors.append(f"backend.strategy: {b.strategy!r} not in "
                           f"('parallel', 'sequential')")

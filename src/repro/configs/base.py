@@ -198,6 +198,13 @@ class FedConfig:
     cohort_chunk: Optional[int] = None  # slab size C: run the round's U
                                       # clients in ceil(U/C) streaming slabs
                                       # (None = dense vmapped cohort)
+    # --- async buffered aggregation (DESIGN.md §13) ---
+    aggregation: str = "sync"         # sync | async (FedBuff-style)
+    buffer_size: Optional[int] = None  # async: apply the buffer after this
+                                      # many arrivals (None = cohort size)
+    staleness_weight: str = "constant"  # async: constant | inv | poly
+    max_staleness: Optional[int] = None  # async: drop arrivals staler than
+                                      # this many versions (None = keep all)
 
 
 @dataclass(frozen=True)

@@ -20,6 +20,9 @@ from repro.core.engine.sampling import (SAMPLERS, AvailabilitySampler,
 from repro.core.engine.scheduler import Bucket, RoundScheduler, is_loss_free
 from repro.core.engine.server import (SERVER_OPTIMIZERS, ServerOptimizer,
                                       get_server_optimizer)
+from repro.core.engine.async_buffer import (AsyncBufferedEngine,
+                                            STALENESS_WEIGHTS,
+                                            get_staleness_weight)
 from repro.core.engine.trainer import FedAvgTrainer, History, make_eval_fn
 from repro.core.engine.transport import (TRANSPORTS, AdaptiveDownlinkCodec,
                                          DownlinkCodec, IdentityTransport,
@@ -27,7 +30,9 @@ from repro.core.engine.transport import (TRANSPORTS, AdaptiveDownlinkCodec,
                                          Transport, get_downlink,
                                          get_transport)
 
-__all__ = ["AGGREGATORS", "get_aggregator", "weighted_mean",
+__all__ = ["AsyncBufferedEngine", "STALENESS_WEIGHTS",
+           "get_staleness_weight",
+           "AGGREGATORS", "get_aggregator", "weighted_mean",
            "ExecutionBackend", "LocalBackend", "MeshBackend", "ClientResult",
            "client_update", "make_client_update", "RoundEngine",
            "make_bucket_fn", "make_round_core", "make_round_fn",

@@ -1,0 +1,588 @@
+"""AsyncBufferedEngine — FedBuff-style buffered aggregation on a simulated
+event clock (DESIGN.md §13).
+
+The round-synchronous trainer waits for its whole cohort every round; at
+population scale the server never sees a clean cohort boundary. This engine
+keeps ``fed.clients_per_round`` clients permanently in flight: each client
+computes its K-step local update from whatever global version it last
+received, and its delta arrives after a per-client duration drawn from the
+RuntimeModel's heterogeneity model. Arrivals fold into a streaming f32
+buffer scaled by a pluggable staleness weight; when ``buffer_size`` updates
+have been folded the server applies the buffer through the ordinary
+ServerOptimizer step and bumps the global version.
+
+Determinism — the *simulated event clock*:
+
+  * durations come from ``RuntimeModel.draw_client_times`` in counter mode
+    (a pure function of (seed, dispatch index, client id)), so the event
+    trace is exact, replayable and needs no extra rng state checkpointed;
+  * the event loop is a heap of ``(finish_time, seq, slot)``; ties (all of
+    them, at heterogeneity 0) resolve by dispatch order;
+  * every event group that frees slots redispatches them as ONE vmapped
+    group from the current params — at ``heterogeneity == 0`` and
+    ``buffer_size == cohort`` the groups are whole cohorts, the sampler and
+    per-client batch draws consume EXACTLY the synchronous trainer's rng
+    stream, and the loss trajectory reproduces the round-synchronous run
+    (the sync-parity oracle, tests/test_async.py).
+
+Buffer-fold contract: an arrival from start version ``v0`` at current
+version ``v`` has staleness ``s = v - v0`` and folds as
+
+    buffer     += staleness_weight(s) * w_c * delta_c
+    buf_weight += staleness_weight(s) * w_c
+
+with ``w_c`` the client's sampler weight inside its dispatch group. The
+apply step normalises: ``aggregate = params + buffer / buf_weight`` —
+scale-invariant in the weight function, so ``constant`` reproduces the
+synchronous weighted mean exactly when the buffer holds one whole cohort.
+Arrivals staler than ``fed.max_staleness`` are dropped (counted, slot
+refilled, wire still charged — the bytes were shipped).
+
+Uplink deltas ride the existing Transport layer: each arrival is encoded /
+decoded through ``Transport.aggregate_slab`` with a per-slot error-feedback
+residual (the in-flight slot IS the per-version residual slot — concurrency
+is fixed, so slot j's residual always compensates the next update computed
+from that lane). Downlink codecs are refused: async clients hold skewed
+versions, which the single broadcast-reference state machine cannot encode.
+
+Everything checkpoints: buffer + fold weight, per-slot in-flight deltas /
+client ids / start versions (the version vector) / losses, the event heap,
+per-slot EF residuals, both rng streams and the byte counters — a mid-buffer
+``save_state`` -> ``restore_state`` resumes bitwise (tests/test_async.py).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registries import (register_aggregation,
+                                  register_staleness_weight)
+from repro.configs.base import FedConfig
+from repro.core.engine.backends.base import LINEAR_AGGREGATORS
+from repro.core.engine.client import make_client_update
+from repro.core.engine.round import ExecutableRegistry, LossFn, _signature
+from repro.core.engine.sampling import make_sampler
+from repro.core.engine.server import get_server_optimizer
+from repro.core.engine.transport import get_transport
+from repro.core.engine.trainer import History
+from repro.core.runtime_model import RuntimeModel
+from repro.core.schedules import DecayController
+from repro.data import pipeline
+from repro.data.synthetic import FederatedData
+
+PyTree = Any
+
+STALENESS_WEIGHTS = ("constant", "inv", "poly")   # builtins
+
+# poly staleness weight exponent: (1 + s)^-POLY_ALPHA (FedBuff's
+# polynomial family; 0.5 is the paper's default)
+POLY_ALPHA = 0.5
+
+register_staleness_weight("constant", lambda **kw: lambda s: 1.0)
+register_staleness_weight("inv", lambda **kw: lambda s: 1.0 / (1.0 + s))
+register_staleness_weight(
+    "poly", lambda **kw: lambda s: (1.0 + s) ** -POLY_ALPHA)
+
+
+def get_staleness_weight(name) -> Callable[[int], float]:
+    from repro.api.registries import STALENESS_WEIGHT_REGISTRY
+    if callable(name):
+        return name
+    return STALENESS_WEIGHT_REGISTRY.get(name)()
+
+
+class AsyncBufferedEngine:
+    """Drop-in trainer for ``fed.aggregation="async"`` — the FedAvgTrainer
+    surface (``run``/``save_state``/``restore_state``/``history``/compile
+    counters) on the buffered-asynchronous execution model above."""
+
+    def __init__(self, loss_fn: LossFn, init_params: PyTree,
+                 data: FederatedData, fed: FedConfig,
+                 runtime: RuntimeModel,
+                 eval_fn: Optional[Callable[[PyTree],
+                                            Dict[str, float]]] = None,
+                 backend=None, sampler=None, registry=None,
+                 program_key=None):
+        from repro.core.engine.backends.local import LocalBackend
+        self.loss_fn = loss_fn
+        self.data = data
+        self.fed = fed
+        self.eval_fn = eval_fn
+        self.ctrl = DecayController(fed)
+        self.backend = backend if backend is not None else LocalBackend()
+
+        # --- engine-time refusals (mirror spec.validate, DESIGN.md §13.5) --
+        if fed.aggregator not in LINEAR_AGGREGATORS:
+            raise ValueError(
+                f"async buffered aggregation folds arrivals into a running "
+                f"weighted sum and requires a linear aggregator "
+                f"{LINEAR_AGGREGATORS}, got {fed.aggregator!r} — use "
+                f"aggregation='sync' for robust aggregators")
+        if getattr(fed, "cohort_chunk", None):
+            raise ValueError(
+                "cohort_chunk does not compose with async aggregation: the "
+                "async engine already streams arrivals one at a time — drop "
+                "cohort_chunk")
+        if getattr(self.backend, "strategy", "parallel") == "sequential":
+            raise ValueError(
+                "the mesh sequential strategy scans a whole synchronous "
+                "cohort; async dispatch groups are ragged — use the "
+                "parallel strategy")
+        if getattr(fed, "downlink", "none") != "none":
+            raise ValueError(
+                "async clients start from skewed global versions; the "
+                "broadcast-reference downlink state machine cannot encode "
+                "one delta for all of them — set downlink='none'")
+        self.sampler = sampler if sampler is not None else make_sampler(fed)
+        if self.sampler.stateful_cohort:
+            raise ValueError(
+                f"sampler {self.sampler.name!r} pins one client per slot, "
+                f"but async redispatches ragged groups of freed slots — use "
+                f"'uniform' or 'weighted'")
+
+        self.n = min(fed.clients_per_round, data.num_clients)
+        buf = getattr(fed, "buffer_size", None)
+        self.buffer_size = self.n if buf is None else int(buf)
+        if not 1 <= self.buffer_size <= self.n:
+            raise ValueError(
+                f"buffer_size must be in [1, clients_per_round={self.n}], "
+                f"got {self.buffer_size}: a larger buffer can never fill "
+                f"past the in-flight cohort")
+        self.staleness_weight = get_staleness_weight(
+            getattr(fed, "staleness_weight", "constant"))
+        self.max_staleness = getattr(fed, "max_staleness", None)
+
+        self.server = get_server_optimizer(fed.server_optimizer)
+        self.server_lr = fed.server_lr
+        transport = get_transport(getattr(fed, "transport", "none"),
+                                  topk_frac=getattr(fed, "topk_frac", 0.1))
+        if transport is not None and transport.error_feedback:
+            # one residual slot per in-flight lane: concurrency is fixed, so
+            # lane j's residual always compensates the next update computed
+            # from that lane — the "per-version EF slot" of DESIGN.md §13.4
+            transport = transport.with_ef_slots(self.n)
+        self.transport = transport
+        self._codec_sig = (() if transport is None else transport.signature())
+
+        self.params = self.backend.place_params(init_params)
+        self.server_state = self.server.init(init_params)
+        self.transport_state = (() if transport is None
+                                else transport.init_state(init_params))
+
+        self.runtime = runtime
+        if transport is not None:
+            # charge the wire what the codec ships, on an engine-owned copy
+            # (shared RuntimeModels keep their own stream), as the sync
+            # trainer does
+            import copy as _copy
+            rt = _copy.copy(runtime)
+            rt._rng = np.random.default_rng()
+            rt._rng.bit_generator.state = runtime._rng.bit_generator.state
+            rt.uplink_compression = transport.compression_ratio(init_params)
+            self.runtime = rt
+
+        if registry is not None and program_key is None:
+            raise ValueError(
+                "a shared ExecutableRegistry requires a program_key (see "
+                "RoundEngine)")
+        self._registry = registry if registry is not None \
+            else ExecutableRegistry()
+        self._program_key = program_key if program_key is not None else ()
+        self._executables: Dict[Tuple, Any] = {}
+        self._own_keys: set = set()
+        self._shared_keys: set = set()
+        self.dispatch_count = 0
+
+        self._dispatch_jit = jax.jit(self._dispatch_fn)
+        self._fold_jit = jax.jit(self._fold_fn)
+        self._apply_jit = jax.jit(self._apply_fn)
+
+        self.history = History()
+        self._np_rng = np.random.default_rng(fed.seed)
+
+        # --- simulation state (all of it checkpoints) -------------------
+        self._started = False
+        self._sim_time = 0.0
+        self._version = 0            # applied-buffer count == "round" index
+        self._seq = 0                # event tie-break, monotone
+        self._dispatch_idx = 0       # counter-mode duration stream index
+        self._heap: List[Tuple[float, int, int]] = []
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             init_params)
+        # per-slot in-flight state: stacked deltas (n, ...) + host metadata
+        self._inflight = jax.tree.map(
+            lambda p: jnp.zeros((self.n,) + tuple(p.shape), jnp.float32),
+            init_params)
+        self._slot_client = np.full(self.n, -1, np.int64)
+        self._slot_version = np.full(self.n, -1, np.int64)   # version vector
+        self._slot_weight = np.zeros(self.n, np.float64)
+        self._slot_first = np.zeros(self.n, np.float64)
+        self._slot_last = np.zeros(self.n, np.float64)
+        self._slot_k = np.zeros(self.n, np.int64)
+        self._buffer = zeros
+        self._buf_weight = 0.0
+        self._buf_count = 0
+        self._buf_first_losses: List[float] = []
+        self._buf_staleness: List[int] = []
+        self.applied_updates = 0
+        self.dropped_updates = 0
+        self.staleness_hist: Dict[int, int] = {}
+        self._steps = 0
+        self._up_mbit = 0.0
+        self._down_mbit = 0.0
+        self._min_loss = float("inf")
+        self._max_acc = 0.0
+        self._completed_rounds = 0
+
+    # ------------------------------------------------------------------
+    # jitted cores (AOT-cached per input signature, like RoundEngine)
+    # ------------------------------------------------------------------
+    def _dispatch_fn(self, params, batches, eta):
+        """(params, batches (m, K, b, ...), eta) -> (deltas f32 (m, ...),
+        first (m,), last (m,)) — the eager client compute at dispatch."""
+        update = make_client_update(self.loss_fn)
+        res = jax.vmap(lambda b: update(params, b, eta))(batches)
+        p32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        deltas = jax.tree.map(
+            lambda cp, p: cp.astype(jnp.float32) - p[None], res.params, p32)
+        return deltas, res.first_loss, res.last_loss
+
+    def _fold_fn(self, buffer, delta, w, ef):
+        """Fold one arrival: encode/decode through the transport (per-slot
+        EF residual compensation included) and add ``w * decoded`` into the
+        running f32 buffer. ``w`` already carries sampler x staleness
+        weight. Returns (buffer, new_ef)."""
+        if self.transport is None:
+            new_buf = jax.tree.map(lambda b, d: b + w * d, buffer, delta)
+            return new_buf, ef
+        zeros = jax.tree.map(lambda d: jnp.zeros_like(d), delta)
+        hat, _true, new_ef = self.transport.aggregate_slab(
+            zeros, jax.tree.map(lambda d: d[None], delta),
+            jnp.ones((1,), jnp.float32), ef)
+        new_buf = jax.tree.map(lambda b, h: b + w * h, buffer, hat)
+        return new_buf, new_ef
+
+    def _apply_fn(self, params, buffer, buf_weight, server_state):
+        """aggregate = params + buffer / buf_weight, through the ordinary
+        ServerOptimizer step (fedavgm/fedyogi compose unchanged)."""
+        inv = jnp.where(buf_weight > 0, 1.0 / buf_weight, 0.0)
+        aggregate = jax.tree.map(
+            lambda p, b: p.astype(jnp.float32) + inv * b, params, buffer)
+        new_params, new_state = self.server.step(params, aggregate,
+                                                 server_state, self.server_lr)
+        zeros = jax.tree.map(lambda b: jnp.zeros_like(b), buffer)
+        return new_params, new_state, zeros
+
+    def _run_exe(self, tag: str, jitted, args):
+        key = ((self._program_key,) if self._program_key else ()) \
+            + (tag, self._codec_sig) + _signature(args)
+        exe = self._executables.get(key)
+        if exe is None:
+            exe, built = self._registry.get_or_build(
+                key, lambda: jitted.lower(*args).compile())
+            self._executables[key] = exe
+            (self._own_keys if built else self._shared_keys).add(key)
+        self.dispatch_count += 1
+        return exe(*args)
+
+    @property
+    def compile_count(self) -> int:
+        return len(self._own_keys)
+
+    @property
+    def shared_count(self) -> int:
+        return len(self._shared_keys)
+
+    # ------------------------------------------------------------------
+    # event loop
+    # ------------------------------------------------------------------
+    def _dispatch_group(self, slots: List[int]) -> None:
+        """Draw a cohort group for the freed ``slots``, compute their local
+        updates from the CURRENT params (the version they just received),
+        and schedule their arrivals. One sampler draw + per-client batch
+        draws in slot order — at zero jitter with whole-cohort groups this
+        is exactly the synchronous ``bucket_batches`` stream."""
+        m = len(slots)
+        r = self._version + 1                     # the round being fed
+        k = self.ctrl.k_for_round(r)
+        eta = self.ctrl.eta_for_round(r)
+        ids, w = self.sampler.round(self._np_rng, self.data, m, r)
+        b = self.fed.batch_size
+        feat = self.data.client_x[ids[0]].shape[1:]
+        yfeat = self.data.client_y[ids[0]].shape[1:]
+        xs = np.empty((m, k, b) + feat, self.data.client_x[ids[0]].dtype)
+        ys = np.empty((m, k, b) + yfeat, self.data.client_y[ids[0]].dtype)
+        for j, c in enumerate(ids):
+            n_c = len(self.data.client_y[c])
+            idx = self._np_rng.integers(0, n_c, size=k * b)
+            np.take(self.data.client_x[c], idx, axis=0,
+                    out=xs[j].reshape((k * b,) + feat))
+            np.take(self.data.client_y[c], idx, axis=0,
+                    out=ys[j].reshape((k * b,) + yfeat))
+        batches = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+        args = (self.params, batches, jnp.asarray(eta, jnp.float32))
+        deltas, first, last = self._run_exe("async-dispatch",
+                                            self._dispatch_jit, args)
+        first = np.asarray(first)
+        last = np.asarray(last)
+        # scatter the group into the in-flight slots (host-side: the slot
+        # axis is small and the copy overlaps nothing)
+        sl = np.asarray(slots)
+        self._inflight = jax.tree.map(
+            lambda tree, d: tree.at[sl].set(d), self._inflight, deltas)
+        times = self.runtime.draw_client_times(self._dispatch_idx, ids, k)
+        self._dispatch_idx += 1
+        for j, slot in enumerate(slots):
+            self._slot_client[slot] = ids[j]
+            self._slot_version[slot] = self._version
+            self._slot_weight[slot] = float(w[j])
+            self._slot_first[slot] = float(first[j])
+            self._slot_last[slot] = float(last[j])
+            self._slot_k[slot] = k
+            heapq.heappush(self._heap,
+                           (float(self._sim_time + times[j]), self._seq,
+                            slot))
+            self._seq += 1
+        self._steps += k * m
+        self._down_mbit += self.runtime.downlink_mbit_per_client * m
+
+    def _fold_arrival(self, slot: int) -> None:
+        """One arrival: staleness-weighted fold into the buffer (or a
+        max-staleness drop). The wire is charged either way — the bytes
+        were shipped."""
+        self._up_mbit += self.runtime.uplink_mbit_per_client
+        s = int(self._version - self._slot_version[slot])
+        self.staleness_hist[s] = self.staleness_hist.get(s, 0) + 1
+        if self.max_staleness is not None and s > self.max_staleness:
+            self.dropped_updates += 1
+            return
+        w = float(self._slot_weight[slot]) * float(self.staleness_weight(s))
+        delta = jax.tree.map(lambda t: t[slot], self._inflight)
+        ef = ()
+        if self.transport is not None and self.transport.error_feedback:
+            ef = jax.tree.map(lambda t: t[slot:slot + 1],
+                              self.transport_state)
+        args = (self._buffer, delta, jnp.asarray(w, jnp.float32), ef)
+        self._buffer, new_ef = self._run_exe("async-fold", self._fold_jit,
+                                             args)
+        if self.transport is not None and self.transport.error_feedback:
+            self.transport_state = jax.tree.map(
+                lambda t, n: t.at[slot:slot + 1].set(n),
+                self.transport_state, new_ef)
+        self._buf_weight += w
+        self._buf_count += 1
+        self._buf_first_losses.append(float(self._slot_first[slot]))
+        self._buf_staleness.append(s)
+
+    def _apply_buffer(self, verbose: bool, eval_every: Optional[int]) -> None:
+        args = (self.params, self._buffer,
+                jnp.asarray(self._buf_weight, jnp.float32), self.server_state)
+        self.params, self.server_state, self._buffer = self._run_exe(
+            "async-apply", self._apply_jit, args)
+        self.applied_updates += self._buf_count
+        self._version += 1
+        round_loss = float(np.mean(self._buf_first_losses))
+        self.ctrl.observe_round_losses(round_loss)
+        self._min_loss = min(self._min_loss, round_loss)
+        h = self.history
+        r = self._version
+        h.rounds.append(r)
+        h.k.append(self.ctrl.k_for_round(r))
+        h.eta.append(self.ctrl.eta_for_round(r))
+        h.wall_clock_s.append(self._sim_time)     # the event clock IS wall
+        h.sgd_steps.append(self._steps)
+        h.uplink_mbit.append(self._up_mbit)
+        h.downlink_mbit.append(self._down_mbit)
+        h.train_loss.append(round_loss)
+        h.min_train_loss.append(self._min_loss)
+        h.staleness.append(float(np.mean(self._buf_staleness)))
+        h.applied_updates.append(self.applied_updates)
+        h.dropped_updates.append(self.dropped_updates)
+        self._buf_weight = 0.0
+        self._buf_count = 0
+        self._buf_first_losses = []
+        self._buf_staleness = []
+        if eval_every and self.eval_fn is not None and r % eval_every == 0:
+            metrics = self.eval_fn(self.params)
+            err = metrics.get("error", 1.0 - metrics.get("acc", 0.0))
+            self.ctrl.observe_validation(err)
+            self._max_acc = max(self._max_acc, metrics.get("acc", 0.0))
+            h.val_rounds.append(r)
+            h.val_error.append(err)
+            h.max_val_acc.append(self._max_acc)
+        if verbose:
+            print(f"apply {r:5d} K={h.k[-1]:3d} loss={round_loss:.4f} "
+                  f"stale={h.staleness[-1]:.2f} W={self._sim_time:.1f}s "
+                  f"applied={self.applied_updates} "
+                  f"dropped={self.dropped_updates}")
+
+    def run(self, rounds: Optional[int] = None, eval_every: int = 10,
+            verbose: bool = False, resume: bool = False) -> History:
+        """Advance the event clock until ``rounds`` buffers have been
+        applied (``resume=True`` continues a restored run; otherwise a
+        second ``run()`` call keeps advancing the same simulation — the
+        async engine has no schedule replay)."""
+        rounds = rounds if rounds is not None else self.fed.rounds
+        if not self._started:
+            self._dispatch_group(list(range(self.n)))
+            self._started = True
+        while self._version < rounds:
+            if not self._heap:
+                raise RuntimeError("async event loop drained with no "
+                                   "in-flight clients")
+            t, _, slot = self._heap[0]
+            freed: List[int] = []
+            # pop the WHOLE same-timestamp group (deterministic seq order),
+            # folding each arrival and applying the buffer whenever it
+            # fills mid-group — then redispatch the freed slots as one
+            # vmapped group from the now-current params
+            while self._heap and self._heap[0][0] == t:
+                _, _, slot = heapq.heappop(self._heap)
+                self._sim_time = t
+                self._fold_arrival(slot)
+                freed.append(slot)
+                if self._buf_count >= self.buffer_size:
+                    self._apply_buffer(verbose, eval_every
+                                       if self.eval_fn is not None else None)
+            self._dispatch_group(freed)
+        self._completed_rounds = self._version
+        return self.history
+
+    # ------------------------------------------------------------------
+    # checkpointing (bitwise resume, DESIGN.md §13.6)
+    # ------------------------------------------------------------------
+    def save_state(self, path: str,
+                   extra_meta: Optional[Dict[str, Any]] = None) -> None:
+        from repro.checkpoint import save_checkpoint
+        tree = {"params": self.params, "server": self.server_state,
+                "transport": self.transport_state,
+                "buffer": self._buffer, "inflight": self._inflight}
+        ctrl = self.ctrl
+        meta = {
+            **(extra_meta or {}),
+            "completed_rounds": self._completed_rounds,
+            "history": self.history.as_dict(),
+            "rng": self._np_rng.bit_generator.state,
+            "runtime_rng": self.runtime._rng.bit_generator.state,
+            "async": {
+                "started": self._started,
+                "sim_time": self._sim_time,
+                "version": self._version,
+                "seq": self._seq,
+                "dispatch_idx": self._dispatch_idx,
+                "heap": [[t, s, sl] for t, s, sl in self._heap],
+                "slot_client": self._slot_client.tolist(),
+                "slot_version": self._slot_version.tolist(),
+                "slot_weight": self._slot_weight.tolist(),
+                "slot_first": self._slot_first.tolist(),
+                "slot_last": self._slot_last.tolist(),
+                "slot_k": self._slot_k.tolist(),
+                "buf_weight": self._buf_weight,
+                "buf_count": self._buf_count,
+                "buf_first_losses": self._buf_first_losses,
+                "buf_staleness": self._buf_staleness,
+                "applied_updates": self.applied_updates,
+                "dropped_updates": self.dropped_updates,
+                "staleness_hist": {str(k): v for k, v
+                                   in self.staleness_hist.items()},
+            },
+            "steps": self._steps,
+            "up_mbit": self._up_mbit, "down_mbit": self._down_mbit,
+            "min_loss": self._min_loss, "max_acc": self._max_acc,
+            "ctrl": {"f0": ctrl._f0, "window": list(ctrl.tracker._buf),
+                     "plateau": [ctrl.plateau.best, ctrl.plateau.stale,
+                                 ctrl.plateau.plateaued]},
+        }
+        save_checkpoint(path, tree, meta=meta)
+
+    def restore_state(self, path: str) -> None:
+        from repro.checkpoint import load_checkpoint
+
+        def spec(tree):
+            return jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(np.shape(x),
+                                               np.asarray(x).dtype), tree)
+
+        like = spec({"params": self.params, "server": self.server_state,
+                     "transport": self.transport_state,
+                     "buffer": self._buffer, "inflight": self._inflight})
+        tree, meta = load_checkpoint(path, like)
+        # checkpoint leaves come back as host numpy; the engine needs device
+        # arrays (the in-flight scatter uses .at[], and the AOT executables
+        # expect placed inputs)
+        place = lambda t: jax.tree.map(jnp.asarray, t)
+        self.params = self.backend.place_params(tree["params"])
+        self.server_state = place(tree["server"])
+        self.transport_state = place(tree["transport"])
+        self._buffer = place(tree["buffer"])
+        self._inflight = place(tree["inflight"])
+        a = meta["async"]
+        self._started = bool(a["started"])
+        self._sim_time = float(a["sim_time"])
+        self._version = int(a["version"])
+        self._seq = int(a["seq"])
+        self._dispatch_idx = int(a["dispatch_idx"])
+        self._heap = [(float(t), int(s), int(sl)) for t, s, sl in a["heap"]]
+        heapq.heapify(self._heap)
+        self._slot_client = np.asarray(a["slot_client"], np.int64)
+        self._slot_version = np.asarray(a["slot_version"], np.int64)
+        self._slot_weight = np.asarray(a["slot_weight"], np.float64)
+        self._slot_first = np.asarray(a["slot_first"], np.float64)
+        self._slot_last = np.asarray(a["slot_last"], np.float64)
+        self._slot_k = np.asarray(a["slot_k"], np.int64)
+        self._buf_weight = float(a["buf_weight"])
+        self._buf_count = int(a["buf_count"])
+        self._buf_first_losses = [float(x) for x in a["buf_first_losses"]]
+        self._buf_staleness = [int(x) for x in a["buf_staleness"]]
+        self.applied_updates = int(a["applied_updates"])
+        self.dropped_updates = int(a["dropped_updates"])
+        self.staleness_hist = {int(k): int(v)
+                               for k, v in a["staleness_hist"].items()}
+        self._completed_rounds = int(meta["completed_rounds"])
+        self.history = History.from_dict(meta["history"])
+        self._np_rng.bit_generator.state = meta["rng"]
+        self.runtime._rng.bit_generator.state = meta["runtime_rng"]
+        self._steps = int(meta["steps"])
+        self._up_mbit = float(meta["up_mbit"])
+        self._down_mbit = float(meta["down_mbit"])
+        self._min_loss = float(meta["min_loss"])
+        self._max_acc = float(meta["max_acc"])
+        c = meta["ctrl"]
+        self.ctrl.tracker._buf.clear()
+        for v in c["window"]:
+            self.ctrl.tracker.push(v)
+        self.ctrl._f0 = c["f0"]
+        best, stale, plateaued = c["plateau"]
+        self.ctrl.plateau.best = best
+        self.ctrl.plateau.stale = int(stale)
+        self.ctrl.plateau.plateaued = bool(plateaued)
+
+
+# ---------------------------------------------------------------------------
+# AggregationPolicy registry builtins (DESIGN.md §13.1)
+# ---------------------------------------------------------------------------
+
+def _sync_policy(loss_fn, init_params, data, fed, runtime, *, eval_fn=None,
+                 backend=None, sampler=None, registry=None, program_key=None,
+                 **kw):
+    from repro.core.engine.trainer import FedAvgTrainer
+    return FedAvgTrainer(loss_fn, init_params, data, fed, runtime,
+                         eval_fn=eval_fn, backend=backend, sampler=sampler,
+                         registry=registry, program_key=program_key)
+
+
+def _async_policy(loss_fn, init_params, data, fed, runtime, *, eval_fn=None,
+                  backend=None, sampler=None, registry=None,
+                  program_key=None, **kw):
+    return AsyncBufferedEngine(loss_fn, init_params, data, fed, runtime,
+                               eval_fn=eval_fn, backend=backend,
+                               sampler=sampler, registry=registry,
+                               program_key=program_key)
+
+
+register_aggregation("sync", lambda **kw: _sync_policy)
+register_aggregation("async", lambda **kw: _async_policy)

@@ -59,6 +59,11 @@ class History:
     val_rounds: List[int] = field(default_factory=list)
     val_error: List[float] = field(default_factory=list)
     max_val_acc: List[float] = field(default_factory=list)    # Fig. 2 metric
+    # --- async buffered aggregation (DESIGN.md §13; empty for sync runs,
+    # missing-field defaults keep pre-async checkpoints loadable) ---
+    staleness: List[float] = field(default_factory=list)      # per-apply mean
+    applied_updates: List[int] = field(default_factory=list)  # cumulative
+    dropped_updates: List[int] = field(default_factory=list)  # cumulative
 
     def as_dict(self) -> Dict[str, list]:
         return dataclasses.asdict(self)

@@ -14,7 +14,7 @@ sensitivity studies.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -56,6 +56,7 @@ class RuntimeModel:
         #: ``round_cost(..., downlink_level=...)``. None -> the fixed
         #: ``downlink_compression`` ratio charges every round.
         self.downlink_level_ratios = None
+        self._seed = int(seed)
         self._rng = np.random.default_rng(seed)
 
     @property
@@ -80,15 +81,10 @@ class RuntimeModel:
         return (self.downlink_mbit_per_client / self.cfg.download_mbps
                 + self.uplink_mbit_per_client / self.cfg.upload_mbps)
 
-    def round_cost(self, k: int, downlink_level: Optional[int] = None
-                   ) -> RoundCost:
-        """Eq. 3/4: straggler max over the round's client draws.
-
-        ``downlink_level``: the adaptive codec's per-round level
-        (DESIGN.md §10.4) — consulted only when ``downlink_level_ratios``
-        is set. Level 0 ships no broadcast (zero downlink mbit/time);
-        levels in the map charge that level's ratio; -1/None (fixed-rate
-        codec or padding round) charges the configured ratio."""
+    def _leg_mbit(self, downlink_level: Optional[int] = None
+                  ) -> Tuple[float, float]:
+        """(uplink, downlink) encoded mbit per client for one round, with
+        the adaptive downlink's per-level charge applied (DESIGN.md §10.4)."""
         up = self.uplink_mbit_per_client
         down = self.downlink_mbit_per_client
         if self.downlink_level_ratios is not None and \
@@ -99,17 +95,74 @@ class RuntimeModel:
                 ratio = self.downlink_level_ratios.get(
                     downlink_level, self.downlink_compression)
                 down = self.size / float(ratio)
-        base = (down / self.cfg.download_mbps
+        return up, down
+
+    def _base_seconds(self, k: int,
+                      downlink_level: Optional[int] = None) -> float:
+        """Eq. 3 for the nominal (speed-multiplier 1.0) client."""
+        up, down = self._leg_mbit(downlink_level)
+        return (down / self.cfg.download_mbps
                 + k * self.cfg.beta_seconds
                 + up / self.cfg.upload_mbps)
+
+    def draw_client_times(self, round_idx: Optional[int],
+                          client_ids: Sequence[int], k: int, *,
+                          downlink_level: Optional[int] = None) -> np.ndarray:
+        """Seeded per-client round durations (Eq. 3 x lognormal multiplier).
+
+        This is the one source of the heterogeneity draw: ``round_cost``
+        consumes it (stream mode) so the straggler max and any per-client
+        consumer (the async event clock) see the SAME speed model — they
+        reconcile with the het-free ``comm_time`` mean exactly at
+        ``heterogeneity == 0``, where every entry is ``_base_seconds``.
+
+        Two reproducible modes:
+
+          * ``round_idx=None`` — stream mode: multipliers come off the
+            model's own ``self._rng`` stream (checkpointed as
+            ``runtime_rng``), one draw per entry of ``client_ids``. This is
+            the historical ``round_cost`` draw bit-for-bit.
+          * ``round_idx`` given — counter mode: each client's multiplier is
+            drawn from ``default_rng([seed, round_idx, client_id])``, so a
+            duration is a pure function of (seed, dispatch index, client) —
+            order-independent, replayable without any saved rng state. The
+            async engine's event clock is built on this mode.
+        """
+        ids = np.asarray(client_ids, dtype=np.int64)
+        base = self._base_seconds(k, downlink_level)
+        if self.het <= 0:
+            return np.full(ids.shape[0], base, dtype=np.float64)
+        if round_idx is None:
+            mult = self._rng.lognormal(0.0, self.het, size=ids.shape[0])
+        else:
+            mult = np.array([
+                np.random.default_rng(
+                    [self._seed, int(round_idx), int(c)]
+                ).lognormal(0.0, self.het) for c in ids])
+        return base * mult
+
+    def round_cost(self, k: int, downlink_level: Optional[int] = None
+                   ) -> RoundCost:
+        """Eq. 3/4: straggler max over the round's client draws.
+
+        ``downlink_level``: the adaptive codec's per-round level
+        (DESIGN.md §10.4) — consulted only when ``downlink_level_ratios``
+        is set. Level 0 ships no broadcast (zero downlink mbit/time);
+        levels in the map charge that level's ratio; -1/None (fixed-rate
+        codec or padding round) charges the configured ratio."""
+        up, down = self._leg_mbit(downlink_level)
         if self.het > 0:
             # one speed multiplier per client, on compute AND both wire
             # legs — keeps round_cost consistent with the documented
-            # beta/U/D spread (comm_time stays the het-free mean)
-            mult = self._rng.lognormal(0.0, self.het, size=self.n)
-            wall = float(base * np.max(mult))
+            # beta/U/D spread (comm_time stays the het-free mean). Stream
+            # mode keeps the historical self._rng draw bit-for-bit: the
+            # scalar base distributes over the elementwise product, so
+            # max(base * mult) == base * max(mult) exactly.
+            times = self.draw_client_times(None, np.arange(self.n), k,
+                                           downlink_level=downlink_level)
+            wall = float(np.max(times))
         else:
-            wall = base
+            wall = self._base_seconds(k, downlink_level)
         return RoundCost(wall_clock_s=wall,
                          sgd_steps=k * self.n,
                          uplink_mbit=up * self.n,

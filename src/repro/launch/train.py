@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import argparse
 
+import numpy as np
+
 from repro.api import ExperimentSpec, build
 from repro.configs import ARCHS
 
@@ -81,6 +83,21 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--ref-store", default="f32", choices=("f32", "q8"),
                     help="server-held downlink reference/residual store "
                          "(q8: two-level int8, ~2x less state, §10.3)")
+    ap.add_argument("--aggregation", default="sync",
+                    choices=("sync", "async"),
+                    help="server aggregation policy: round-synchronous "
+                         "FedAvg or FedBuff-style async buffering on the "
+                         "simulated event clock (DESIGN.md §13)")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="async: apply the buffer after this many client "
+                         "arrivals (default: the cohort size)")
+    ap.add_argument("--staleness-weight", default="constant",
+                    choices=("constant", "inv", "poly"),
+                    help="async: per-arrival contribution scale vs "
+                         "staleness s — 1, 1/(1+s), or (1+s)^-0.5")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="async: drop arrivals staler than this many "
+                         "versions (default: keep all)")
     ap.add_argument("--sampler", default="uniform",
                     choices=("uniform", "weighted", "fixed_cohort",
                              "availability"),
@@ -114,6 +131,15 @@ def spec_from_legacy_args(args) -> ExperimentSpec:
     the ``loss_window = max(rounds // 8, 3)`` rule and the beta=0.05s
     runtime constant)."""
     rounds = args.rounds if args.rounds is not None else 50
+    # Optional async knobs only override when set: the spec refuses
+    # buffer_size/max_staleness under aggregation="sync", and None is not
+    # expressible as a dotted-path literal.
+    async_overrides = [f"fed.aggregation={args.aggregation}",
+                       f"fed.staleness_weight={args.staleness_weight}"]
+    if args.buffer_size is not None:
+        async_overrides.append(f"fed.buffer_size={args.buffer_size}")
+    if args.max_staleness is not None:
+        async_overrides.append(f"fed.max_staleness={args.max_staleness}")
     return ExperimentSpec().with_overrides(
         f"model.arch={args.arch}", f"model.reduced={args.reduced}",
         f"data.clients={args.clients}", f"data.seq_len={args.seq}",
@@ -140,7 +166,8 @@ def spec_from_legacy_args(args) -> ExperimentSpec:
         f"transport.ref_store={args.ref_store}",
         f"backend.name={args.backend}", f"backend.strategy={args.strategy}",
         f"backend.groups={args.groups}",
-        "runtime.beta_seconds=0.05")
+        "runtime.beta_seconds=0.05",
+        *async_overrides)
 
 
 def resolve_spec(args) -> ExperimentSpec:
@@ -178,15 +205,22 @@ def main(argv=None):
     print(f"[train] {exp.label}: K-schedule={spec.fed.k_schedule}, "
           f"eta-schedule={spec.fed.eta_schedule}, "
           f"sampler={spec.sampler.name}, backend={spec.backend.name}")
-    if trainer.engine.transport is not None:
+    if spec.fed.aggregation == "async":
+        print(f"[train] aggregation=async: buffer_size="
+              f"{trainer.buffer_size}, "
+              f"staleness_weight={spec.fed.staleness_weight}, "
+              f"max_staleness={spec.fed.max_staleness}")
+    engine = getattr(trainer, "engine", None)   # sync-only wire summaries
+    transport = engine.transport if engine is not None else trainer.transport
+    if transport is not None:
         rt = trainer.runtime
-        ef = trainer.engine.transport.ef_slots
+        ef = transport.ef_slots
         print(f"[train] transport={spec.transport.name}: uplink "
               f"{rt.uplink_compression:.2f}x compressed "
               f"({rt.uplink_mbit_per_client:.2f} of {rt.size:.2f} mbit "
               f"per client-round)"
               + (f", per-client EF x{ef}" if ef else ""))
-    if trainer.engine.downlink is not None:
+    if engine is not None and engine.downlink is not None:
         rt = trainer.runtime
         print(f"[train] downlink={spec.transport.downlink}: broadcast "
               f"{rt.downlink_compression:.2f}x compressed "
@@ -195,8 +229,13 @@ def main(argv=None):
 
     h = exp.run()
     print(f"[train] engine[{spec.backend.name}]: {trainer.compile_count} "
-          f"bucket executable(s) compiled, {trainer.engine.dispatch_count} "
+          f"bucket executable(s) compiled, {trainer.dispatch_count} "
           f"dispatch(es) for {rounds} rounds")
+    if spec.fed.aggregation == "async":
+        print(f"[train] async: {trainer.applied_updates} updates applied, "
+              f"{trainer.dropped_updates} dropped, mean staleness "
+              f"{float(np.mean(h.staleness)) if h.staleness else 0.0:.2f}, "
+              f"event-clock wall {h.wall_clock_s[-1]:.0f}s")
     step = max(rounds // 10, 1)
     for i in range(0, rounds, step):
         print(f"[train] round {h.rounds[i]:4d} K={h.k[i]:3d} "

@@ -1,0 +1,291 @@
+"""Async buffered aggregation (DESIGN.md §13): sync-parity oracle, bitwise
+checkpoint resume, seeded event-clock durations, staleness semantics and the
+spec/engine refusal surface."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build
+from repro.api.experiment import FederatedExperiment
+from repro.api.registries import (AGGREGATION_REGISTRY,
+                                  STALENESS_WEIGHT_REGISTRY, UnknownNameError)
+from repro.configs import get_paper_task
+from repro.configs.base import FedConfig, RuntimeModelConfig
+from repro.core import FedAvgTrainer, RuntimeModel
+from repro.core.engine import AsyncBufferedEngine, get_staleness_weight
+from repro.core.engine.round import ExecutableRegistry
+from repro.data import make_paper_task
+from repro.models import small
+
+BASE = ("data.kind=paper", "data.task=femnist", "data.clients=16",
+        "fed.clients_per_round=8", "fed.rounds=6", "fed.k0=4",
+        "fed.batch_size=8", "fed.eval_every=0")
+
+
+def spec_with(*overrides):
+    return ExperimentSpec().with_overrides(*BASE, *overrides)
+
+
+# ---------------------------------------------------------------------------
+# RuntimeModel.draw_client_times (the event clock's duration source)
+# ---------------------------------------------------------------------------
+
+def test_draw_client_times_counter_mode_replayable():
+    rt = RuntimeModel(40.0, RuntimeModelConfig(beta_seconds=0.3),
+                      clients_per_round=8, heterogeneity=0.6, seed=7)
+    a = rt.draw_client_times(3, [4, 1, 9], k=10)
+    b = rt.draw_client_times(3, [4, 1, 9], k=10)
+    assert (a == b).all()                       # pure in (seed, round, id)
+    # order-independence: permuting ids permutes the draws
+    c = rt.draw_client_times(3, [9, 4, 1], k=10)
+    assert c[0] == a[2] and c[1] == a[0] and c[2] == a[1]
+    # counter mode consumes no stream state: the model's own rng untouched
+    s0 = rt._rng.bit_generator.state["state"]
+    rt.draw_client_times(5, [0, 1], k=10)
+    assert rt._rng.bit_generator.state["state"] == s0
+    # a different seed gives a different trace
+    rt2 = RuntimeModel(40.0, RuntimeModelConfig(beta_seconds=0.3),
+                       clients_per_round=8, heterogeneity=0.6, seed=8)
+    assert not np.allclose(a, rt2.draw_client_times(3, [4, 1, 9], k=10))
+
+
+def test_draw_client_times_het_zero_is_base_seconds():
+    rt = RuntimeModel(40.0, RuntimeModelConfig(download_mbps=20,
+                                               upload_mbps=5,
+                                               beta_seconds=0.31),
+                      clients_per_round=8, heterogeneity=0.0)
+    t = rt.draw_client_times(1, np.arange(8), k=50)
+    assert (t == pytest.approx(2 + 50 * 0.31 + 8)) if np.isscalar(t) else \
+        np.allclose(t, 2 + 50 * 0.31 + 8)
+    # het == 0 reconciliation: round_cost wall == every client's duration
+    assert rt.round_cost(50).wall_clock_s == pytest.approx(float(t[0]))
+
+
+def test_round_cost_consumes_stream_mode_draw_bitwise():
+    """round_cost's straggler wall is exactly max(draw_client_times) off the
+    same rng stream — the historical base * max(mult) draw bit-for-bit."""
+    kw = dict(model_size_mbit=40.0, cfg=RuntimeModelConfig(beta_seconds=0.5),
+              clients_per_round=12, heterogeneity=0.7, seed=11)
+    a, b = RuntimeModel(**kw), RuntimeModel(**kw)
+    for k in (8, 4, 2):
+        wall = a.round_cost(k).wall_clock_s
+        times = b.draw_client_times(None, np.arange(12), k)
+        assert wall == float(np.max(times))     # bitwise, not approx
+
+
+# ---------------------------------------------------------------------------
+# sync-parity oracle + sync program identity
+# ---------------------------------------------------------------------------
+
+def test_async_sync_parity_oracle():
+    """Zero jitter + buffer_size == cohort reproduces the synchronous
+    trainer under a decaying-K schedule: same sampler/batch rng stream, same
+    per-version K/eta, loss trajectories equal to f32 fold rounding, and
+    wall-clock / steps / wire equal exactly."""
+    hs = build(spec_with("fed.k_schedule=rounds",
+                         "fed.aggregation=sync")).run()
+    ha = build(spec_with("fed.k_schedule=rounds",
+                         "fed.aggregation=async")).run()
+    assert ha.rounds == hs.rounds and ha.k == hs.k and ha.eta == hs.eta
+    np.testing.assert_allclose(ha.train_loss, hs.train_loss,
+                               rtol=0, atol=5e-6)
+    assert ha.wall_clock_s == hs.wall_clock_s
+    assert ha.sgd_steps == hs.sgd_steps
+    assert ha.downlink_mbit == hs.downlink_mbit
+    np.testing.assert_allclose(ha.uplink_mbit, hs.uplink_mbit, rtol=1e-12)
+    assert all(s == 0.0 for s in ha.staleness)  # nobody is ever stale
+
+
+def test_sync_aggregation_keeps_executable_keys_bitwise():
+    """aggregation='sync' through the AggregationPolicy registry is the
+    FedAvgTrainer construction verbatim: same class, and the AOT registry
+    keys it compiles are bit-for-bit the directly-constructed trainer's."""
+    from repro.api.sweep import spec_program_key
+    spec = spec_with("fed.k_schedule=rounds")
+    key = spec_program_key(spec)
+
+    reg_api = ExecutableRegistry()
+    exp = build(spec, registry=reg_api)
+    assert type(exp.trainer) is FedAvgTrainer
+    exp.run(3)
+
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(spec.data.seed),
+                           num_clients=spec.data.clients,
+                           samples_per_client=spec.data.samples_per_client)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    from repro.api.experiment import _make_fed_config
+    fed = _make_fed_config(spec)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 8)
+    reg_direct = ExecutableRegistry()
+    tr = FedAvgTrainer(loss_fn, params, data, fed, rt, registry=reg_direct,
+                       program_key=key)
+    tr.run(3, eval_every=0)
+    assert set(reg_api._entries) == set(reg_direct._entries)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: mid-buffer bitwise resume (in-process + fresh-process)
+# ---------------------------------------------------------------------------
+
+ASYNC_HET = ("fed.rounds=8", "fed.aggregation=async", "fed.buffer_size=3",
+             "fed.staleness_weight=inv", "fed.k_schedule=rounds",
+             "runtime.heterogeneity=0.7")
+
+
+def _assert_trees_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+@pytest.mark.parametrize("transport", ["none", "int8"])
+def test_mid_buffer_checkpoint_bitwise_resume(tmp_path, transport):
+    """Save with a part-filled buffer, in-flight deltas and a non-empty
+    event heap; a fresh-process restore (spec rebuilt from the checkpoint)
+    continues bitwise: history, params, staleness histogram, byte and
+    drop counters."""
+    spec = spec_with(*ASYNC_HET, f"transport.name={transport}",
+                     "fed.max_staleness=4")
+    ref = build(spec)
+    href = ref.run()
+
+    a = build(spec)
+    a.trainer.run(4)
+    assert a.trainer._buf_count != 0 or a.trainer._heap  # mid-simulation
+    ck = os.path.join(tmp_path, "ck")
+    a.save(ck)
+
+    b = FederatedExperiment.restore(ck)          # fresh build from the spec
+    assert type(b.trainer) is AsyncBufferedEngine
+    hb = b.trainer.run(8, resume=True)
+
+    assert hb.train_loss == href.train_loss      # bitwise, not approx
+    assert hb.wall_clock_s == href.wall_clock_s
+    assert hb.staleness == href.staleness
+    assert hb.uplink_mbit == href.uplink_mbit
+    assert hb.applied_updates == href.applied_updates
+    assert hb.dropped_updates == href.dropped_updates
+    assert b.trainer.staleness_hist == ref.trainer.staleness_hist
+    _assert_trees_bitwise(b.trainer.params, ref.trainer.params)
+    _assert_trees_bitwise(b.trainer.transport_state,
+                          ref.trainer.transport_state)
+
+
+def test_checkpoint_restores_event_heap_and_version_vector(tmp_path):
+    spec = spec_with(*ASYNC_HET)
+    a = build(spec)
+    a.trainer.run(3)
+    ck = os.path.join(tmp_path, "ck")
+    a.save(ck)
+    b = FederatedExperiment.restore(ck)
+    assert b.trainer._heap == a.trainer._heap
+    assert (b.trainer._slot_version == a.trainer._slot_version).all()
+    assert (b.trainer._slot_client == a.trainer._slot_client).all()
+    assert b.trainer._buf_weight == a.trainer._buf_weight
+    assert b.trainer._sim_time == a.trainer._sim_time
+    assert b.trainer._np_rng.bit_generator.state == \
+        a.trainer._np_rng.bit_generator.state
+    _assert_trees_bitwise(b.trainer._inflight, a.trainer._inflight)
+    _assert_trees_bitwise(b.trainer._buffer, a.trainer._buffer)
+
+
+# ---------------------------------------------------------------------------
+# staleness semantics
+# ---------------------------------------------------------------------------
+
+def test_staleness_weight_builtins():
+    assert get_staleness_weight("constant")(3) == 1.0
+    assert get_staleness_weight("inv")(3) == pytest.approx(0.25)
+    assert get_staleness_weight("poly")(3) == pytest.approx(0.5)
+    with pytest.raises(UnknownNameError, match="Did you mean 'inv'"):
+        STALENESS_WEIGHT_REGISTRY.get("inf")
+
+
+def test_max_staleness_drops_are_counted_and_charged():
+    spec = spec_with("fed.aggregation=async", "fed.buffer_size=2",
+                     "fed.max_staleness=0", "runtime.heterogeneity=1.0",
+                     "fed.rounds=4")
+    exp = build(spec)
+    h = exp.run()
+    tr = exp.trainer
+    assert tr.dropped_updates > 0                # het 1.0: staleness happens
+    assert h.dropped_updates[-1] == tr.dropped_updates
+    assert sum(tr.staleness_hist.values()) == \
+        tr.applied_updates + tr.dropped_updates
+    # dropped arrivals still shipped their bytes
+    arrivals = tr.applied_updates + tr.dropped_updates + tr._buf_count
+    assert h.uplink_mbit[-1] == pytest.approx(
+        arrivals * tr.runtime.uplink_mbit_per_client)
+
+
+def test_async_history_gains_staleness_columns():
+    h = build(spec_with("fed.aggregation=async",
+                        "runtime.heterogeneity=0.5")).run()
+    assert len(h.staleness) == len(h.rounds)
+    assert len(h.applied_updates) == len(h.rounds)
+    assert h.applied_updates == sorted(h.applied_updates)  # cumulative
+    assert np.isfinite(h.train_loss).all()
+
+
+# ---------------------------------------------------------------------------
+# refusals — spec-time and engine-time
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overrides, msg", [
+    (("fed.aggregation=async", "fed.aggregator=median"), "robust"),
+    (("fed.aggregation=async", "fed.cohort_chunk=4"), "cohort_chunk"),
+    (("fed.aggregation=async", "fed.buffer_size=9"), "buffer_size"),
+    (("fed.aggregation=async", "fed.buffer_size=0"), "buffer_size"),
+    (("fed.aggregation=async", "transport.downlink=int8"), "downlink"),
+    (("fed.aggregation=async", "sampler.name=fixed_cohort"), "sampler"),
+    (("fed.aggregation=async", "backend.name=mesh",
+      "backend.strategy=sequential"), "sequential"),
+    (("fed.aggregation=async", "fed.max_staleness=-1"), "max_staleness"),
+    (("fed.buffer_size=4",), "async"),           # sync refuses async knobs
+    (("fed.max_staleness=2",), "async"),
+    (("fed.staleness_weight=inv",), "async"),
+])
+def test_spec_refusals(overrides, msg):
+    with pytest.raises(ValueError, match=msg):
+        spec_with(*overrides).validate()
+
+
+def test_spec_unknown_aggregation_suggests():
+    with pytest.raises(ValueError, match="sync"):
+        spec_with("fed.aggregation=asink").validate()
+
+
+def test_engine_refusals_mirror_spec():
+    """A hand-built FedConfig that skips spec validation still gets loud
+    engine-time refusals."""
+    task = get_paper_task("femnist")
+    data = make_paper_task("femnist", np.random.default_rng(0),
+                           num_clients=8, samples_per_client=20)
+    loss_fn = lambda p, b: small.task_loss(p, task, b)
+    params = small.init_task_model(jax.random.PRNGKey(0), task)
+    rt = RuntimeModel(task.model_size_mb, task.runtime, 4)
+
+    def engine(**kw):
+        fed = FedConfig(total_clients=8, clients_per_round=4, rounds=2,
+                        k0=2, batch_size=4, aggregation="async", **kw)
+        return AsyncBufferedEngine(loss_fn, params, data, fed, rt)
+
+    with pytest.raises(ValueError, match="linear"):
+        engine(aggregator="median")
+    with pytest.raises(ValueError, match="cohort_chunk"):
+        engine(cohort_chunk=2)
+    with pytest.raises(ValueError, match="downlink"):
+        engine(downlink="int8")
+    with pytest.raises(ValueError, match="buffer_size"):
+        engine(buffer_size=64)
+    with pytest.raises(ValueError, match="ragged"):
+        engine(sampler="fixed_cohort")
+
+
+def test_aggregation_registry_lists_builtins():
+    assert set(AGGREGATION_REGISTRY.available()) >= {"sync", "async"}
+    assert set(STALENESS_WEIGHT_REGISTRY.available()) >= \
+        {"constant", "inv", "poly"}
