@@ -47,9 +47,16 @@ from typing import List
 #: loss, "oracle" the sync wall, and the delta the relative loss gap — so
 #: an async engine that stops out-pacing the straggler-bound sync round
 #: (or stops converging to the same loss) trips the same checks.
+#: serve_* rows reuse it for the serving contract (DESIGN.md §14):
+#: "kernel" is the live ServingLoop (µs/token served / hot-swap latency),
+#: "oracle" the same decode / reconstruction driven directly with the
+#: client-view tree, and the delta the served-vs-client divergence
+#: (generated-id gap / leafwise snapshot gap, 0 by the snapshot contract)
+#: — so a snapshot that drifts from what clients hold, or a swap path that
+#: starts copying extra state, trips the same checks.
 GATED_PREFIXES = ("kern_fedavg_reduce", "kern_int8_delta_reduce",
                   "kern_topk_scatter", "cohort_scaling", "fleet_speedup",
-                  "async_speedup")
+                  "async_speedup", "serve_tokens_per_sec", "serve_swap_us")
 
 #: timing: current kernel/oracle ratio may be at most this factor above the
 #: baseline ratio (floored — tiny baseline ratios would gate on noise)

@@ -14,9 +14,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
 the kernel suite's (kernel/oracle µs + max-abs-delta vs the jnp oracle)
 plus the cohort_scaling suite's (chunked vs dense round time, params delta
 and executable peak MB, DESIGN.md §11), the fleet_speedup records
-(DESIGN.md §12) and the async_speedup record (async-vs-sync event-clock
-wall at matched loss, DESIGN.md §13) — the file the CI perf gate
-(``benchmarks.perf_gate``) diffs against the committed baseline
+(DESIGN.md §12), the async_speedup record (async-vs-sync event-clock
+wall at matched loss, DESIGN.md §13) and the serve_* records (hot-swapped
+snapshot decode vs the client-view tree, DESIGN.md §14) — the file the CI
+perf gate (``benchmarks.perf_gate``) diffs against the committed baseline
 ``benchmarks/baselines/BENCH_kernels.json``.
 
 An explicitly requested roofline suite (``--only roofline``) with no
@@ -39,7 +40,7 @@ def main() -> None:
                     help="all 4 paper tasks, more rounds")
     ap.add_argument("--only", default=None,
                     help="substring filter: fig12|table4|roofline|kern|"
-                         "cohort|fleet|async")
+                         "cohort|fleet|async|serve")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the kern suite's machine-readable records "
                          "(perf-gate input) to this file")
@@ -49,7 +50,7 @@ def main() -> None:
 
     from benchmarks import (async_bench, cohort_bench, fleet_bench,
                             kernels_bench, roofline_bench, schedules_bench,
-                            table4_bench)
+                            serve_bench, table4_bench)
 
     # --only roofline is an explicit ask: an empty table must fail loudly,
     # not pass silently (the CI-green-on-no-data failure mode)
@@ -59,6 +60,7 @@ def main() -> None:
     cohort_records = []
     fleet_records = []
     async_records = []
+    serve_records = []
 
     def run_kern():
         kern_records.extend(kernels_bench.run_records())
@@ -75,6 +77,10 @@ def main() -> None:
     def run_async_suite():
         async_records.extend(async_bench.run_records())
         return async_bench.run(verbose=verbose, records=async_records)
+
+    def run_serve_suite():
+        serve_records.extend(serve_bench.run_records())
+        return serve_bench.run(verbose=verbose, records=serve_records)
 
     suites = []
     if not args.only or "table4" in args.only:
@@ -96,6 +102,8 @@ def main() -> None:
         suites.append(("fleet", run_fleet_suite))
     if not args.only or "async" in args.only:
         suites.append(("async", run_async_suite))
+    if not args.only or "serve" in args.only:
+        suites.append(("serve", run_serve_suite))
 
     rows = []
     for name, fn in suites:
@@ -109,11 +117,11 @@ def main() -> None:
 
     if args.json:
         gate_records = (kern_records + cohort_records + fleet_records
-                        + async_records)
+                        + async_records + serve_records)
         if not gate_records:
             print(f"--json {args.json}: no gate suite "
-                  f"(kern/cohort/fleet/async) ran (check --only filter)",
-                  file=sys.stderr)
+                  f"(kern/cohort/fleet/async/serve) ran (check --only "
+                  f"filter)", file=sys.stderr)
             sys.exit(1)
         import jax
         payload = {"jax": jax.__version__,

@@ -1,0 +1,130 @@
+"""Serve-while-training records for the CI perf gate (DESIGN.md §14).
+
+A short federated LM run with the ServingLoop attached (``serve.every=1``)
+over the full store bracket — int8 downlink deltas against a q8 ref store —
+so the gated records exercise exactly the snapshot path production serving
+uses. Two records in the kernel-record schema
+(``kernel_us``/``oracle_us``/``max_abs_delta``):
+
+  * ``serve_tokens_per_sec`` — ``kernel_us`` is the mean µs/token the live
+    loop served across its in-run ticks; ``oracle_us`` is µs/token of the
+    same jitted decode step driven directly with the client-view tree
+    (``downlink.load_tree(ref)``) outside the loop. The ratio is ~1 and
+    machine-robust (same executable, same shapes); ``max_abs_delta`` is the
+    max |id difference| between the tokens the served snapshot generates
+    and the tokens the client-view tree generates — 0 by the snapshot
+    contract (``store.snapshot()`` returns the exact tree clients hold).
+  * ``serve_swap_us`` — ``kernel_us`` is the mean hot-swap latency
+    (snapshot + q8 dequantise, materialised) across ticks; ``oracle_us``
+    re-times the bare ``load_tree`` reconstruction eagerly. Same work on
+    both sides, so the ratio gates a swap path that starts re-encoding or
+    copying extra state; ``max_abs_delta`` is the max leafwise
+    |snapshot - load_tree(ref)| — bitwise 0.
+
+Extra keys (``max_staleness``/``ticks``/``store_version``) ride along for
+humans; the gate ignores unknown keys.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+ROUNDS = 4
+REPS = 3              # oracle re-timing repetitions (mean)
+
+
+def _spec(*extra):
+    from repro.api import ExperimentSpec
+    return ExperimentSpec().with_overrides(
+        "model.arch=qwen1.5-0.5b", "model.reduced=true",
+        "data.kind=lm", "data.clients=8", "data.samples_per_client=8",
+        "data.seq_len=16", "data.seed=0",
+        f"fed.rounds={ROUNDS}", "fed.clients_per_round=4",
+        "fed.k0=2", "fed.eta0=0.05", "fed.batch_size=4",
+        "fed.k_schedule=rounds", "fed.loss_window=3",
+        "fed.bucket_rounds=2", "fed.seed=0",
+        "transport.name=int8", "transport.downlink=int8",
+        "transport.ref_store=q8",
+        "serve.every=1", "serve.qps=25.0", "serve.query_ms=2.0",
+        "runtime.beta_seconds=0.05", *extra)
+
+
+def run_records() -> List[dict]:
+    import jax
+
+    from repro.api import build
+
+    exp = build(_spec())
+    h = exp.run()
+    trainer = exp.trainer
+    loop, store = trainer.serving, trainer.store
+    dl = store.downlink
+
+    # the client-view oracle tree: what every client reconstructs from the
+    # broadcast reference — snapshot() must hand serving this exact tree
+    _, snap = store.snapshot()
+    snap = jax.block_until_ready(snap)
+    ref = jax.block_until_ready(
+        dl.load_tree(store.downlink_state["ref"], like=store.params))
+    swap_delta = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                     for a, b in zip(jax.tree.leaves(snap),
+                                     jax.tree.leaves(ref)))
+
+    swap_us = [0.0] * REPS
+    for i in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            dl.load_tree(store.downlink_state["ref"], like=store.params))
+        swap_us[i] = (time.perf_counter() - t0) * 1e6
+
+    prompts = loop._traffic(0)
+    served_ids, _ = loop.decode(prompts, params=snap)
+    oracle_ids = None
+    dts = [0.0] * REPS
+    for i in range(REPS):
+        oracle_ids, dts[i] = loop.decode(prompts, params=ref)
+    tok_delta = float(np.max(np.abs(np.asarray(served_ids, dtype=np.int64)
+                                    - np.asarray(oracle_ids,
+                                                 dtype=np.int64))))
+    per_tok = loop.batch * loop.tokens
+    return [
+        {"name": "serve_tokens_per_sec",
+         "kernel_us": float(np.mean([1e6 / t
+                                     for t in h.serve_tokens_per_sec])),
+         "oracle_us": float(np.mean(dts)) * 1e6 / per_tok,
+         "max_abs_delta": tok_delta,
+         "mean_tokens_per_sec": float(np.mean(h.serve_tokens_per_sec)),
+         "ticks": len(h.serve_rounds)},
+        {"name": "serve_swap_us",
+         "kernel_us": float(np.mean(h.serve_swap_us)),
+         "oracle_us": float(np.mean(swap_us)),
+         "max_abs_delta": swap_delta,
+         "max_staleness": int(max(h.serve_staleness)),
+         "store_version": store.version},
+    ]
+
+
+def rows_from_records(recs: List[dict]) -> List[Tuple[str, float, str]]:
+    rows = []
+    for r in recs:
+        extras = ";".join(f"{k}={v:.3g}" if isinstance(v, float)
+                          else f"{k}={v}"
+                          for k, v in r.items()
+                          if k not in ("name", "kernel_us", "oracle_us",
+                                       "max_abs_delta"))
+        rows.append((r["name"], r["kernel_us"],
+                     f"oracle_us={r['oracle_us']:.1f};"
+                     f"max_abs_delta={r['max_abs_delta']:.3g};" + extras))
+    return rows
+
+
+def run(verbose=True, records: List[dict] = None
+        ) -> List[Tuple[str, float, str]]:
+    rows = rows_from_records(records if records is not None
+                             else run_records())
+    if verbose:
+        for n, us, d in rows:
+            print(f"  {n:32s} {us:12.1f}us  {d}")
+    return rows

@@ -199,7 +199,8 @@ def build(spec: ExperimentSpec, *, backend=None, registry=None,
                            upload_mbps=r.upload_mbps,
                            beta_seconds=r.beta_seconds,
                            bytes_per_param=r.bytes_per_param),
-        fed.clients_per_round, heterogeneity=r.heterogeneity)
+        fed.clients_per_round, heterogeneity=r.heterogeneity,
+        serve_qps=spec.serve.qps, serve_query_s=spec.serve.query_ms / 1e3)
     if backend is None:
         backend = _make_backend(spec)
     eval_fn = (make_eval_fn(loss_fn, data)
@@ -212,4 +213,18 @@ def build(spec: ExperimentSpec, *, backend=None, registry=None,
     trainer = policy(loss_fn, params, data, fed, runtime,
                      eval_fn=eval_fn, backend=backend,
                      registry=registry, program_key=program_key)
+    if spec.serve.every > 0:
+        # serve-while-training (DESIGN.md §14): the loop reads the trainer's
+        # GlobalModelStore — a host-side attach, no traced program changes
+        from repro.configs import get_arch
+        from repro.core.serve import ServingLoop
+        cfg = get_arch(spec.model.arch)
+        if spec.model.reduced:
+            cfg = cfg.reduced()
+        trainer.serving = ServingLoop(
+            trainer.store, cfg, batch=spec.serve.batch,
+            prompt_len=spec.serve.prompt_len, tokens=spec.serve.tokens,
+            moe_path=spec.model.moe_path, traffic=spec.serve.traffic,
+            seed=spec.serve.seed)
+        trainer.serve_every = spec.serve.every
     return FederatedExperiment(spec, trainer, label)

@@ -145,6 +145,11 @@ AGGREGATION_REGISTRY = Registry("aggregation",
 STALENESS_WEIGHT_REGISTRY = Registry("staleness_weight",
                                      "repro.core.engine.async_buffer")
 
+#: factory(*, cfg, batch, prompt_len, seed, **kw) -> Callable[[tick int],
+#: np.ndarray (batch, prompt_len) int prompt ids] — the ServingLoop's
+#: deterministic query stream (DESIGN.md §14)
+TRAFFIC_REGISTRY = Registry("traffic", "repro.core.serve.loop")
+
 register_aggregator = AGGREGATOR_REGISTRY.register
 register_server_optimizer = SERVER_OPTIMIZER_REGISTRY.register
 register_transport = TRANSPORT_REGISTRY.register
@@ -152,9 +157,11 @@ register_sampler = SAMPLER_REGISTRY.register
 register_backend = BACKEND_REGISTRY.register
 register_aggregation = AGGREGATION_REGISTRY.register
 register_staleness_weight = STALENESS_WEIGHT_REGISTRY.register
+register_traffic = TRAFFIC_REGISTRY.register
 
 REGISTRIES = {r.kind: r for r in (AGGREGATOR_REGISTRY,
                                   SERVER_OPTIMIZER_REGISTRY,
                                   TRANSPORT_REGISTRY, SAMPLER_REGISTRY,
                                   BACKEND_REGISTRY, AGGREGATION_REGISTRY,
-                                  STALENESS_WEIGHT_REGISTRY)}
+                                  STALENESS_WEIGHT_REGISTRY,
+                                  TRAFFIC_REGISTRY)}

@@ -132,6 +132,25 @@ class BackendSpec:
 
 
 @dataclass(frozen=True)
+class ServeSpec:
+    """Serve-while-training (DESIGN.md §14): hot-swap the global model
+    into a live decode service between rounds / buffer applies."""
+    every: int = 0                 # tick the serving loop every N rounds
+                                   # (sync) / buffer applies (async);
+                                   # 0 = no serving
+    qps: float = 0.0               # sustained decode queries/sec the server
+                                   # answers alongside training (runtime
+                                   # cost model only; 0 = free serving)
+    query_ms: float = 1.0          # modelled per-query decode seconds*1e3;
+                                   # rho = qps * query_ms/1e3 must be < 1
+    batch: int = 2                 # traffic replay batch per tick
+    prompt_len: int = 4
+    tokens: int = 8                # greedy-decoded tokens per query
+    traffic: str = "synthetic"     # TRAFFIC_REGISTRY stream name
+    seed: int = 0                  # traffic stream seed
+
+
+@dataclass(frozen=True)
 class RuntimeSpec:
     """Eq. 3-5 constants (mirrors ``configs.base.RuntimeModelConfig``)."""
     download_mbps: float = 20.0
@@ -154,6 +173,7 @@ class ExperimentSpec:
     transport: TransportSpec = field(default_factory=TransportSpec)
     backend: BackendSpec = field(default_factory=BackendSpec)
     runtime: RuntimeSpec = field(default_factory=RuntimeSpec)
+    serve: ServeSpec = field(default_factory=ServeSpec)
 
     # ------------------------------------------------------------------
     # serialization
@@ -275,6 +295,7 @@ class ExperimentSpec:
         errors: List[str] = []
         m, d, f = self.model, self.data, self.fed
         s, t, b, r = self.sampler, self.transport, self.backend, self.runtime
+        sv = self.serve
 
         if d.kind not in ("lm", "paper"):
             errors.append(f"data.kind: {d.kind!r} not in ('lm', 'paper')")
@@ -492,6 +513,35 @@ class ExperimentSpec:
                         ("runtime.beta_seconds", r.beta_seconds)):
             if v <= 0:
                 errors.append(f"{name}: must be > 0, got {v}")
+        if sv.every < 0:
+            errors.append(f"serve.every: must be >= 0, got {sv.every}")
+        if sv.qps < 0:
+            errors.append(f"serve.qps: must be >= 0, got {sv.qps}")
+        if sv.query_ms <= 0:
+            errors.append(f"serve.query_ms: must be > 0, got {sv.query_ms}")
+        for name, v in (("serve.batch", sv.batch),
+                        ("serve.prompt_len", sv.prompt_len),
+                        ("serve.tokens", sv.tokens)):
+            if v < 1:
+                errors.append(f"{name}: must be >= 1, got {v}")
+        if sv.every > 0 and d.kind != "lm":
+            errors.append("serve.every: the serving loop decodes through "
+                          "the LM cache path — only data.kind='lm' runs "
+                          f"can serve, got {d.kind!r}")
+        if sv.qps > 0 and sv.every == 0:
+            errors.append("serve.qps: a serve load on the runtime model "
+                          "without a serving loop (serve.every=0) models a "
+                          "service that never answers — set serve.every >= 1")
+        rho = sv.qps * sv.query_ms / 1e3
+        if rho >= 1.0:
+            errors.append(f"serve.qps: utilisation rho = qps * query_ms/1e3 "
+                          f"= {rho:.3f} >= 1 — the server spends every "
+                          f"second decoding and training never progresses; "
+                          f"lower serve.qps or serve.query_ms")
+        from repro.api.registries import TRAFFIC_REGISTRY
+        if sv.traffic not in TRAFFIC_REGISTRY:
+            errors.append(f"serve.traffic: "
+                          f"{TRAFFIC_REGISTRY._unknown_message(sv.traffic)}")
         if errors:
             raise SpecValidationError(errors)
         return self

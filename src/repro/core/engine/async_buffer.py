@@ -64,6 +64,7 @@ from repro.api.registries import (register_aggregation,
 from repro.configs.base import FedConfig
 from repro.core.engine.backends.base import LINEAR_AGGREGATORS
 from repro.core.engine.client import make_client_update
+from repro.core.engine.model_store import GlobalModelStore
 from repro.core.engine.round import ExecutableRegistry, LossFn, _signature
 from repro.core.engine.sampling import make_sampler
 from repro.core.engine.server import get_server_optimizer
@@ -168,6 +169,11 @@ class AsyncBufferedEngine:
         self.transport = transport
         self._codec_sig = (() if transport is None else transport.signature())
 
+        # the GlobalModelStore owns params / server state / transport EF /
+        # the version counter / cost counters; the attribute names below
+        # are store-backed properties (DESIGN.md §14). No downlink codec in
+        # async, so snapshot() serves params itself.
+        self.store = GlobalModelStore()
         self.params = self.backend.place_params(init_params)
         self.server_state = self.server.init(init_params)
         self.transport_state = (() if transport is None
@@ -231,12 +237,36 @@ class AsyncBufferedEngine:
         self.applied_updates = 0
         self.dropped_updates = 0
         self.staleness_hist: Dict[int, int] = {}
-        self._steps = 0
-        self._up_mbit = 0.0
-        self._down_mbit = 0.0
-        self._min_loss = float("inf")
-        self._max_acc = 0.0
         self._completed_rounds = 0
+        # serve-while-training: api.build attaches a ServingLoop + cadence;
+        # ticks ride buffer applications (DESIGN.md §14)
+        self.serving = None
+        self.serve_every = 0
+
+    # ------------------------------------------------------------------
+    # state delegation: the GlobalModelStore owns it, the historical
+    # attribute names keep reading/writing it
+    # ------------------------------------------------------------------
+    params = property(lambda self: self.store.params,
+                      lambda self, v: setattr(self.store, "params", v))
+    server_state = property(
+        lambda self: self.store.server_state,
+        lambda self, v: setattr(self.store, "server_state", v))
+    transport_state = property(
+        lambda self: self.store.transport_state,
+        lambda self, v: setattr(self.store, "transport_state", v))
+    _version = property(lambda self: self.store.version,
+                        lambda self, v: setattr(self.store, "version", v))
+    _steps = property(lambda self: self.store.steps,
+                      lambda self, v: setattr(self.store, "steps", v))
+    _up_mbit = property(lambda self: self.store.up_mbit,
+                        lambda self, v: setattr(self.store, "up_mbit", v))
+    _down_mbit = property(lambda self: self.store.down_mbit,
+                          lambda self, v: setattr(self.store, "down_mbit", v))
+    _min_loss = property(lambda self: self.store.min_loss,
+                         lambda self, v: setattr(self.store, "min_loss", v))
+    _max_acc = property(lambda self: self.store.max_acc,
+                        lambda self, v: setattr(self.store, "max_acc", v))
 
     # ------------------------------------------------------------------
     # jitted cores (AOT-cached per input signature, like RoundEngine)
@@ -406,6 +436,10 @@ class AsyncBufferedEngine:
         self._buf_count = 0
         self._buf_first_losses = []
         self._buf_staleness = []
+        if (self.serving is not None and self.serve_every
+                and r % self.serve_every == 0):
+            # hot-swap the freshly applied version into the decode service
+            self.serving.tick(r, h)
         if eval_every and self.eval_fn is not None and r % eval_every == 0:
             metrics = self.eval_fn(self.params)
             err = metrics.get("error", 1.0 - metrics.get("acc", 0.0))
@@ -427,6 +461,11 @@ class AsyncBufferedEngine:
         second ``run()`` call keeps advancing the same simulation — the
         async engine has no schedule replay)."""
         rounds = rounds if rounds is not None else self.fed.rounds
+        if (self.serving is not None
+                and self.serving.served_version != self.store.version):
+            # restored (or warm-rerun) store is ahead of the loop's
+            # construction-time snapshot — re-swap before the clock advances
+            self.serving.swap()
         if not self._started:
             self._dispatch_group(list(range(self.n)))
             self._started = True
@@ -458,10 +497,11 @@ class AsyncBufferedEngine:
     def save_state(self, path: str,
                    extra_meta: Optional[Dict[str, Any]] = None) -> None:
         from repro.checkpoint import save_checkpoint
-        tree = {"params": self.params, "server": self.server_state,
-                "transport": self.transport_state,
+        sd = self.store.state_dict()
+        # the store's empty downlink entry contributes no leaves, so the
+        # array payload is identical to the pre-store layout
+        tree = {**sd["tree"],
                 "buffer": self._buffer, "inflight": self._inflight}
-        ctrl = self.ctrl
         meta = {
             **(extra_meta or {}),
             "completed_rounds": self._completed_rounds,
@@ -490,34 +530,21 @@ class AsyncBufferedEngine:
                 "staleness_hist": {str(k): v for k, v
                                    in self.staleness_hist.items()},
             },
-            "steps": self._steps,
-            "up_mbit": self._up_mbit, "down_mbit": self._down_mbit,
-            "min_loss": self._min_loss, "max_acc": self._max_acc,
-            "ctrl": {"f0": ctrl._f0, "window": list(ctrl.tracker._buf),
-                     "plateau": [ctrl.plateau.best, ctrl.plateau.stale,
-                                 ctrl.plateau.plateaued]},
+            **sd["meta"],
+            "ctrl": self.ctrl.state_dict(),
         }
         save_checkpoint(path, tree, meta=meta)
 
     def restore_state(self, path: str) -> None:
-        from repro.checkpoint import load_checkpoint
-
-        def spec(tree):
-            return jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(np.shape(x),
-                                               np.asarray(x).dtype), tree)
-
-        like = spec({"params": self.params, "server": self.server_state,
-                     "transport": self.transport_state,
-                     "buffer": self._buffer, "inflight": self._inflight})
-        tree, meta = load_checkpoint(path, like)
+        tree, meta = self.store.load_checkpoint_tree(
+            path, extra_like={"buffer": self._buffer,
+                              "inflight": self._inflight})
         # checkpoint leaves come back as host numpy; the engine needs device
         # arrays (the in-flight scatter uses .at[], and the AOT executables
         # expect placed inputs)
         place = lambda t: jax.tree.map(jnp.asarray, t)
-        self.params = self.backend.place_params(tree["params"])
-        self.server_state = place(tree["server"])
-        self.transport_state = place(tree["transport"])
+        self.store.restore_tree(tree, place_params=self.backend.place_params,
+                                place=place)
         self._buffer = place(tree["buffer"])
         self._inflight = place(tree["inflight"])
         a = meta["async"]
@@ -546,20 +573,12 @@ class AsyncBufferedEngine:
         self.history = History.from_dict(meta["history"])
         self._np_rng.bit_generator.state = meta["rng"]
         self.runtime._rng.bit_generator.state = meta["runtime_rng"]
-        self._steps = int(meta["steps"])
-        self._up_mbit = float(meta["up_mbit"])
-        self._down_mbit = float(meta["down_mbit"])
-        self._min_loss = float(meta["min_loss"])
-        self._max_acc = float(meta["max_acc"])
-        c = meta["ctrl"]
-        self.ctrl.tracker._buf.clear()
-        for v in c["window"]:
-            self.ctrl.tracker.push(v)
-        self.ctrl._f0 = c["f0"]
-        best, stale, plateaued = c["plateau"]
-        self.ctrl.plateau.best = best
-        self.ctrl.plateau.stale = int(stale)
-        self.ctrl.plateau.plateaued = bool(plateaued)
+        # pre-PR-10 meta has no store_version: the applied-buffer count in
+        # the async sub-dict IS the version (restore above already set it,
+        # but the counters load keeps both paths symmetric)
+        self.store.load_counters_meta(meta,
+                                      default_version=int(a["version"]))
+        self.ctrl.load_state_dict(meta["ctrl"])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,173 @@
+"""GlobalModelStore — the one owner of server-side model state.
+
+FedAvg's server is, structurally, a model-state owner that alternates
+broadcast and aggregate.  Before this module that state — ``params``, the
+broadcast-side ``params_ref`` + downlink EF residual (the ``downlink_state``
+dict maintained by the PR-5/6 state machine), the server-optimizer state and
+the cumulative cost counters — was threaded ad-hoc and *duplicated* between
+``FedAvgTrainer`` and ``AsyncBufferedEngine`` (two parallel
+``save_state``/``restore_state`` bodies).  Both engines now delegate to a
+single :class:`GlobalModelStore`:
+
+* every broadcast-side access is bracketed through the downlink codec's
+  ``store_tree``/``load_tree`` pair, so the q8 ref-store path (``
+  transport.ref_store="q8"``) keeps exactly one quantised copy server-side;
+* a monotone ``version`` counter advances once per committed round (sync)
+  or buffer application (async);
+* :meth:`snapshot` returns ``(version, params_ref)`` — the exact tree
+  clients hold, dequantised on demand — without locking: it reads two
+  attributes and runs at most one ``tree_map`` of elementwise dequantise
+  ops, so a serving loop can call it mid-round (DESIGN.md §14);
+* checkpoint payloads are thin wrappers over :meth:`state_dict`, with the
+  legacy key layout (``params``/``server``/``transport``/``downlink`` +
+  flat counter meta) preserved so pre-PR-10 checkpoints restore bitwise.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint
+
+PyTree = Any
+
+
+def as_spec_tree(tree: PyTree) -> PyTree:
+    """Shape/dtype template of ``tree`` (the ``like`` argument of
+    ``load_checkpoint``) without copying any data."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
+        tree)
+
+
+class GlobalModelStore:
+    """Versioned owner of the server-side model state shared by both
+    engines.  Host-side only: holding state here (vs on the engine) never
+    changes a traced program, so AOT executable keys are untouched by the
+    extraction (asserted in tests, as in PRs 5/8/9)."""
+
+    def __init__(self, params: PyTree = None, downlink=None):
+        self.params: PyTree = params
+        self.server_state: Any = None
+        self.transport_state: Any = None
+        self.downlink_state: Any = None
+        self.downlink = downlink          # DownlinkCodec | None
+        self.version: int = 0
+        # cumulative simulated-cost counters (legacy flat meta keys)
+        self.wall: float = 0.0
+        self.steps: int = 0
+        self.up_mbit: float = 0.0
+        self.down_mbit: float = 0.0
+        self.min_loss: float = float("inf")
+        self.max_acc: float = 0.0
+        self.serve_queries: float = 0.0
+
+    # -- version ----------------------------------------------------------
+    def advance(self, n: int = 1) -> int:
+        """Bump the monotone version counter by ``n`` committed rounds /
+        buffer applications and return the new version."""
+        self.version += int(n)
+        return self.version
+
+    # -- lock-free serving snapshot ---------------------------------------
+    def snapshot(self) -> Tuple[int, PyTree]:
+        """``(version, params_ref)`` — the exact tree clients hold.
+
+        With a downlink codec the broadcast reference (``state["ref"]``,
+        maintained bitwise by the downlink state machine: after round t it
+        stores exactly the tree clients reconstructed during t) is loaded
+        back through the codec's own ``load_tree`` bracket — under
+        ``ref_store="q8"`` that is the coherent dequantised view both the
+        server and every client use as the next reconstruction base.
+        Without one, clients hold ``params`` itself."""
+        version = self.version
+        dl, state = self.downlink, self.downlink_state
+        if dl is not None and state is not None:
+            return version, dl.load_tree(state["ref"], like=self.params)
+        return version, self.params
+
+    # -- checkpoint payloads (legacy key layout) --------------------------
+    def checkpoint_tree(self) -> Dict[str, PyTree]:
+        """The store-owned array tree, under the pre-PR-10 key names.  A
+        ``None``/``()`` entry contributes no leaves, so the async engine
+        (which never has downlink state) emits byte-identical ``arrays.npz``
+        payloads with or without the ``downlink`` key."""
+        return {"params": self.params, "server": self.server_state,
+                "transport": self.transport_state,
+                "downlink": self.downlink_state}
+
+    def counters_meta(self) -> Dict[str, Any]:
+        """Flat counter meta, legacy keys + the new ``store_version``."""
+        return {"steps": self.steps, "up_mbit": self.up_mbit,
+                "down_mbit": self.down_mbit, "min_loss": self.min_loss,
+                "max_acc": self.max_acc, "serve_queries": self.serve_queries,
+                "store_version": self.version}
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"tree": self.checkpoint_tree(), "meta": self.counters_meta()}
+
+    def load_counters_meta(self, meta: Dict[str, Any],
+                           default_version: int) -> None:
+        """Restore the counters from checkpoint meta.  Pre-PR-10 meta has
+        no ``store_version`` — fall back to the engine's round/application
+        count (``default_version``), which is what the counter would have
+        read had the store existed when the checkpoint was written."""
+        self.steps = int(meta["steps"])
+        self.up_mbit = float(meta["up_mbit"])
+        # pre-PR-5 checkpoints have no downlink accounting
+        self.down_mbit = float(meta.get("down_mbit", 0.0))
+        self.min_loss = float(meta["min_loss"])
+        self.max_acc = float(meta["max_acc"])
+        self.serve_queries = float(meta.get("serve_queries", 0.0))
+        self.version = int(meta.get("store_version", default_version))
+
+    # -- checkpoint IO ----------------------------------------------------
+    def load_checkpoint_tree(self, path,
+                             extra_like: Optional[Dict[str, PyTree]] = None,
+                             ) -> Tuple[Dict[str, PyTree], Dict[str, Any]]:
+        """Load the store-owned tree (plus engine extras such as the async
+        buffer/inflight slabs) from ``path``, templated on the *current*
+        store layout.
+
+        Legacy-key fallback: checkpoints written before ``ref_store="q8"``
+        (or by an f32-ref run) store the downlink ref/residual as f32
+        trees under the same keys.  When the current run wants q8, the
+        load raises ``KeyError`` on the missing q8 sub-keys — reload
+        against f32 templates and re-bracket through ``store_tree`` so the
+        resumed run still holds exactly one quantised copy."""
+        like = as_spec_tree({**self.checkpoint_tree(), **(extra_like or {})})
+        try:
+            return load_checkpoint(path, like)
+        except KeyError:
+            dl = self.downlink
+            if dl is None or dl.ref_store == "f32":
+                raise
+            f32 = jax.tree.map(
+                lambda p: jnp.zeros(np.shape(p), jnp.float32), self.params)
+            like["downlink"] = as_spec_tree(
+                {"ref": self.params,
+                 "res": f32 if dl.error_feedback else ()})
+            tree, meta = load_checkpoint(path, like)
+            d = tree["downlink"]
+            tree["downlink"] = {
+                "ref": dl.store_tree(d["ref"]),
+                "res": (dl.store_tree(d["res"]) if dl.error_feedback
+                        else ())}
+            return tree, meta
+
+    def restore_tree(self, tree: Dict[str, PyTree], *,
+                     place_params: Optional[Callable[[PyTree], PyTree]] = None,
+                     place: Optional[Callable[[PyTree], PyTree]] = None,
+                     ) -> None:
+        """Adopt a loaded checkpoint tree.  ``place_params``/``place`` let
+        an engine re-place arrays on its backend (the async engine shards
+        params via ``backend.place_params`` and devices the rest)."""
+        pp = place_params if place_params is not None else (lambda t: t)
+        pl = place if place is not None else (lambda t: t)
+        self.params = pp(tree["params"])
+        self.server_state = pl(tree["server"])
+        self.transport_state = pl(tree["transport"])
+        self.downlink_state = pl(tree["downlink"])

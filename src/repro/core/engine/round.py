@@ -35,6 +35,7 @@ from repro.core.engine.backends.base import (ExecutionBackend,
                                              LINEAR_AGGREGATORS)
 from repro.core.engine.backends.local import (LocalBackend,
                                               make_parallel_round_core)
+from repro.core.engine.model_store import GlobalModelStore
 from repro.core.engine.server import ServerOptimizer, get_server_optimizer
 from repro.core.engine.transport import get_downlink, get_transport
 
@@ -396,13 +397,43 @@ class RoundEngine:
         self._own_keys: set = set()     # compiled by THIS engine
         self._shared_keys: set = set()  # adopted from the shared registry
         self.dispatch_count = 0
-        self.transport_state: Any = None
-        self.downlink_state: Any = None
+        # wire-state ownership lives in a GlobalModelStore (DESIGN.md §14);
+        # the engine starts with a private one and the trainer re-binds its
+        # own via bind_store(). transport_state/downlink_state stay
+        # readable/writable attributes (store-backed properties below).
+        self._store = GlobalModelStore(downlink=self.downlink)
         # (B,) int32 adaptive levels of the most recent bucket (-1 entries:
         # padding rounds / fixed-rate codecs); None until a downlink bucket
         # has run. The trainer reads this right after each dispatch to
         # charge the wire per level (DESIGN.md §10.4).
         self.last_downlink_levels = None
+
+    def bind_store(self, store: GlobalModelStore) -> GlobalModelStore:
+        """Adopt a trainer-owned GlobalModelStore as the wire-state owner.
+        Any state the private store already holds migrates over; the codec
+        binding moves with it so ``store.snapshot()`` brackets through this
+        engine's ``store_tree``/``load_tree`` path."""
+        store.downlink = self.downlink
+        store.transport_state = self._store.transport_state
+        store.downlink_state = self._store.downlink_state
+        self._store = store
+        return store
+
+    @property
+    def transport_state(self) -> Any:
+        return self._store.transport_state
+
+    @transport_state.setter
+    def transport_state(self, value: Any) -> None:
+        self._store.transport_state = value
+
+    @property
+    def downlink_state(self) -> Any:
+        return self._store.downlink_state
+
+    @downlink_state.setter
+    def downlink_state(self, value: Any) -> None:
+        self._store.downlink_state = value
 
     def _lookup(self, key: Tuple, jitted, args):
         """Fetch (or AOT-compile) the executable for ``key``.

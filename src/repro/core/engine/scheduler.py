@@ -43,6 +43,7 @@ class Bucket:
     etas: List[float]        # per-round client learning rates
     shape_rounds: int        # executable leading dim (>= len(rounds))
     eval_after: bool         # trainer should eval at this bucket's end
+    serve_after: bool = False  # serving tick at this bucket's end (§14)
 
     def __len__(self) -> int:
         return len(self.rounds)
@@ -56,8 +57,14 @@ def is_loss_free(fed: FedConfig) -> bool:
 class RoundScheduler:
     def __init__(self, ctrl: DecayController, fed: FedConfig, *,
                  total_rounds: int, eval_every: Optional[int] = None,
-                 start_round: int = 1):
+                 serve_every: Optional[int] = None, start_round: int = 1):
         """``eval_every`` of None means no eval_fn: no eval cut points.
+        ``serve_every`` of None/0 means no serving loop: no serve cut
+        points (the plan — and hence every executable shape — is untouched,
+        keeping serve-off programs bit-for-bit).  With serving on, buckets
+        additionally cut at ``serve_every`` multiples so the trainer can
+        absorb + hot-swap immediately, bounding served-version staleness
+        at one round (DESIGN.md §14).
         ``start_round`` > 1 resumes a checkpointed run mid-schedule: rounds
         [start_round, total_rounds] are planned with their *absolute*
         indices, so round-indexed K/eta schedules and eval cut points are
@@ -67,11 +74,14 @@ class RoundScheduler:
         self.total_rounds = total_rounds
         self.start_round = max(int(start_round), 1)
         self.eval_every = eval_every
+        self.serve_every = serve_every or None
         self.loss_free = is_loss_free(fed)
         cap = max(fed.bucket_rounds if self.loss_free
                   else fed.feedback_bucket_rounds, 1)
         if eval_every is not None:
             cap = min(cap, max(eval_every, 1))
+        if self.serve_every is not None:
+            cap = min(cap, max(self.serve_every, 1))
         if getattr(fed, "cohort_chunk", None):
             # streaming cohorts (DESIGN.md §11) dispatch slab-by-slab within
             # a round — the multi-round bucket scan doesn't apply, so every
@@ -85,9 +95,13 @@ class RoundScheduler:
             return False
         return r % self.eval_every == 0 or r == self.total_rounds
 
+    def _is_serve_round(self, r: int) -> bool:
+        return self.serve_every is not None and r % self.serve_every == 0
+
     def _cut_after(self, r: int) -> bool:
         """Must the bucket containing round r end at r?"""
-        return self._is_eval_round(r) or r == self.total_rounds
+        return (self._is_eval_round(r) or self._is_serve_round(r)
+                or r == self.total_rounds)
 
     # ------------------------------------------------------------------
     def _segments(self) -> List[List[int]]:
@@ -139,7 +153,8 @@ class RoundScheduler:
                 yield Bucket(rounds=rounds, k=k,
                              etas=[self.ctrl.eta_for_round(r) for r in rounds],
                              shape_rounds=shape,
-                             eval_after=self._is_eval_round(rounds[-1]))
+                             eval_after=self._is_eval_round(rounds[-1]),
+                             serve_after=self._is_serve_round(rounds[-1]))
 
     def _plan_feedback(self) -> Iterator[Bucket]:
         r = self.start_round
@@ -158,7 +173,8 @@ class RoundScheduler:
                 etas.append(self.ctrl.eta_for_round(nxt))
             yield Bucket(rounds=rounds, k=k, etas=etas,
                          shape_rounds=self.bucket_cap,
-                         eval_after=self._is_eval_round(rounds[-1]))
+                         eval_after=self._is_eval_round(rounds[-1]),
+                         serve_after=self._is_serve_round(rounds[-1]))
             r = rounds[-1] + 1
 
     def plan(self) -> Iterator[Bucket]:

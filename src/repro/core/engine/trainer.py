@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.core.engine.backends.base import LINEAR_AGGREGATORS
+from repro.core.engine.model_store import GlobalModelStore
 from repro.core.engine.round import LossFn, RoundEngine
 from repro.core.engine.sampling import make_sampler
 from repro.core.engine.scheduler import Bucket, RoundScheduler
@@ -64,6 +65,12 @@ class History:
     staleness: List[float] = field(default_factory=list)      # per-apply mean
     applied_updates: List[int] = field(default_factory=list)  # cumulative
     dropped_updates: List[int] = field(default_factory=list)  # cumulative
+    # --- serve-while-training (DESIGN.md §14; empty unless a ServingLoop
+    # is attached, missing-field defaults keep older checkpoints loadable) ---
+    serve_rounds: List[int] = field(default_factory=list)     # tick round/apply
+    serve_tokens_per_sec: List[float] = field(default_factory=list)
+    serve_swap_us: List[float] = field(default_factory=list)  # snapshot swap
+    serve_staleness: List[int] = field(default_factory=list)  # versions behind
 
     def as_dict(self) -> Dict[str, list]:
         return dataclasses.asdict(self)
@@ -111,6 +118,11 @@ class FedAvgTrainer:
         (it has been folded into aggregator resolution; the kwarg is a
         one-release shim)."""
         self.loss_fn = loss_fn
+        # the store owns every piece of server-side model state (params,
+        # server-optimizer state, transport EF, downlink ref/residual,
+        # version, cost counters); trainer attributes below are properties
+        # delegating to it (DESIGN.md §14)
+        self.store = GlobalModelStore()
         self.params = init_params
         self.data = data
         self.fed = fed
@@ -158,6 +170,7 @@ class FedAvgTrainer:
                                                        None),
                                   registry=registry,
                                   program_key=program_key)
+        self.engine.bind_store(self.store)
         self.server_state = self.engine.init_server_state(init_params)
         self.engine.init_transport_state(init_params)
         self.engine.init_downlink_state(init_params)
@@ -186,13 +199,34 @@ class FedAvgTrainer:
             self.runtime = rt
         self.history = History()
         self._np_rng = np.random.default_rng(fed.seed)
-        self._wall = 0.0
-        self._steps = 0
-        self._up_mbit = 0.0
-        self._down_mbit = 0.0
-        self._min_loss = float("inf")
-        self._max_acc = 0.0
         self._completed_rounds = 0
+        # serve-while-training: ``api.build`` attaches a ServingLoop +
+        # cadence when the spec asks for one; the trainer itself only
+        # ticks it at bucket boundaries (DESIGN.md §14)
+        self.serving = None
+        self.serve_every = 0
+
+    # ------------------------------------------------------------------
+    # state delegation: the GlobalModelStore owns it, the historical
+    # attribute names keep reading/writing it
+    # ------------------------------------------------------------------
+    params = property(lambda self: self.store.params,
+                      lambda self, v: setattr(self.store, "params", v))
+    server_state = property(
+        lambda self: self.store.server_state,
+        lambda self, v: setattr(self.store, "server_state", v))
+    _wall = property(lambda self: self.store.wall,
+                     lambda self, v: setattr(self.store, "wall", v))
+    _steps = property(lambda self: self.store.steps,
+                      lambda self, v: setattr(self.store, "steps", v))
+    _up_mbit = property(lambda self: self.store.up_mbit,
+                        lambda self, v: setattr(self.store, "up_mbit", v))
+    _down_mbit = property(lambda self: self.store.down_mbit,
+                          lambda self, v: setattr(self.store, "down_mbit", v))
+    _min_loss = property(lambda self: self.store.min_loss,
+                         lambda self, v: setattr(self.store, "min_loss", v))
+    _max_acc = property(lambda self: self.store.max_acc,
+                        lambda self, v: setattr(self.store, "max_acc", v))
 
     # ------------------------------------------------------------------
     @property
@@ -221,7 +255,15 @@ class FedAvgTrainer:
         sched = RoundScheduler(
             self.ctrl, self.fed, total_rounds=rounds,
             eval_every=eval_every if self.eval_fn is not None else None,
+            serve_every=self.serve_every if self.serving is not None
+            else None,
             start_round=start)
+        if (self.serving is not None
+                and self.serving.served_version != self.store.version):
+            # a restored (or warm-rerun) store is ahead of the loop's
+            # construction-time snapshot — re-swap so the first tick's
+            # staleness measures this run, not the gap
+            self.serving.swap()
         # the builder consumes the trainer's persistent rng so repeated
         # run() calls continue one sample stream (seed-loop semantics)
         # buckets are device_put with the backend's client sharding as soon
@@ -260,6 +302,7 @@ class FedAvgTrainer:
         levels = (self.engine.last_downlink_levels
                   if getattr(self.runtime, "downlink_level_ratios", None)
                   is not None else None)
+        self.store.advance(len(bucket))   # params committed for B rounds
         return firsts, levels
 
     def _submit(self, builder, bucket: Bucket) -> None:
@@ -293,6 +336,7 @@ class FedAvgTrainer:
         self.params, firsts, _lasts, self.server_state = \
             self.engine.run_round_chunked(self.params, slabs(),
                                           bucket.etas[0], self.server_state)
+        self.store.advance(1)
         return firsts, None
 
     def _run_pipelined(self, sched: RoundScheduler, builder, rounds: int,
@@ -310,9 +354,13 @@ class FedAvgTrainer:
             if pending is not None:     # sync bucket r-1 while r computes
                 self._absorb(*pending)
                 pending = None
-            if cur.eval_after:
+            if cur.eval_after or cur.serve_after:
+                # serve buckets absorb immediately too: the serve tick in
+                # _absorb must run before the *next* dispatch commits, which
+                # is what bounds served-version staleness at 1 (§14)
                 self._absorb(cur, firsts, levels)
-                self._eval(cur.rounds[-1], verbose)
+                if cur.eval_after:
+                    self._eval(cur.rounds[-1], verbose)
             else:
                 pending = (cur, firsts, levels)
         if pending is not None:
@@ -350,6 +398,7 @@ class FedAvgTrainer:
             self._steps += cost.sgd_steps
             self._up_mbit += cost.uplink_mbit
             self._down_mbit += cost.downlink_mbit
+            self.store.serve_queries += cost.serve_queries
             self._min_loss = min(self._min_loss, round_loss)
             h.rounds.append(r)
             h.k.append(bucket.k)
@@ -360,6 +409,9 @@ class FedAvgTrainer:
             h.downlink_mbit.append(self._down_mbit)
             h.train_loss.append(round_loss)
             h.min_train_loss.append(self._min_loss)
+            if (self.serving is not None and self.serve_every
+                    and r % self.serve_every == 0):
+                self.serving.tick(r, h)
 
     # ------------------------------------------------------------------
     # full-state checkpointing (DESIGN.md §8: transport/EF state included)
@@ -376,10 +428,7 @@ class FedAvgTrainer:
         (``FederatedExperiment.save`` embeds the ExperimentSpec here so a
         checkpoint alone rebuilds the exact trainer)."""
         from repro.checkpoint import save_checkpoint
-        tree = {"params": self.params, "server": self.server_state,
-                "transport": self.engine.transport_state,
-                "downlink": self.engine.downlink_state}
-        ctrl = self.ctrl
+        sd = self.store.state_dict()
         meta = {
             **(extra_meta or {}),
             "completed_rounds": self._completed_rounds,
@@ -388,55 +437,20 @@ class FedAvgTrainer:
             # straggler-model draw stream (heterogeneity > 0 consumes it
             # every round_cost call)
             "runtime_rng": self.runtime._rng.bit_generator.state,
-            "wall": self._wall, "steps": self._steps,
-            "up_mbit": self._up_mbit,
-            "down_mbit": self._down_mbit,
-            "min_loss": self._min_loss, "max_acc": self._max_acc,
-            "ctrl": {"f0": ctrl._f0, "window": list(ctrl.tracker._buf),
-                     "plateau": [ctrl.plateau.best, ctrl.plateau.stale,
-                                 ctrl.plateau.plateaued]},
+            "wall": self._wall,
+            **sd["meta"],
+            "ctrl": self.ctrl.state_dict(),
         }
-        save_checkpoint(path, tree, meta=meta)
+        save_checkpoint(path, sd["tree"], meta=meta)
 
     def restore_state(self, path: str) -> None:
         """Inverse of ``save_state`` on a trainer built with the same
         configuration (templates for every state tree come from the live
         trainer)."""
-        from repro.checkpoint import load_checkpoint
-
-        def spec(tree):
-            return jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(np.shape(x),
-                                               np.asarray(x).dtype), tree)
-
-        like = spec({"params": self.params, "server": self.server_state,
-                     "transport": self.engine.transport_state,
-                     "downlink": self.engine.downlink_state})
-        try:
-            tree, meta = load_checkpoint(path, like)
-        except KeyError:
-            # pre-q8 checkpoint into a ref_store="q8" trainer: the stored
-            # downlink trees are f32 params-shaped, so load against the f32
-            # template and re-quantise into the live store (DESIGN.md
-            # §10.3). The quantised ref then round-trips bitwise from here
-            # on; only this one legacy conversion is lossy (~6e-5).
-            dl = self.engine.downlink
-            if dl is None or dl.ref_store == "f32":
-                raise
-            f32 = jax.tree.map(
-                lambda p: jnp.zeros(np.shape(p), jnp.float32), self.params)
-            like["downlink"] = spec(
-                {"ref": self.params,
-                 "res": f32 if dl.error_feedback else ()})
-            tree, meta = load_checkpoint(path, like)
-            d = tree["downlink"]
-            tree["downlink"] = {"ref": dl.store_tree(d["ref"]),
-                                "res": (dl.store_tree(d["res"])
-                                        if dl.error_feedback else ())}
-        self.params = tree["params"]
-        self.server_state = tree["server"]
-        self.engine.transport_state = tree["transport"]
-        self.engine.downlink_state = tree["downlink"]
+        # the q8 legacy-key fallback (pre-q8 checkpoint into a
+        # ref_store="q8" trainer, DESIGN.md §10.3) lives in the store now
+        tree, meta = self.store.load_checkpoint_tree(path)
+        self.store.restore_tree(tree)
         self._completed_rounds = int(meta["completed_rounds"])
         self.history = History.from_dict(meta["history"])
         h = self.history
@@ -451,20 +465,10 @@ class FedAvgTrainer:
         if "runtime_rng" in meta:
             self.runtime._rng.bit_generator.state = meta["runtime_rng"]
         self._wall = float(meta["wall"])
-        self._steps = int(meta["steps"])
-        self._up_mbit = float(meta.get("up_mbit", 0.0))
-        self._down_mbit = float(meta.get("down_mbit", 0.0))
-        self._min_loss = float(meta["min_loss"])
-        self._max_acc = float(meta["max_acc"])
-        c = meta["ctrl"]
-        self.ctrl.tracker._buf.clear()
-        for v in c["window"]:
-            self.ctrl.tracker.push(v)
-        self.ctrl._f0 = c["f0"]
-        best, stale, plateaued = c["plateau"]
-        self.ctrl.plateau.best = best
-        self.ctrl.plateau.stale = int(stale)
-        self.ctrl.plateau.plateaued = bool(plateaued)
+        # pre-PR-10 meta has no store_version: fall back to the round count
+        self.store.load_counters_meta(
+            meta, default_version=self._completed_rounds)
+        self.ctrl.load_state_dict(meta["ctrl"])
 
     def _eval(self, r: int, verbose: bool) -> None:
         metrics = self.eval_fn(self.params)

@@ -27,13 +27,17 @@ class RoundCost:
     sgd_steps: int
     uplink_mbit: float
     downlink_mbit: float
+    # decode queries the server answered during this round's wall time
+    # (mixed train+serve cost model, DESIGN.md §14); 0.0 without serving
+    serve_queries: float = 0.0
 
 
 class RuntimeModel:
     def __init__(self, model_size_mbit: float, cfg: RuntimeModelConfig,
                  clients_per_round: int = 1, heterogeneity: float = 0.0,
                  seed: int = 0, uplink_compression: float = 1.0,
-                 downlink_compression: float = 1.0):
+                 downlink_compression: float = 1.0,
+                 serve_qps: float = 0.0, serve_query_s: float = 0.0):
         """heterogeneity: sigma of lognormal speed multipliers per sampled
         client, applied to the client's WHOLE round time (compute beta and
         both wire legs — a slow client is slow end to end); 0 reproduces
@@ -56,6 +60,20 @@ class RuntimeModel:
         #: ``round_cost(..., downlink_level=...)``. None -> the fixed
         #: ``downlink_compression`` ratio charges every round.
         self.downlink_level_ratios = None
+        # mixed train+serve cost (DESIGN.md §14): the server spends
+        # rho = qps * query_s of every wall second answering decode
+        # queries, so round coordination runs on the remaining 1 - rho —
+        # the M/G/1-style utilisation stretch 1/(1-rho) on the round clock.
+        self.serve_qps = float(serve_qps)
+        self.serve_query_s = float(serve_query_s)
+        rho = self.serve_qps * self.serve_query_s
+        if rho >= 1.0:
+            raise ValueError(
+                f"serve utilisation rho = serve_qps * serve_query_s = "
+                f"{rho:.3f} >= 1: the server spends every second answering "
+                f"queries and training never progresses — lower serve.qps "
+                f"or serve.query_ms")
+        self._serve_stretch = 1.0 / (1.0 - rho) if rho > 0 else 1.0
         self._seed = int(seed)
         self._rng = np.random.default_rng(seed)
 
@@ -163,10 +181,12 @@ class RuntimeModel:
             wall = float(np.max(times))
         else:
             wall = self._base_seconds(k, downlink_level)
+        wall *= self._serve_stretch
         return RoundCost(wall_clock_s=wall,
                          sgd_steps=k * self.n,
                          uplink_mbit=up * self.n,
-                         downlink_mbit=down * self.n)
+                         downlink_mbit=down * self.n,
+                         serve_queries=self.serve_qps * wall)
 
     def total_time(self, ks: Sequence[int]) -> float:
         """Eq. 5 (homogeneous)."""

@@ -62,6 +62,24 @@ class DecayController:
     def observe_validation(self, val_error: float) -> None:
         self.plateau.push(val_error)
 
+    # ---------------- checkpointing ----------------
+    def state_dict(self) -> dict:
+        """Feedback state under the legacy checkpoint keys (both engines'
+        ``meta["ctrl"]`` payloads delegate here, DESIGN.md §14)."""
+        return {"f0": self._f0, "window": list(self.tracker._buf),
+                "plateau": [self.plateau.best, self.plateau.stale,
+                            self.plateau.plateaued]}
+
+    def load_state_dict(self, c: dict) -> None:
+        self.tracker._buf.clear()
+        for v in c["window"]:
+            self.tracker.push(v)
+        self._f0 = c["f0"]
+        best, stale, plateaued = c["plateau"]
+        self.plateau.best = best
+        self.plateau.stale = int(stale)
+        self.plateau.plateaued = bool(plateaued)
+
     # ---------------- queries ----------------
     def _error_ratio(self) -> float:
         """F_r / F_0 with the Eq. 15 rolling window; 1.0 until warm."""

@@ -1,0 +1,3 @@
+from repro.core.serve.loop import ServingLoop
+
+__all__ = ["ServingLoop"]

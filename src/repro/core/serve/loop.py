@@ -1,0 +1,137 @@
+"""ServingLoop — the global model as a live decode service (DESIGN.md §14).
+
+Serve-while-training: federated personalisation rounds feed a production
+decode path. The loop holds one jitted ``registry.decode_fn`` step (fixed
+cache shapes -> exactly one compile), pulls ``GlobalModelStore.snapshot()``
+— the exact tree clients hold, dequantised on demand by the downlink
+codec's ``load_tree`` bracket — and hot-swaps it under the decode step
+between rounds (sync trainer) or buffer applications (async engine).
+
+Each ``tick`` replays one batch of a *deterministic* synthetic traffic
+stream (prompt ids are a pure function of ``(seed, tick index)``, so a
+resumed run serves the same queries), runs teacher-forced prefill + greedy
+decode through the KV/SSM cache, and records into ``History``:
+
+* ``serve_tokens_per_sec`` — decode throughput of the served model,
+* ``serve_swap_us``        — snapshot + hot-swap latency (the cost of
+  publishing a new version to the service),
+* ``serve_staleness``      — how many store versions the *previously*
+  served model had fallen behind by tick time. The sync trainer absorbs
+  serve buckets immediately and ticks before the next dispatch commits, so
+  this is <= 1; the async engine ticks right after each buffer apply.
+
+Traffic streams are pluggable through ``TRAFFIC_REGISTRY``
+(``register_traffic``); the ``synthetic`` builtin draws uniform prompt ids
+from a counter-seeded rng.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registries import TRAFFIC_REGISTRY, register_traffic
+from repro.core.engine.model_store import GlobalModelStore
+from repro.models import registry
+
+PyTree = Any
+
+
+def _synthetic_traffic(*, cfg, batch: int, prompt_len: int, seed: int = 0,
+                       **kw):
+    """Uniform prompt ids; each tick's batch is a pure function of
+    ``(seed, tick)`` so the stream replays identically across resumes."""
+    def prompts(tick: int) -> np.ndarray:
+        rng = np.random.default_rng([int(seed), int(tick)])
+        return rng.integers(0, cfg.vocab_size,
+                            size=(batch, prompt_len)).astype(np.int32)
+    return prompts
+
+
+register_traffic("synthetic", _synthetic_traffic)
+
+
+class ServingLoop:
+    """Hot-swaps ``store.snapshot()`` under a jitted decode step and
+    replays deterministic traffic against the served version."""
+
+    def __init__(self, store: GlobalModelStore, cfg, *, batch: int = 2,
+                 prompt_len: int = 4, tokens: int = 8,
+                 moe_path: str = "dense", traffic: str = "synthetic",
+                 seed: int = 0):
+        if cfg.arch_type == "audio":
+            raise ValueError(
+                f"arch {cfg.name!r} is an audio encoder-decoder: its decode "
+                f"cache needs per-query audio embeddings, which the "
+                f"synthetic serving loop does not model")
+        self.store = store
+        self.cfg = cfg
+        self.batch = int(batch)
+        self.prompt_len = int(prompt_len)
+        self.tokens = int(tokens)
+        self._step = jax.jit(registry.decode_fn(cfg, moe_path=moe_path))
+        self._traffic = TRAFFIC_REGISTRY.get(traffic)(
+            cfg=cfg, batch=self.batch, prompt_len=self.prompt_len, seed=seed)
+        self.params: PyTree = None
+        self.served_version = -1
+        self.ticks = 0
+        self.total_tokens = 0
+        self.swap()
+
+    # ------------------------------------------------------------------
+    def swap(self) -> float:
+        """Publish the store's current snapshot to the service; returns the
+        swap latency in µs (snapshot + dequantise, materialised)."""
+        t0 = time.perf_counter()
+        version, tree = self.store.snapshot()
+        tree = jax.block_until_ready(tree)
+        us = (time.perf_counter() - t0) * 1e6
+        self.params = tree
+        self.served_version = version
+        return us
+
+    def decode(self, prompt_ids,
+               params: Optional[PyTree] = None) -> Tuple[jax.Array, float]:
+        """One traffic replay: teacher-forced prefill through the decode
+        path, then greedy decode of ``self.tokens`` tokens. Returns the
+        (batch, tokens) generated ids and the timed decode seconds (the
+        prefill warms/loads the executable and is excluded, matching
+        ``examples/serve_decode.py``)."""
+        params = self.params if params is None else params
+        prompt = jnp.asarray(prompt_ids)
+        cache = registry.init_cache(params, self.cfg, prompt.shape[0],
+                                    self.prompt_len + self.tokens)
+        for pos in range(self.prompt_len):
+            logits, cache = self._step(params, cache, prompt[:, pos],
+                                       jnp.int32(pos))
+        tok = jnp.argmax(logits, axis=-1)
+        out = []
+        t0 = time.perf_counter()
+        for i in range(self.tokens):
+            logits, cache = self._step(params, cache, tok,
+                                       jnp.int32(self.prompt_len + i))
+            tok = jnp.argmax(logits, axis=-1)
+            out.append(tok)
+        jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        return jnp.stack(out, axis=1), dt
+
+    def tick(self, round_idx: int, history=None) -> float:
+        """One serving tick at round/apply ``round_idx``: measure how stale
+        the currently served version got, hot-swap the fresh snapshot, and
+        replay one traffic batch against it. Returns tokens/sec."""
+        staleness = self.store.version - self.served_version
+        swap_us = self.swap()
+        _, dt = self.decode(self._traffic(self.ticks))
+        tps = self.batch * self.tokens / max(dt, 1e-9)
+        self.ticks += 1
+        self.total_tokens += self.batch * self.tokens
+        if history is not None:
+            history.serve_rounds.append(int(round_idx))
+            history.serve_tokens_per_sec.append(float(tps))
+            history.serve_swap_us.append(float(swap_us))
+            history.serve_staleness.append(int(staleness))
+        return tps

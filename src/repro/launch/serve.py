@@ -3,6 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b \\
         --batch 4 --prompt-len 16 --tokens 32 [--checkpoint /tmp/ckpt]
 
+Built on the ``GlobalModelStore`` + ``ServingLoop`` serving stack
+(DESIGN.md §14). Trainer checkpoints embed their ``ExperimentSpec``, so the
+model is rebuilt FROM THE SPEC inside the checkpoint — arch, reduced flag
+and init seed are never trusted from flags; an explicitly conflicting
+``--arch`` errors loudly instead of silently decoding through the wrong
+architecture. Legacy bare-params checkpoints (no spec in meta) fall back to
+``--arch``.
+
 CPU runs the reduced config; the mesh-level serve_step (sharded caches,
 head-dim/kv-head sharding rules) is exercised by repro.launch.dryrun for
 the decode_32k / long_500k shapes.
@@ -10,6 +18,8 @@ the decode_32k / long_500k shapes.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -20,52 +30,117 @@ from repro.configs import ARCHS, get_arch
 from repro.models import registry
 
 
-def main():
+def _shapes_like(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+
+
+def load_serving_params(path: str, arch_arg=None, seed: int = 0):
+    """(cfg, params) from a checkpoint directory.
+
+    Spec-embedded checkpoints (everything ``FederatedExperiment.save``
+    writes) rebuild the model from the spec; the stored tree keeps params
+    under the ``params/`` prefix next to server/transport/downlink state.
+    Legacy checkpoints without a spec fall back to ``arch_arg`` and accept
+    either bare-params or prefixed layouts."""
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if "spec" in meta:
+        from repro.api import ExperimentSpec
+        spec = ExperimentSpec.from_dict(meta["spec"])
+        if spec.data.kind != "lm":
+            raise SystemExit(
+                f"[serve] checkpoint {path!r} trained data.kind="
+                f"{spec.data.kind!r} (a paper-task model, not an LM) — "
+                f"there is no decode path to serve it")
+        if arch_arg is not None and arch_arg != spec.model.arch:
+            raise SystemExit(
+                f"[serve] --arch {arch_arg!r} conflicts with the "
+                f"checkpoint's embedded spec (model.arch="
+                f"{spec.model.arch!r}, reduced={spec.model.reduced}); "
+                f"drop --arch — the model is rebuilt from the spec")
+        cfg = get_arch(spec.model.arch)
+        if spec.model.reduced:
+            cfg = cfg.reduced()
+        template = registry.init(jax.random.PRNGKey(spec.fed.seed), cfg)
+        tree, _ = load_checkpoint(path, {"params": _shapes_like(template)})
+        print(f"[serve] rebuilt {spec.model.arch} "
+              f"(reduced={spec.model.reduced}) from the checkpoint's "
+              f"embedded spec, round {meta.get('completed_rounds', '?')}")
+        return cfg, tree["params"]
+    # legacy bare-params checkpoint: the arch must come from the flag
+    cfg = get_arch(arch_arg or "zamba2-7b").reduced()
+    like = _shapes_like(registry.init(jax.random.PRNGKey(seed), cfg))
+    try:
+        params, _ = load_checkpoint(path, like)
+    except KeyError:
+        # trainer layout without a spec: params under the "params/" prefix
+        params = load_checkpoint(path, {"params": like})[0]["params"]
+    print(f"[serve] restored legacy checkpoint (no embedded spec; "
+          f"arch {cfg.name} taken from --arch)")
+    return cfg, params
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="zamba2-7b")
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None,
+                    help="architecture (default zamba2-7b; ignored — and "
+                         "checked for conflicts — when --checkpoint embeds "
+                         "a spec)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    cfg = get_arch(args.arch).reduced()
-    rng = jax.random.PRNGKey(args.seed)
-    params = registry.init(rng, cfg)
     if args.checkpoint:
-        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                            params)
-        params, meta = load_checkpoint(args.checkpoint, like)
-        print(f"[serve] restored checkpoint ({meta})")
+        cfg, params = load_serving_params(args.checkpoint, args.arch,
+                                          seed=args.seed)
+    else:
+        cfg = get_arch(args.arch or "zamba2-7b").reduced()
+        params = registry.init(jax.random.PRNGKey(args.seed), cfg)
 
     B = args.batch
-    max_seq = args.prompt_len + args.tokens
     if cfg.arch_type == "audio":
+        # the ServingLoop's synthetic traffic has no audio embeddings —
+        # keep the direct decode path for encoder-decoder archs
+        rng = jax.random.PRNGKey(args.seed)
+        max_seq = args.prompt_len + args.tokens
         audio = jax.random.normal(rng, (B, cfg.encoder_seq, cfg.d_model)) * 0.1
-        cache = registry.init_cache(params, cfg, B, max_seq, audio_embeds=audio)
-    else:
-        cache = registry.init_cache(params, cfg, B, max_seq)
-    step = jax.jit(registry.decode_fn(cfg, moe_path="dense"))
-
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, args.prompt_len),
-                                0, cfg.vocab_size)
-    for pos in range(args.prompt_len):
-        logits, cache = step(params, cache, prompt[:, pos], jnp.int32(pos))
-
-    tok = jnp.argmax(logits, axis=-1)
-    t0 = time.perf_counter()
-    generated = []
-    for i in range(args.tokens):
-        logits, cache = step(params, cache, tok,
-                             jnp.int32(args.prompt_len + i))
+        cache = registry.init_cache(params, cfg, B, max_seq,
+                                    audio_embeds=audio)
+        step = jax.jit(registry.decode_fn(cfg, moe_path="dense"))
+        prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                    (B, args.prompt_len), 0, cfg.vocab_size)
+        for pos in range(args.prompt_len):
+            logits, cache = step(params, cache, prompt[:, pos],
+                                 jnp.int32(pos))
         tok = jnp.argmax(logits, axis=-1)
-        generated.append(tok)
-    jax.block_until_ready(logits)
-    dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        generated = []
+        for i in range(args.tokens):
+            logits, cache = step(params, cache, tok,
+                                 jnp.int32(args.prompt_len + i))
+            tok = jnp.argmax(logits, axis=-1)
+            generated.append(tok)
+        jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        ids = jnp.stack(generated, 1)
+    else:
+        from repro.core.engine.model_store import GlobalModelStore
+        from repro.core.serve import ServingLoop
+        store = GlobalModelStore(params=params)
+        loop = ServingLoop(store, cfg, batch=B, prompt_len=args.prompt_len,
+                           tokens=args.tokens, seed=args.seed)
+        swap_us = loop.swap()
+        ids, dt = loop.decode(loop._traffic(0))
+        print(f"[serve] store snapshot v{loop.served_version} hot-swapped "
+              f"in {swap_us:.0f}us")
+
     print(f"[serve] {cfg.name} ({cfg.arch_type}): batch={B}, "
           f"{args.tokens} tokens/seq, {B * args.tokens / dt:.1f} tok/s (CPU)")
-    print(f"[serve] ids[0] = {jnp.stack(generated, 1)[0].tolist()}")
+    print(f"[serve] ids[0] = {ids[0].tolist()}")
 
 
 if __name__ == "__main__":

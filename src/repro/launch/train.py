@@ -118,6 +118,15 @@ def make_parser() -> argparse.ArgumentParser:
                     help="bucket length for error/step schedules")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the background batch prefetch thread")
+    ap.add_argument("--serve-every", type=int, default=None,
+                    help="serve-while-training: hot-swap the global model "
+                         "into a live decode service and tick it every N "
+                         "rounds / buffer applies (DESIGN.md §14; also "
+                         "applies on top of --spec)")
+    ap.add_argument("--serve-qps", type=float, default=None,
+                    help="modelled decode queries/sec the server answers "
+                         "alongside training (stretches the round clock by "
+                         "1/(1-rho); also applies on top of --spec)")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     return ap
@@ -179,6 +188,10 @@ def resolve_spec(args) -> ExperimentSpec:
         spec = spec_from_legacy_args(args)
     if args.overrides:
         spec = spec.with_overrides(*args.overrides)
+    if args.serve_every is not None:
+        spec = spec.with_overrides(f"serve.every={args.serve_every}")
+    if args.serve_qps is not None:
+        spec = spec.with_overrides(f"serve.qps={args.serve_qps}")
     return spec
 
 
@@ -241,6 +254,13 @@ def main(argv=None):
         print(f"[train] round {h.rounds[i]:4d} K={h.k[i]:3d} "
               f"eta={h.eta[i]:.4f} loss={h.train_loss[i]:.4f} "
               f"simW={h.wall_clock_s[i]:.0f}s steps={h.sgd_steps[i]}")
+    if spec.serve.every and h.serve_rounds:
+        print(f"[train] serve: {len(h.serve_rounds)} tick(s), "
+              f"{float(np.mean(h.serve_tokens_per_sec)):.0f} tok/s mean, "
+              f"swap {float(np.mean(h.serve_swap_us)):.0f}us mean, "
+              f"staleness <= {max(h.serve_staleness)}, "
+              f"served version {trainer.serving.served_version} of "
+              f"{trainer.store.version}")
     print(f"[train] final loss {h.train_loss[-1]:.4f} "
           f"(start {h.train_loss[0]:.4f}); total steps {h.sgd_steps[-1]}, "
           f"simulated wall-clock {h.wall_clock_s[-1]:.0f}s, "

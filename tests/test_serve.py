@@ -1,0 +1,314 @@
+"""Serve-while-training (DESIGN.md §14): GlobalModelStore snapshot
+contract across the downlink/ref-store matrix and both backends, serving
+read-only program identity, legacy-checkpoint restore, the live serving
+loop, scheduler serve cuts, and the spec/launcher refusal surface."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build
+from repro.api.experiment import FederatedExperiment
+from repro.api.spec import SpecValidationError
+from repro.configs.base import FedConfig, RuntimeModelConfig
+from repro.core import RuntimeModel
+from repro.core.engine.model_store import GlobalModelStore
+from repro.core.engine.round import ExecutableRegistry
+from repro.core.engine.scheduler import RoundScheduler
+from repro.core.schedules import DecayController
+
+PAPER = ("data.kind=paper", "data.task=femnist", "data.clients=16",
+         "data.samples_per_client=16", "fed.clients_per_round=6",
+         "fed.rounds=4", "fed.k0=3", "fed.batch_size=8",
+         "fed.k_schedule=rounds", "fed.bucket_rounds=2", "fed.eval_every=0")
+
+LM = ("model.arch=qwen1.5-0.5b", "model.reduced=true", "data.kind=lm",
+      "data.clients=8", "data.samples_per_client=8", "data.seq_len=16",
+      "fed.rounds=3", "fed.clients_per_round=4", "fed.k0=2",
+      "fed.batch_size=4", "fed.k_schedule=rounds", "fed.bucket_rounds=2",
+      "runtime.beta_seconds=0.05")
+
+
+def paper_spec(*extra):
+    return ExperimentSpec().with_overrides(*PAPER, *extra)
+
+
+def lm_spec(*extra):
+    return ExperimentSpec().with_overrides(*LM, *extra)
+
+
+def assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+# ---------------------------------------------------------------------------
+# snapshot contract: the exact tree clients hold, across the store bracket
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["local", "mesh"])
+@pytest.mark.parametrize("downlink,ref_store", [
+    ("none", "f32"), ("int8", "f32"), ("int8", "q8"),
+    ("adaptive", "f32"), ("adaptive", "q8")])
+def test_snapshot_matches_client_tree(backend, downlink, ref_store):
+    """snapshot() returns (version, client-view tree): the raw params when
+    there is no downlink codec, else the dequantised broadcast reference —
+    bitwise, repeatably, and without mutating any server state."""
+    exp = build(paper_spec(f"backend.name={backend}",
+                           "transport.name=int8",
+                           f"transport.downlink={downlink}",
+                           f"transport.ref_store={ref_store}"))
+    exp.run()
+    tr = exp.trainer
+    store = tr.store
+    assert store.version == 4                    # one bump per round
+    v, tree = store.snapshot()
+    assert v == store.version
+
+    if downlink == "none":
+        assert_trees_bitwise(tree, tr.params)
+    else:
+        state = tr.engine.downlink_state
+        ref_before = [np.array(x, copy=True)
+                      for x in jax.tree.leaves(state["ref"])]
+        dl = tr.engine.downlink
+        assert_trees_bitwise(tree, dl.load_tree(state["ref"],
+                                                like=tr.params))
+        if ref_store == "f32":
+            # identity ref store: the snapshot IS the stored reference
+            assert_trees_bitwise(tree, state["ref"])
+        # snapshot is read-only: stored reference untouched, and a second
+        # snapshot reproduces the first bitwise
+        for a, b in zip(ref_before, jax.tree.leaves(state["ref"])):
+            assert (a == np.asarray(b)).all()
+    v2, tree2 = store.snapshot()
+    assert v2 == v
+    assert_trees_bitwise(tree2, tree)
+
+
+def test_async_snapshot_mid_buffer():
+    """Async engine: snapshot mid-simulation (part-filled buffer, pending
+    events) returns the applied params bitwise with version == number of
+    buffer applications."""
+    exp = build(paper_spec("fed.rounds=8", "fed.aggregation=async",
+                           "fed.buffer_size=3", "fed.staleness_weight=inv",
+                           "runtime.heterogeneity=0.7"))
+    exp.trainer.run(5)
+    tr = exp.trainer
+    assert tr._buf_count != 0 or tr._heap        # genuinely mid-buffer
+    v, tree = tr.store.snapshot()
+    assert v == tr.store.version == tr._version
+    assert_trees_bitwise(tree, tr.params)
+
+
+# ---------------------------------------------------------------------------
+# store extraction is invisible to programs and checkpoints
+# ---------------------------------------------------------------------------
+
+def test_serving_read_only_program_identity():
+    """Attaching the serving loop (downlink='none', sync aggregation) must
+    not touch the traced programs: AOT executable keys bit-for-bit, params
+    bitwise, train history equal to the serve-off run. serve_every cuts the
+    bucket plan (that IS the staleness bound), so the comparison pins
+    bucket_rounds=1 to hold the plan fixed on both sides."""
+    from repro.api.sweep import spec_program_key
+    off = lm_spec("fed.bucket_rounds=1")
+    on = lm_spec("fed.bucket_rounds=1", "serve.every=1")
+    assert spec_program_key(off) == spec_program_key(on)
+
+    reg_off, reg_on = ExecutableRegistry(), ExecutableRegistry()
+    h_off = build(off, registry=reg_off).run()
+    exp_on = build(on, registry=reg_on)
+    h_on = exp_on.run()
+
+    assert set(reg_off._entries) == set(reg_on._entries)
+    assert h_on.train_loss == h_off.train_loss
+    assert h_on.sgd_steps == h_off.sgd_steps
+    assert h_on.uplink_mbit == h_off.uplink_mbit
+    # ... and the serving side actually served
+    assert h_on.serve_rounds == [1, 2, 3]
+    assert all(t > 0 for t in h_on.serve_tokens_per_sec)
+    assert max(h_on.serve_staleness) <= 1        # absorb-before-tick bound
+    assert exp_on.trainer.serving.served_version == \
+        exp_on.trainer.store.version
+
+
+@pytest.mark.parametrize("aggregation", ["sync", "async"])
+def test_legacy_checkpoint_restores_bitwise(tmp_path, aggregation):
+    """A pre-store checkpoint (no store_version / serve_queries meta keys)
+    restores through GlobalModelStore.state_dict's legacy fallback and
+    continues bitwise."""
+    extra = (("transport.name=int8", "transport.downlink=int8",
+              "transport.ref_store=q8") if aggregation == "sync" else
+             ("fed.aggregation=async", "fed.buffer_size=3",
+              "runtime.heterogeneity=0.7", "fed.rounds=8"))
+    spec = paper_spec(*extra)
+    rounds = spec.fed.rounds
+    ref = build(spec)
+    href = ref.run()
+
+    a = build(spec)
+    a.trainer.run(rounds // 2)
+    ck = os.path.join(tmp_path, "ck")
+    a.save(ck)
+    meta_path = os.path.join(ck, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    assert "store_version" in meta               # written by the store
+    for k in ("store_version", "serve_queries"):
+        meta.pop(k, None)                        # back to the pre-store format
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+
+    b = FederatedExperiment.restore(ck)
+    hb = b.trainer.run(rounds, resume=True)
+    assert hb.train_loss == href.train_loss      # bitwise, not approx
+    assert hb.wall_clock_s == href.wall_clock_s
+    assert hb.uplink_mbit == href.uplink_mbit
+    assert_trees_bitwise(b.trainer.params, ref.trainer.params)
+    # version fallback: completed rounds (sync) / applied updates (async)
+    assert b.trainer.store.version > 0
+
+
+def test_checkpoint_roundtrip_keeps_store_counters(tmp_path):
+    spec = paper_spec("transport.name=int8", "transport.downlink=int8")
+    a = build(spec)
+    a.run()
+    ck = os.path.join(tmp_path, "ck")
+    a.save(ck)
+    b = FederatedExperiment.restore(ck)
+    for attr in ("version", "wall", "steps", "up_mbit", "down_mbit",
+                 "min_loss", "max_acc", "serve_queries"):
+        assert getattr(b.trainer.store, attr) == \
+            getattr(a.trainer.store, attr)
+    assert_trees_bitwise(b.trainer.params, a.trainer.params)
+    assert_trees_bitwise(b.trainer.engine.downlink_state["ref"],
+                         a.trainer.engine.downlink_state["ref"])
+
+
+# ---------------------------------------------------------------------------
+# scheduler serve cuts
+# ---------------------------------------------------------------------------
+
+def test_scheduler_serve_cuts_and_flags():
+    fed = FedConfig(total_clients=8, clients_per_round=4, rounds=8, k0=4,
+                    eta0=0.1, batch_size=4, k_schedule="fixed",
+                    bucket_rounds=8, seed=0)
+    plan = list(RoundScheduler(DecayController(fed), fed, total_rounds=8,
+                               serve_every=2).plan())
+    # cap = min(bucket_rounds, serve_every): every bucket ends on a serve
+    # round and is flagged for immediate absorb + hot-swap
+    assert [b.rounds for b in plan] == [[1, 2], [3, 4], [5, 6], [7, 8]]
+    assert all(b.serve_after for b in plan)
+    # serve off: identical plan shape to the historical scheduler, no flags
+    plan_off = list(RoundScheduler(DecayController(fed), fed,
+                                   total_rounds=8).plan())
+    assert [b.rounds for b in plan_off] == [[1, 2, 3, 4, 5, 6, 7, 8]]
+    assert not any(b.serve_after for b in plan_off)
+    # serve_every=3 over 8 rounds: cuts at 3 and 6 only
+    plan3 = list(RoundScheduler(DecayController(fed), fed, total_rounds=8,
+                                serve_every=3).plan())
+    assert [b.serve_after for b in plan3] == \
+        [b.rounds[-1] % 3 == 0 for b in plan3]
+
+
+# ---------------------------------------------------------------------------
+# runtime model: mixed train+serve cost
+# ---------------------------------------------------------------------------
+
+def test_runtime_model_serve_stretch():
+    kw = dict(model_size_mbit=40.0, cfg=RuntimeModelConfig(beta_seconds=0.5),
+              clients_per_round=4)
+    base = RuntimeModel(**kw).round_cost(8)
+    served = RuntimeModel(**kw, serve_qps=100.0,
+                          serve_query_s=0.002).round_cost(8)
+    rho = 100.0 * 0.002
+    assert served.wall_clock_s == pytest.approx(
+        base.wall_clock_s / (1.0 - rho))
+    assert served.serve_queries == pytest.approx(
+        100.0 * served.wall_clock_s)
+    assert base.serve_queries == 0.0
+    with pytest.raises(ValueError, match="rho"):
+        RuntimeModel(**kw, serve_qps=500.0, serve_query_s=0.002)
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_validation_errors():
+    def errs(*ov):
+        with pytest.raises(SpecValidationError) as ei:
+            ExperimentSpec().with_overrides(*LM, *ov).validate()
+        return "\n".join(ei.value.errors)
+
+    assert "serve.every" in errs("serve.every=-1")
+    assert "serve.qps" in errs("serve.qps=1.0")          # qps without loop
+    assert "rho" in errs("serve.every=1", "serve.qps=600.0",
+                         "serve.query_ms=2.0")
+    assert "serve.traffic" in errs("serve.every=1", "serve.traffic=nope")
+    assert "serve.batch" in errs("serve.every=1", "serve.batch=0")
+    with pytest.raises(SpecValidationError, match="data.kind"):
+        paper_spec("serve.every=1").validate()
+    # the defaults and a valid serving config pass
+    lm_spec().validate()
+    lm_spec("serve.every=2", "serve.qps=50.0",
+            "serve.query_ms=2.0").validate()
+
+
+def test_traffic_registry_synthetic_deterministic():
+    from repro.api.registries import TRAFFIC_REGISTRY
+    assert "synthetic" in TRAFFIC_REGISTRY
+
+    class Cfg:
+        vocab_size = 97
+    t = TRAFFIC_REGISTRY.get("synthetic")(cfg=Cfg(), batch=3, prompt_len=5,
+                                          seed=11)
+    a, b = t(4), t(4)
+    assert a.shape == (3, 5) and a.dtype == np.int32
+    assert (a == b).all()                        # pure in (seed, tick)
+    assert not (t(5) == a).all()
+    t2 = TRAFFIC_REGISTRY.get("synthetic")(cfg=Cfg(), batch=3, prompt_len=5,
+                                           seed=12)
+    assert not (t2(4) == a).all()
+
+
+# ---------------------------------------------------------------------------
+# the serve launcher: spec-embedded checkpoints, arch conflicts
+# ---------------------------------------------------------------------------
+
+def test_serve_launcher_rebuilds_from_embedded_spec(tmp_path, capsys):
+    from repro.launch import serve as serve_launcher
+    spec = lm_spec("serve.every=1")
+    exp = build(spec)
+    exp.run()
+    ck = os.path.join(tmp_path, "ck")
+    exp.save(ck)
+
+    serve_launcher.main(["--checkpoint", ck, "--batch", "2",
+                         "--prompt-len", "4", "--tokens", "4"])
+    out = capsys.readouterr().out
+    assert "rebuilt qwen1.5-0.5b" in out
+    assert "tok/s" in out
+
+    with pytest.raises(SystemExit, match="conflicts with the"):
+        serve_launcher.main(["--checkpoint", ck, "--arch", "zamba2-7b"])
+
+    # the served params are the checkpoint's params, not a fresh init
+    cfg, params = serve_launcher.load_serving_params(ck)
+    assert_trees_bitwise(params, exp.trainer.params)
+    assert cfg.name == "qwen1.5-0.5b-reduced"
+
+
+def test_store_standalone_snapshot():
+    params = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    store = GlobalModelStore(params=params)
+    v, tree = store.snapshot()
+    assert v == 0
+    assert_trees_bitwise(tree, params)
+    store.advance(3)
+    assert store.snapshot()[0] == 3
